@@ -1,0 +1,46 @@
+"""Beyond-paper: quantized-checkpoint mode (Check-N-Run-class) measured
+through the full FastPersist write path — S_C shrinks ~3.5×, so Eq. 1's
+required bandwidth shrinks by the same factor."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_dir, cleanup, emit
+from repro.core.checkpointer import FastPersistCheckpointer, \
+    FastPersistConfig
+from repro.core.partition import Topology
+
+
+def run(quick=True):
+    mb = 128 if quick else 512
+    n = mb * 2**20 // 14
+    k = jax.random.PRNGKey(0)
+    state = {"p": jax.random.normal(k, (n,), jnp.bfloat16),
+             "mw": jax.random.normal(k, (n,), jnp.float32),
+             "m": jax.random.normal(k, (n,), jnp.float32) * 1e-3,
+             "v": jnp.abs(jax.random.normal(k, (n,), jnp.float32)) * 1e-6}
+    jax.block_until_ready(state["p"])
+    out = {}
+    for quantize in (False, True):
+        d = os.path.join(bench_dir(), f"bq_{quantize}")
+        fp = FastPersistCheckpointer(d, FastPersistConfig(
+            strategy="replica", topology=Topology(dp_degree=2),
+            quantize=quantize))
+        stats = fp.save(state, 0)
+        out[quantize] = stats
+        shutil.rmtree(d, ignore_errors=True)
+        tag = "int8" if quantize else "full"
+        emit(f"beyond/quant_{tag}", stats.seconds,
+             f"{stats.total_bytes/2**20:.0f}MB_{stats.gbps:.2f}GBps")
+    ratio = out[False].total_bytes / out[True].total_bytes
+    speed = out[False].seconds / out[True].seconds
+    emit("beyond/quant_reduction", out[True].seconds,
+         f"{ratio:.1f}x_smaller_{speed:.1f}x_faster_ckpt")
+    return out
+
+
+if __name__ == "__main__":
+    run()
+    cleanup()

@@ -1,0 +1,68 @@
+"""Shared benchmark utilities. Every benchmark prints CSV rows
+``name,us_per_call,derived`` (derived = the paper-figure quantity)."""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.serializer import ByteStreamView
+from repro.core.writer import WriterConfig, write_stream
+
+BENCH_DIR = os.environ.get("FASTPERSIST_BENCH_DIR",
+                           os.path.join(os.getcwd(), ".bench_tmp"))
+
+
+def bench_dir():
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    return BENCH_DIR
+
+
+def cleanup():
+    shutil.rmtree(BENCH_DIR, ignore_errors=True)
+
+
+def synth_bytes(mb: float, seed=0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 255, size=int(mb * 2**20), dtype=np.uint8)
+
+
+def drop_file(path):
+    try:
+        os.remove(path)
+    except OSError:
+        pass
+
+
+def measure_peak_write_gbps(mb: int = 256) -> float:
+    """This machine's peak sequential write bandwidth (the '24.8 GB/s'
+    analogue): one big aligned direct write."""
+    data = synth_bytes(mb)
+    view = ByteStreamView([data])
+    path = os.path.join(bench_dir(), "peak.bin")
+    best = 0.0
+    for _ in range(3):
+        stats = write_stream(path, view.slices(0, view.total), view.total,
+                             WriterConfig(io_buffer_size=64 * 2**20,
+                                          double_buffer=True))
+        best = max(best, stats.gbps)
+        drop_file(path)
+    return best
+
+
+def emit(name: str, seconds: float, derived: str):
+    print(f"{name},{seconds*1e6:.1f},{derived}")
+
+
+def timeit(fn, warmup=1, iters=3):
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

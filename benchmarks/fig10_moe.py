@@ -1,0 +1,68 @@
+"""Paper Fig. 10: sparse (MoE) checkpointing — gpt3-1.8B-MoE, EP=16.
+Sparse models checkpoint ~4x the bytes of their dense compute twin, so
+FastPersist's win is larger at equal DP (paper §5.5)."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_dir, cleanup, emit
+from repro.configs import PAPER_TABLE2, get_paper_config
+from repro.core.baseline import BaselineCheckpointer
+from repro.core.checkpointer import FastPersistCheckpointer, \
+    FastPersistConfig
+from repro.core.overlap import (V100_FP16_FLOPS, effective_overhead,
+                                estimate_iteration)
+from repro.core.partition import Topology, predict_write_seconds, \
+    select_writers
+
+SCALE = 64
+
+
+def synth_state(nbytes: int):
+    n = max(nbytes // 14, 1)
+    k = jax.random.PRNGKey(1)
+    return {"p": jax.random.normal(k, (n,), jnp.bfloat16),
+            "mw": jax.random.normal(k, (n,), jnp.float32),
+            "m": jnp.zeros((n,), jnp.float32),
+            "v": jnp.ones((n,), jnp.float32)}
+
+
+def run(quick=True):
+    cfg = get_paper_config("gpt3_1_8b_moe")
+    meta = PAPER_TABLE2["gpt3_1_8b_moe"]
+    ck_bytes = meta["ckpt_gb"] * 10**9
+    out = {}
+    for dp in ([1, 4, 8] if quick else [1, 2, 4, 8]):
+        state = synth_state(ck_bytes // SCALE // max(8 // dp, 1))
+        jax.block_until_ready(state["p"])
+        d = os.path.join(bench_dir(), f"f10_{dp}")
+        bl = BaselineCheckpointer(os.path.join(d, "bl"))
+        sb = bl.save(state, 0)
+        fp = FastPersistCheckpointer(
+            os.path.join(d, "fp"),
+            FastPersistConfig(strategy="replica",
+                              topology=Topology(dp_degree=min(dp * 2, 8),
+                                                ranks_per_node=8)))
+        sf = fp.save(state, 0)
+        shutil.rmtree(d, ignore_errors=True)
+        emit(f"fig10a/moe_dp{dp}_ckpt_speedup", sf.seconds,
+             f"{sb.seconds/sf.seconds:.1f}x")
+
+        it = estimate_iteration(cfg, meta["gbs"], 2048, 16 * dp,
+                                peak_flops=V100_FP16_FLOPS, mfu=0.35)
+        topo = Topology(dp_degree=dp, ranks_per_node=1)   # EP=16: 1 node/replica
+        t_fp = predict_write_seconds(
+            topo, ck_bytes, select_writers(topo, "replica"))
+        t_bl = ck_bytes / 4e9            # paper: baseline ~4 GB/s
+        e2e = (1 + effective_overhead(it, t_bl, False)) / \
+            (1 + effective_overhead(it, t_fp, True))
+        out[dp] = e2e
+        emit(f"fig10b/moe_dp{dp}_e2e", it.total, f"{e2e:.1f}x_model")
+    return out
+
+
+if __name__ == "__main__":
+    run()
+    cleanup()

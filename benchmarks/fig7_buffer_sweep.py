@@ -1,0 +1,59 @@
+"""Paper Fig. 7/13/14: single-rank FastPersist vs baseline across IO
+buffer sizes (2–128 MB), single vs double buffering, 16 MB and 512 MB
+checkpoints. Reports speedup over the baseline writer."""
+import os
+import time
+
+from benchmarks.common import (bench_dir, cleanup, drop_file, emit,
+                               synth_bytes)
+from repro.core.serializer import ByteStreamView
+from repro.core.writer import WriterConfig, write_stream
+
+
+def baseline_write(path, data) -> float:
+    t0 = time.perf_counter()
+    with open(path, "wb", buffering=64 * 1024) as f:
+        # torch.save-style: many small buffered writes
+        mv = memoryview(data)
+        for off in range(0, len(data), 64 * 1024):
+            f.write(mv[off:off + 64 * 1024])
+        f.flush()
+        os.fsync(f.fileno())
+    return time.perf_counter() - t0
+
+
+def run(quick=True):
+    results = {}
+    ckpt_sizes = [16, 512] if not quick else [16, 128]
+    buf_sizes = [2, 8, 32, 128] if quick else [2, 4, 8, 16, 32, 64, 128]
+    for ck_mb in ckpt_sizes:
+        data = synth_bytes(ck_mb, seed=ck_mb)
+        view = ByteStreamView([data])
+        bpath = os.path.join(bench_dir(), "f7_base.bin")
+        tb = min(baseline_write(bpath, data) for _ in range(3))
+        drop_file(bpath)
+        base_gbps = len(data) / tb / 1e9
+        emit(f"fig7/base_{ck_mb}MB", tb, f"{base_gbps:.2f}GBps")
+        for double in (False, True):
+            mode = "double" if double else "single"
+            for buf_mb in buf_sizes:
+                cfg = WriterConfig(io_buffer_size=buf_mb * 2**20,
+                                   double_buffer=double)
+                path = os.path.join(bench_dir(), "f7.bin")
+                ts = []
+                for _ in range(3):
+                    stats = write_stream(path, view.slices(0, view.total),
+                                         view.total, cfg)
+                    ts.append(stats.seconds)
+                    drop_file(path)
+                t = min(ts)
+                sp = tb / t
+                results[(ck_mb, mode, buf_mb)] = sp
+                emit(f"fig7/{mode}_{ck_mb}MB_buf{buf_mb}MB", t,
+                     f"{sp:.2f}x_vs_baseline")
+    return results
+
+
+if __name__ == "__main__":
+    run()
+    cleanup()

@@ -1,0 +1,68 @@
+"""Paper Fig. 8/15: parallel checkpoint writes — aggregate bandwidth vs
+writer parallelism, Replica vs Socket subsets. One node's SSD here, so
+the contention (not the scaling) side of the figure is what this machine
+can measure; the multi-node scaling side is covered by the §4.2 analytic
+model (validated in tests/test_partition.py)."""
+import os
+
+from benchmarks.common import bench_dir, cleanup, emit, synth_bytes
+from repro.core.checkpointer import FastPersistCheckpointer, \
+    FastPersistConfig
+from repro.core.partition import Topology, make_plan, \
+    predict_write_seconds, select_writers
+from repro.core.serializer import ByteStreamView
+from repro.core.writer import WriterConfig, write_stream
+from concurrent.futures import ThreadPoolExecutor
+import shutil
+import time
+
+
+def parallel_write(view, n_writers, directory) -> float:
+    plan = make_plan(view.total, Topology(dp_degree=n_writers,
+                                          ranks_per_node=max(n_writers, 1)),
+                     "replica")
+    cfg = WriterConfig(io_buffer_size=32 * 2**20)
+
+    def one(extent):
+        return write_stream(
+            os.path.join(directory, f"s{extent.shard_index}.bin"),
+            view.slices(extent.offset, extent.length), extent.length, cfg)
+
+    t0 = time.perf_counter()
+    if n_writers == 1:
+        one(plan.extents[0])
+    else:
+        with ThreadPoolExecutor(n_writers) as ex:
+            list(ex.map(one, plan.extents))
+    return time.perf_counter() - t0
+
+
+def run(quick=True):
+    mb = 256 if quick else 1024
+    data = synth_bytes(mb, seed=8)
+    view = ByteStreamView([data])
+    out = {}
+    for w in ([1, 2, 4, 8] if quick else [1, 2, 4, 8, 16]):
+        d = os.path.join(bench_dir(), f"f8_{w}")
+        os.makedirs(d, exist_ok=True)
+        t = min(parallel_write(view, w, d) for _ in range(2))
+        shutil.rmtree(d, ignore_errors=True)
+        gbps = view.total / t / 1e9
+        out[w] = gbps
+        emit(f"fig8/writers{w}", t, f"{gbps:.2f}GBps")
+
+    # analytic multi-node projection (the paper's 8-node side)
+    ck = 10 * 10**9
+    for nodes in (1, 2, 4, 8):
+        topo = Topology(dp_degree=16 * nodes, ranks_per_node=16)
+        for strat, wpn in (("replica", 0), ("socket", 2)):
+            ws = select_writers(topo, strat, wpn)
+            t = predict_write_seconds(topo, ck, ws)
+            emit(f"fig8/model_{nodes}node_{strat}", t,
+                 f"{ck/t/1e9:.1f}GBps_model")
+    return out
+
+
+if __name__ == "__main__":
+    run()
+    cleanup()

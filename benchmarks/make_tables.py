@@ -1,0 +1,104 @@
+"""Render the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
+experiments/dryrun/*.json. Usage:
+
+    PYTHONPATH=src python -m benchmarks.make_tables > experiments/roofline.md
+"""
+import glob
+import json
+import os
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def fmt(x, digits=3):
+    if x == 0:
+        return "0"
+    if x < 1e-3 or x >= 1e4:
+        return f"{x:.2e}"
+    return f"{x:.{digits}g}"
+
+
+def main():
+    rows = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+
+    skips = [r for r in rows if r.get("skipped")]
+    ok = [r for r in rows if not r.get("skipped") and "error" not in r]
+
+    print("### Dry-run matrix\n")
+    print(f"{len(ok)} (arch × shape × mesh) pairs lowered + compiled, "
+          f"{len(skips)} documented shape-skips (see DESIGN.md).\n")
+    print("| arch | shape | mesh | kind | compile s | HLO GFLOP/dev | "
+          "HLO GB/dev | coll GB/dev | temp GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        mem = r.get("memory", {}) or {}
+        temp = mem.get("temp_size_bytes") or 0
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} | "
+              f"{r['compile_s']} | {fmt(r['hlo_flops_per_device']/1e9)} | "
+              f"{fmt(r['hlo_bytes_per_device']/1e9)} | "
+              f"{fmt(r['collective_total_per_device']/1e9)} | "
+              f"{fmt(temp/1e9)} |")
+
+    print("\n### Roofline (single-pod 16×16, 256 chips; "
+          "197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI per chip)\n")
+    print("| arch | shape | compute s | memory s | collective s | "
+          "dominant | useful-FLOP ratio | what would move the dominant term |")
+    print("|---|---|---|---|---|---|---|---|")
+    NOTES = {
+        ("moe", "train"): "router-group count ↑ / sorted dispatch via "
+                          "shard_map all-to-all (see §Perf)",
+        ("moe", "prefill"): "dispatch-copy traffic is intrinsic to top-k; "
+                            "bf16 dispatch + larger G",
+        ("moe", "decode"): "expert weights dominate reads: fewer active "
+                           "layers/device via expert-offload",
+        ("dense", "train"): "flash-attention kernel keeps scores in VMEM "
+                            "(bytes proxy counts materialized scores)",
+        ("dense", "prefill"): "blocked attention (Pallas flash_attention) "
+                              "— scores never hit HBM",
+        ("dense", "decode"): "KV-cache reads are the floor; GQA/MLA or "
+                             "window caches shrink them",
+        ("ssm", "train"): "ssd_scan kernel fuses intra-chunk term in VMEM",
+        ("ssm", "prefill"): "same; inter-chunk scan is latency-bound",
+        ("ssm", "decode"): "state read/write is the floor (O(1) in seq)",
+        ("hybrid", "decode"): "ring caches for the shared-attn blocks",
+        ("vlm", "train"): "as dense + prefix tokens",
+        ("encdec", "train"): "cross-attn K/V precompute reuse",
+    }
+    for r in sorted([x for x in ok if x["mesh"] == "16x16"],
+                    key=lambda r: (r["arch"], r["shape"])):
+        arch_type = _arch_type(r["arch"])
+        note = NOTES.get((arch_type, r["kind"]),
+                         "see §Perf methodology")
+        print(f"| {r['arch']} | {r['shape']} | {fmt(r['t_compute_s'])} | "
+              f"{fmt(r['t_memory_s'])} | {fmt(r['t_collective_s'])} | "
+              f"{r['dominant']} | {fmt(r.get('useful_flops_ratio', 0))} | "
+              f"{note} |")
+
+    print("\n### Multi-pod check (2×16×16 = 512 chips)\n")
+    print("| arch | shape | compile s | coll GB/dev vs pod | "
+          "per-dev FLOPs vs pod |")
+    print("|---|---|---|---|---|")
+    pod = {(r["arch"], r["shape"]): r for r in ok if r["mesh"] == "16x16"}
+    for r in sorted([x for x in ok if x["mesh"] == "2x16x16"],
+                    key=lambda r: (r["arch"], r["shape"])):
+        p = pod.get((r["arch"], r["shape"]))
+        if not p:
+            continue
+        cr = (r["collective_total_per_device"]
+              / max(p["collective_total_per_device"], 1))
+        fr = (r["hlo_flops_per_device"]
+              / max(p["hlo_flops_per_device"], 1))
+        print(f"| {r['arch']} | {r['shape']} | {r['compile_s']} | "
+              f"{cr:.2f}x | {fr:.2f}x |")
+
+
+def _arch_type(arch):
+    from repro.configs import get_config
+    return get_config(arch).arch_type
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json and prints, per (arch × shape × mesh):
+compute/memory/collective terms (s), dominant bottleneck, and
+MODEL_FLOPS/HLO_FLOPs. Also ranks the hillclimb candidates."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_all():
+    rows = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("skipped") or "error" in r:
+            continue
+        rows.append(r)
+    return rows
+
+
+def run(quick=True):
+    rows = load_all()
+    if not rows:
+        print("roofline/no_dryrun_artifacts,0.0,run_dryrun_first")
+        return {}
+    out = {}
+    for r in rows:
+        key = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        tc, tm, tl = (r["t_compute_s"], r["t_memory_s"],
+                      r["t_collective_s"])
+        dom = r["dominant"]
+        ratio = r.get("useful_flops_ratio", 0.0)
+        out[key] = (tc, tm, tl, dom, ratio)
+        emit(f"roofline/{key}", max(tc, tm, tl),
+             f"c{tc:.3g}s_m{tm:.3g}s_x{tl:.3g}s_dom:{dom}_useful{ratio:.2f}")
+
+    pod = [r for r in rows if r["mesh"] == "16x16"]
+    if pod:
+        worst = min(pod, key=lambda r: r.get("useful_flops_ratio", 1))
+        collb = max(pod, key=lambda r: r["t_collective_s"]
+                    / max(r["t_compute_s"] + r["t_memory_s"], 1e-12))
+        emit("roofline/hillclimb_worst_useful", 0.0,
+             f"{worst['arch']}/{worst['shape']}")
+        emit("roofline/hillclimb_most_collective", 0.0,
+             f"{collb['arch']}/{collb['shape']}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

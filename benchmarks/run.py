@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV. FASTPERSIST_BENCH_FULL=1 runs
+the full (slower) sizes."""
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    quick = os.environ.get("FASTPERSIST_BENCH_FULL", "0") != "1"
+    from benchmarks import (beyond_quant, fig2_baseline_util,
+                            fig7_buffer_sweep, fig8_parallel_writes,
+                            fig9_dense_models, fig10_moe, fig11_pipelining,
+                            fig12_projection, perf_writer, roofline,
+                            table1_bandwidth)
+    from benchmarks.common import cleanup
+
+    modules = [
+        ("fig2", fig2_baseline_util),
+        ("fig7", fig7_buffer_sweep),
+        ("fig8", fig8_parallel_writes),
+        ("fig9", fig9_dense_models),
+        ("fig10", fig10_moe),
+        ("fig11", fig11_pipelining),
+        ("table1", table1_bandwidth),
+        ("fig12", fig12_projection),
+        ("perf_writer", perf_writer),
+        ("beyond_quant", beyond_quant),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in modules:
+        try:
+            mod.run(quick=quick)
+        except Exception as e:
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name}/FAILED,0.0,{e!r}")
+    cleanup()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Table 1 + Eq. 1/Eq. 2: required overlap bandwidth B_C for each
+GPT-3 config at max DP, and recovery-cost analysis."""
+from benchmarks.common import emit
+from repro.configs import PAPER_TABLE2, get_paper_config
+from repro.core.overlap import (V100_FP16_FLOPS, estimate_iteration,
+                                recovery_overhead_gpu_seconds,
+                                required_bandwidth)
+
+# (model, max DP, nodes) from paper Table 1
+ROWS = [("gpt3_0_7b", 256, 16), ("gpt3_1_3b", 512, 64),
+        ("gpt3_2_7b", 512, 128), ("gpt3_6_7b", 1024, 512),
+        ("gpt3_13b", 1024, 1024)]
+
+
+def run(quick=True):
+    out = {}
+    for key, dp, nodes in ROWS:
+        cfg = get_paper_config(key)
+        gbs = PAPER_TABLE2[key]["gbs"]
+        n_gpus = dp * PAPER_TABLE2[key]["mp"]
+        it = estimate_iteration(cfg, gbs, 2048, n_gpus,
+                                peak_flops=V100_FP16_FLOPS, mfu=0.4)
+        bc = required_bandwidth(cfg.checkpoint_bytes(), it)
+        avail = nodes * 24.8e9
+        out[key] = bc
+        emit(f"table1/{key}_Bc", it.fb,
+             f"{bc/1e9:.0f}GBps_avail{avail/1e9:.0f}GBps_"
+             f"{'OK' if bc < avail else 'INSUFFICIENT'}")
+
+        # Eq. 2 recovery: n=100 vs n=1 checkpoint interval
+        for n in (100, 1):
+            r = recovery_overhead_gpu_seconds(n, n_gpus, it.total)
+            emit(f"eq2/{key}_interval{n}", it.total,
+                 f"{r/3600:.1f}GPUh_lost_per_failure")
+    return out
+
+
+if __name__ == "__main__":
+    run()

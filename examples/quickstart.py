@@ -1,0 +1,42 @@
+"""Quickstart: train a reduced model with per-iteration FastPersist
+checkpointing, interrupt, restore, continue.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.core.checkpointer import FastPersistConfig
+from repro.core.partition import Topology
+from repro.train.trainer import CheckpointPolicy, Trainer, TrainerConfig
+
+
+def main():
+    cfg = reduced(get_config("stablelm_1_6b"))
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainerConfig(
+            model=cfg, steps=10, global_batch=4, seq_len=64, log_every=2,
+            checkpoint=CheckpointPolicy(
+                directory=d, every=1, mode="fastpersist", pipeline=True,
+                fp=FastPersistConfig(
+                    strategy="replica",
+                    topology=Topology(dp_degree=4, ranks_per_node=2))))
+
+        print("=== training 6 steps with per-iteration checkpointing ===")
+        t = Trainer(TrainerConfig(**{**tc.__dict__, "steps": 6}))
+        t.run()
+        print(f"checkpoint stall total: {t.ckpt_stall*1e3:.1f} ms")
+
+        print("=== 'interruption' → restore → continue to step 10 ===")
+        t2 = Trainer(tc)
+        start = t2.restore()
+        print(f"restored at step {start} "
+              f"(data position {t2.data.position})")
+        state, metrics = t2.run(start_step=start)
+        print(f"final loss {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

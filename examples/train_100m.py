@@ -1,0 +1,66 @@
+"""End-to-end driver: train a ~100M-parameter GPT-3-small-class model for
+a few hundred steps with FastPersist checkpointing every iteration
+(paper's target workload, scaled to this machine).
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 200]
+"""
+import argparse
+import os
+import shutil
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.checkpointer import FastPersistConfig
+from repro.core.partition import Topology
+from repro.optim.adam import AdamConfig
+from repro.train.trainer import CheckpointPolicy, Trainer, TrainerConfig
+
+# ~100M params: 12L × 768 (GPT-3 Small geometry, gated MLP off)
+GPT3_SMALL = ModelConfig(
+    name="gpt3-small-100m", arch_type="dense", n_layers=12, d_model=768,
+    n_heads=12, n_kv_heads=12, d_ff=3072, vocab_size=50257,
+    gated_mlp=False, tie_embeddings=True,
+    source="arXiv:2005.14165")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--dir", default="/tmp/fastpersist_100m")
+    args = ap.parse_args()
+    shutil.rmtree(args.dir, ignore_errors=True)
+
+    print(f"params: {GPT3_SMALL.param_count()/1e6:.0f}M  "
+          f"checkpoint: {GPT3_SMALL.checkpoint_bytes()/1e9:.2f} GB")
+
+    tr = Trainer(TrainerConfig(
+        model=GPT3_SMALL, steps=args.steps, global_batch=args.batch,
+        seq_len=args.seq, opt=AdamConfig(lr=6e-4, warmup_steps=50),
+        log_every=20,
+        checkpoint=CheckpointPolicy(
+            directory=args.dir, every=1, mode="fastpersist", pipeline=True,
+            fp=FastPersistConfig(
+                strategy="auto",
+                topology=Topology(dp_degree=8, ranks_per_node=4)))))
+    state, metrics = tr.run()
+    it = np.asarray(tr.iter_times[5:])
+    print(f"\nfinal loss {float(metrics['loss']):.4f}")
+    print(f"iter time p50 {np.percentile(it, 50)*1e3:.0f} ms  "
+          f"ckpt stall total {tr.ckpt_stall*1e3:.0f} ms "
+          f"({100*tr.ckpt_stall/max(it.sum(), 1e-9):.1f}% of train time)")
+    # Eq. 1 check for THIS host: B_C needed vs what the disk delivers.
+    from repro.core.overlap import IterationModel, required_bandwidth
+    fb = float(np.percentile(it, 50)) * 0.9
+    bc = required_bandwidth(GPT3_SMALL.checkpoint_bytes(),
+                            IterationModel(fb / 3, 2 * fb / 3, fb * 0.1))
+    print(f"Eq.1: hiding a {GPT3_SMALL.checkpoint_bytes()/1e9:.1f} GB "
+          f"ckpt behind {fb*1e3:.0f} ms of compute needs "
+          f"{bc/1e9:.1f} GB/s — a single laptop-class disk (~0.6 GB/s) "
+          f"stalls; the paper's 8-SSD nodes (24.8 GB/s) do not.")
+
+
+if __name__ == "__main__":
+    main()

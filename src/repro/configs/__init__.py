@@ -1,0 +1,24 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    ShapeConfig,
+    all_configs,
+    get_config,
+    reduced,
+)
+from repro.configs.gpt3_family import (
+    GPT3_CONFIGS,
+    GPT3_MOE_1_8B,
+    PAPER_TABLE2,
+    get_paper_config,
+)
+
+__all__ = [
+    "ARCH_IDS", "INPUT_SHAPES", "MLAConfig", "MoEConfig", "ModelConfig",
+    "SSMConfig", "ShapeConfig", "all_configs", "get_config", "reduced",
+    "GPT3_CONFIGS", "GPT3_MOE_1_8B", "PAPER_TABLE2", "get_paper_config",
+]

@@ -1,0 +1,14 @@
+from repro.core.baseline import BaselineCheckpointer, BaselineStats
+from repro.core.checkpointer import (FastPersistCheckpointer,
+                                     FastPersistConfig, SaveStats)
+from repro.core.overlap import (IterationModel, checkpoint_seconds,
+                                effective_overhead, estimate_iteration,
+                                recovery_overhead_gpu_seconds,
+                                required_bandwidth)
+from repro.core.partition import (Extent, Topology, WritePlan, make_plan,
+                                  predict_write_seconds, select_writers)
+from repro.core.pipeline import PipelinedCheckpointer, PipelineStats
+from repro.core.serializer import (ByteStreamView, Manifest, TensorRecord,
+                                   deserialize, serialize)
+from repro.core.writer import WriteStats, WriterConfig, aligned_buffer, \
+    write_stream

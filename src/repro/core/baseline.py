@@ -1,0 +1,75 @@
+"""Baseline checkpointing — the paper's comparison point (§3.1).
+
+Emulates ``torch.save()``: rank 0 alone serializes every tensor and
+writes through ordinary buffered file I/O (small interleaved metadata +
+data writes, no alignment, no async overlap, no parallelism). All other
+DP ranks stall (paper Fig. 4a).
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import pickle
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.serializer import Manifest, deserialize, serialize
+
+
+@dataclass
+class BaselineStats:
+    bytes_written: int
+    seconds: float
+
+    @property
+    def gbps(self):
+        return self.bytes_written / max(self.seconds, 1e-12) / 1e9
+
+
+class BaselineCheckpointer:
+    """torch.save()-style: pickle header per tensor + buffered writes."""
+
+    def __init__(self, directory: str, buffer_size: int = 64 * 1024):
+        self.directory = directory
+        self.buffer_size = buffer_size
+        os.makedirs(directory, exist_ok=True)
+
+    def path(self, step: int) -> str:
+        return os.path.join(self.directory, f"ckpt_{step:08d}.pt")
+
+    def save(self, state, step: int) -> BaselineStats:
+        manifest, buffers = serialize(state)
+        t0 = time.perf_counter()
+        total = 0
+        with open(self.path(step), "wb", buffering=self.buffer_size) as f:
+            header = manifest.to_json().encode()
+            f.write(len(header).to_bytes(8, "little"))
+            f.write(header)
+            total += 8 + len(header)
+            for rec, buf in zip(manifest.records, buffers):
+                # per-tensor pickled metadata then raw data — mimics
+                # torch.save's interleaved small writes
+                meta = pickle.dumps((rec.name, rec.dtype, rec.shape))
+                f.write(len(meta).to_bytes(4, "little"))
+                f.write(meta)
+                f.write(memoryview(buf).cast("B"))
+                total += 4 + len(meta) + buf.nbytes
+            f.flush()
+            os.fsync(f.fileno())
+        return BaselineStats(total, time.perf_counter() - t0)
+
+    def load(self, step: int, like=None):
+        with open(self.path(step), "rb") as f:
+            hlen = int.from_bytes(f.read(8), "little")
+            manifest = Manifest.from_json(f.read(hlen).decode())
+            stream = bytearray(manifest.total_bytes)
+            pos = 0
+            for rec in manifest.records:
+                mlen = int.from_bytes(f.read(4), "little")
+                pickle.loads(f.read(mlen))
+                stream[pos:pos + rec.nbytes] = f.read(rec.nbytes)
+                pos += rec.nbytes
+        return deserialize(manifest, stream, like=like), manifest

@@ -1,0 +1,80 @@
+"""Analytic overlap / recovery models (paper Eq. 1, Eq. 2, Table 1).
+
+Eq. 1:  B_C(M) >= S_C(M) / (T_F(M) + T_B(M))
+        minimum write bandwidth that hides checkpoint latency behind the
+        next iteration's forward+backward.
+
+Eq. 2:  n/2 * m * t
+        expected GPU-seconds lost per interruption when checkpointing
+        every n iterations on m GPUs with iteration time t.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+from repro.core.partition import Topology, predict_write_seconds, \
+    select_writers
+
+V100_FP16_FLOPS = 125e12     # paper hardware: V100 tensor-core peak
+TPU_V5E_BF16_FLOPS = 197e12  # target hardware
+
+
+@dataclass(frozen=True)
+class IterationModel:
+    """Compute-time model for one data-parallel training iteration."""
+    t_forward: float
+    t_backward: float
+    t_optimizer: float
+
+    @property
+    def fb(self):
+        return self.t_forward + self.t_backward
+
+    @property
+    def total(self):
+        return self.t_forward + self.t_backward + self.t_optimizer
+
+
+def estimate_iteration(cfg: ModelConfig, global_batch: int, seq_len: int,
+                       n_accel: int, peak_flops: float = TPU_V5E_BF16_FLOPS,
+                       mfu: float = 0.45, gas: int = 1) -> IterationModel:
+    """Napkin model: fwd = 2·N_active·D, bwd = 2× fwd, optimizer ~5% —
+    matches the paper's '>90% of compute is fwd+bwd' observation."""
+    tokens = global_batch * seq_len * gas
+    flops_fwd = 2 * cfg.active_param_count() * tokens
+    t_fwd = flops_fwd / (n_accel * peak_flops * mfu)
+    t_bwd = 2 * t_fwd
+    return IterationModel(t_fwd, t_bwd, 0.05 * (t_fwd + t_bwd))
+
+
+def required_bandwidth(ckpt_bytes: int, it: IterationModel) -> float:
+    """Eq. 1: bytes/sec needed to fully hide the checkpoint write."""
+    return ckpt_bytes / it.fb
+
+
+def checkpoint_seconds(ckpt_bytes: int, topo: Topology,
+                       strategy: str = "auto",
+                       writers_per_node: int = 2) -> float:
+    writers = select_writers(topo, strategy, writers_per_node, ckpt_bytes)
+    return predict_write_seconds(topo, ckpt_bytes, writers)
+
+
+def recovery_overhead_gpu_seconds(n_interval: int, m_gpus: int,
+                                  t_iter: float) -> float:
+    """Eq. 2: expected GPU-seconds of recomputation per interruption."""
+    return n_interval / 2 * m_gpus * t_iter
+
+
+def effective_overhead(it: IterationModel, ckpt_seconds: float,
+                       pipelined: bool) -> float:
+    """Per-iteration slowdown fraction due to checkpointing every step.
+
+    Pipelined: the write overlaps fwd+bwd of the next iteration; only the
+    excess beyond the overlap window stalls the next optimizer step.
+    Unpipelined: the full write sits on the critical path."""
+    if pipelined:
+        stall = max(0.0, ckpt_seconds - it.fb)
+    else:
+        stall = ckpt_seconds
+    return stall / it.total

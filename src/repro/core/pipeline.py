@@ -1,0 +1,103 @@
+"""Pipelined checkpointing (paper §4.3).
+
+A dedicated helper worker persists checkpoint i while the main thread
+runs forward/backward of iteration i+1; the main thread blocks only
+before the NEXT optimizer step until the previous checkpoint commits
+(Fig. 4d). Protocol (verbatim from §4.3):
+
+  helper:  loop { block until woken; write tensors; signal completion }
+  main:    before optimizer: wait for previous commit
+           after  optimizer: send new checkpoint request
+
+JAX note (DESIGN.md §2): jax arrays are immutable, so the snapshot the
+helper holds can never be corrupted by the next optimizer step — UNLESS
+the train step donates its argument buffers (donate_argnums), in which
+case XLA reuses them in place exactly like the paper's in-place CUDA
+optimizer. The block-before-optimizer synchronization is therefore load-
+bearing here too whenever donation is on.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+
+@dataclass
+class PipelineStats:
+    submitted: int = 0
+    committed: int = 0
+    stall_seconds: float = 0.0       # main-thread time blocked in wait()
+    write_seconds: float = 0.0       # helper time actually persisting
+    save_stats: List[Any] = field(default_factory=list)
+
+
+class PipelinedCheckpointer:
+    """Wraps any checkpointer with a save(state, step, extras=None) method."""
+
+    def __init__(self, inner, max_outstanding: int = 1):
+        self.inner = inner
+        self._q = queue.Queue()
+        self._outstanding = 0
+        self._lock = threading.Condition()
+        self._err: Optional[BaseException] = None
+        self.stats = PipelineStats()
+        self._stop = False
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+        self.max_outstanding = max_outstanding
+
+    # ----------------------------------------------------------- helper
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            state, step, extras = item
+            t0 = time.perf_counter()
+            try:
+                s = self.inner.save(state, step, extras) \
+                    if extras is not None else self.inner.save(state, step)
+                self.stats.save_stats.append(s)
+            except BaseException as e:       # surfaced on next wait()
+                self._err = e
+            self.stats.write_seconds += time.perf_counter() - t0
+            with self._lock:
+                self._outstanding -= 1
+                self.stats.committed += 1
+                self._lock.notify_all()
+
+    # ------------------------------------------------------ main thread
+    def wait(self):
+        """Block until every submitted checkpoint is committed to disk.
+        Called BEFORE the optimizer step (the §4.3 sync point)."""
+        t0 = time.perf_counter()
+        with self._lock:
+            while self._outstanding > 0:
+                self._lock.wait()
+        self.stats.stall_seconds += time.perf_counter() - t0
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def submit(self, state, step: int, extras: Optional[dict] = None):
+        """Enqueue checkpoint creation. Called AFTER the optimizer step."""
+        with self._lock:
+            while self._outstanding >= self.max_outstanding:
+                self._lock.wait()
+            self._outstanding += 1
+        self.stats.submitted += 1
+        self._q.put((state, step, extras))
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._t.join()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

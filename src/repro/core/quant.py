@@ -1,0 +1,101 @@
+"""Quantized checkpointing (beyond-paper extension).
+
+Check-N-Run [NSDI'22] shrinks checkpoints via quantization; the paper
+contrasts FastPersist as lossless. We provide BOTH: an optional int8
+per-block quantization pass over the serialized stream (the on-device
+half of this transform is the ``ckpt_pack`` Pallas kernel's amax output).
+Typical S_C reduction ≈ 2.8× for the 14 B/param mixed-precision state
+(optimizer moments tolerate quantization; use for non-primary replicas
+or high-frequency "safety" checkpoints, keep every Nth full-precision).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.serializer import Manifest, TensorRecord
+
+BLOCK = 4096
+_QUANT_SUFFIX = "#q8"
+_SCALE_SUFFIX = "#scale"
+_QUANTIZABLE = ("float32", "bfloat16", "float16")
+
+
+def _blockwise(arr: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    flat = arr.astype(np.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = np.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    amax = np.abs(blocks).max(axis=1)
+    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.round(blocks / scale[:, None]), -127, 127).astype(np.int8)
+    return q.reshape(-1)[:arr.size], scale
+
+
+def _deblock(q: np.ndarray, scale: np.ndarray, dtype: str) -> np.ndarray:
+    flat = q.astype(np.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = np.pad(flat, (0, pad))
+    out = (flat.reshape(-1, BLOCK) * scale[:, None]).reshape(-1)[:q.size]
+    if dtype == "bfloat16":
+        import ml_dtypes
+        return out.astype(ml_dtypes.bfloat16)
+    return out.astype(np.dtype(dtype))
+
+
+def quantize_stream(manifest: Manifest, buffers: List[np.ndarray]
+                    ) -> Tuple[Manifest, List[np.ndarray]]:
+    """Rewrite (manifest, buffers) with int8+scale record pairs for every
+    quantizable tensor. Small/int tensors pass through unchanged."""
+    records, out = [], []
+    offset = 0
+
+    def push(name, arr, dtype, shape):
+        nonlocal offset
+        records.append(TensorRecord(name, dtype, tuple(shape), offset,
+                                    arr.nbytes))
+        out.append(arr)
+        offset += arr.nbytes
+
+    for rec, buf in zip(manifest.records, buffers):
+        if rec.dtype in _QUANTIZABLE and buf.size >= BLOCK:
+            view = buf.view(np.uint16) if rec.dtype == "bfloat16" and \
+                buf.dtype == np.uint16 else buf
+            if rec.dtype == "bfloat16":
+                import ml_dtypes
+                values = buf.view(ml_dtypes.bfloat16) \
+                    if buf.dtype == np.uint16 else buf
+            else:
+                values = buf
+            q, scale = _blockwise(np.asarray(values, np.float32))
+            push(rec.name + _QUANT_SUFFIX, q, f"int8|{rec.dtype}",
+                 rec.shape)
+            push(rec.name + _SCALE_SUFFIX, scale, "float32", scale.shape)
+        else:
+            push(rec.name, buf, rec.dtype, rec.shape)
+    m = Manifest(records, offset, dict(manifest.extras), manifest.treedef)
+    m.extras["quantized"] = True
+    return m, out
+
+
+def dequantize_named(named: dict, manifest: Manifest) -> dict:
+    """{name: array} from deserialize() -> original-dtype tensors."""
+    dtypes = {r.name: r.dtype for r in manifest.records}
+    shapes = {r.name: r.shape for r in manifest.records}
+    out = {}
+    for name, arr in named.items():
+        if name.endswith(_SCALE_SUFFIX):
+            continue
+        if name.endswith(_QUANT_SUFFIX):
+            base = name[:-len(_QUANT_SUFFIX)]
+            orig = dtypes[name].split("|")[1]
+            scale = named[base + _SCALE_SUFFIX]
+            out[base] = _deblock(np.asarray(arr).reshape(-1),
+                                 np.asarray(scale),
+                                 orig).reshape(shapes[name])
+        else:
+            out[name] = arr
+    return out

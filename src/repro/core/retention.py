@@ -1,0 +1,72 @@
+"""Checkpoint retention policy + garbage collection.
+
+Per-iteration checkpointing (the paper's headline capability) writes one
+checkpoint per step — untenable to KEEP them all (S_C × steps). The
+production policy: retain a rolling window of the most recent k, plus
+every Nth as a permanent milestone; deletion runs on the helper thread so
+it never blocks training (same decoupling argument as §4.3).
+
+Crash safety: a checkpoint directory is only eligible for deletion if a
+NEWER one is fully committed (manifest present), so an interruption
+mid-GC always leaves a loadable checkpoint.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from dataclasses import dataclass
+from typing import List, Optional
+
+
+@dataclass(frozen=True)
+class RetentionPolicy:
+    keep_last: int = 2            # rolling window of most recent ckpts
+    keep_every: int = 0           # every Nth step is permanent (0 = none)
+
+
+def _committed_steps(directory: str) -> List[int]:
+    steps = []
+    for name in os.listdir(directory):
+        if not name.startswith("ckpt_"):
+            continue
+        d = os.path.join(directory, name)
+        if os.path.exists(os.path.join(d, "manifest.json")):
+            steps.append(int(name.split("_")[1]))
+    return sorted(steps)
+
+
+def collectable(directory: str, policy: RetentionPolicy) -> List[int]:
+    """Steps whose checkpoints may be deleted under ``policy``."""
+    steps = _committed_steps(directory)
+    if not steps:
+        return []
+    keep = set(steps[-max(policy.keep_last, 1):])
+    if policy.keep_every:
+        keep |= {s for s in steps if s % policy.keep_every == 0}
+    return [s for s in steps if s not in keep]
+
+
+def collect(directory: str, policy: RetentionPolicy) -> List[int]:
+    """Delete collectable checkpoints. Returns the deleted steps."""
+    victims = collectable(directory, policy)
+    for s in victims:
+        shutil.rmtree(os.path.join(directory, f"ckpt_{s:08d}"),
+                      ignore_errors=True)
+    return victims
+
+
+class RetentionManager:
+    """Runs GC off the critical path after each commit."""
+
+    def __init__(self, directory: str, policy: RetentionPolicy):
+        self.directory = directory
+        self.policy = policy
+        self._lock = threading.Lock()
+        self.deleted: List[int] = []
+
+    def after_commit(self):
+        """Call after a checkpoint commits (e.g. from the pipeline helper
+        or the trainer loop). Thread-safe, idempotent."""
+        with self._lock:
+            self.deleted += collect(self.directory, self.policy)

@@ -1,0 +1,156 @@
+"""Checkpoint-state serialization (paper §2.1.3).
+
+A checkpoint state is a pytree of arrays plus JSON-able extras (step, rng,
+data-iterator state, LR schedule). Serialization produces:
+
+  * an ordered sequence of per-tensor byte segments (the "sequence of
+    writes of serialized tensors" the paper describes), and
+  * a manifest (tensor metadata: path, dtype, shape, offset, nbytes)
+    providing portability and simple loading.
+
+``ByteStreamView`` exposes the concatenated stream for BYTE-GRANULARITY
+partitioning (§4.2): a writer's extent may begin/end mid-tensor; the view
+yields zero-copy memoryview slices in stream order.
+"""
+from __future__ import annotations
+
+import json
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+_DTYPE_NAMES = {"bfloat16": "bfloat16"}  # jax-only dtype passthrough
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+@dataclass(frozen=True)
+class TensorRecord:
+    name: str
+    dtype: str
+    shape: Tuple[int, ...]
+    offset: int           # byte offset in the checkpoint stream
+    nbytes: int
+
+
+@dataclass
+class Manifest:
+    records: List[TensorRecord]
+    total_bytes: int
+    extras: dict = field(default_factory=dict)
+    treedef: Optional[str] = None     # printable treedef for debugging
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "records": [vars(r) for r in self.records],
+            "total_bytes": self.total_bytes,
+            "extras": self.extras,
+            "treedef": self.treedef,
+        })
+
+    @classmethod
+    def from_json(cls, s: str) -> "Manifest":
+        d = json.loads(s)
+        recs = [TensorRecord(r["name"], r["dtype"], tuple(r["shape"]),
+                             r["offset"], r["nbytes"])
+                for r in d["records"]]
+        return cls(recs, d["total_bytes"], d.get("extras", {}),
+                   d.get("treedef"))
+
+
+def _to_numpy(leaf) -> np.ndarray:
+    """Device→host transfer ('read GPU tensors into pinned CPU memory',
+    §4.3). bf16 is bit-cast to uint16 for a portable byte layout."""
+    arr = np.asarray(leaf) if not hasattr(leaf, "addressable_data") \
+        else np.asarray(leaf)
+    if arr.dtype == np.dtype("V2") or str(arr.dtype) == "bfloat16":
+        arr = arr.view(np.uint16)
+    return np.ascontiguousarray(arr)
+
+
+def serialize(state) -> Tuple[Manifest, List[np.ndarray]]:
+    """Flatten a checkpoint state into (manifest, ordered host buffers)."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(state)
+    records, buffers = [], []
+    offset = 0
+    for path, leaf in leaves:
+        name = _path_str(path)
+        orig_dtype = str(leaf.dtype) if hasattr(leaf, "dtype") else "float32"
+        arr = _to_numpy(leaf)
+        rec = TensorRecord(name, orig_dtype, tuple(np.shape(leaf)),
+                           offset, arr.nbytes)
+        records.append(rec)
+        buffers.append(arr)
+        offset += arr.nbytes
+    return Manifest(records, offset, treedef=str(treedef)), buffers
+
+
+def deserialize(manifest: Manifest, data: bytes | bytearray | memoryview,
+                like=None):
+    """Rebuild arrays from the checkpoint stream. If ``like`` (a pytree of
+    the same structure) is given, returns that structure; otherwise a flat
+    {name: array} dict."""
+    out = {}
+    mv = memoryview(data)
+    for rec in manifest.records:
+        raw = mv[rec.offset:rec.offset + rec.nbytes]
+        dtype = rec.dtype.split("|")[0]   # "int8|<orig>" for quantized
+        if dtype == "bfloat16":
+            import ml_dtypes
+            arr = np.frombuffer(raw, np.uint16).view(ml_dtypes.bfloat16)
+        else:
+            arr = np.frombuffer(raw, np.dtype(dtype))
+        out[rec.name] = arr.reshape(rec.shape) if rec.name.find("#") < 0 \
+            or arr.size == int(np.prod(rec.shape)) else arr
+    if like is not None:
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+        new_leaves = [out[_path_str(p)] for p, _ in leaves]
+        return jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return out
+
+
+class ByteStreamView:
+    """Zero-copy view of the ordered tensor buffers as one byte stream."""
+
+    def __init__(self, buffers: Sequence[np.ndarray]):
+        self._views = [memoryview(b).cast("B") for b in buffers]
+        self._offsets = np.cumsum([0] + [v.nbytes for v in self._views])
+        self.total = int(self._offsets[-1])
+
+    def slices(self, start: int, length: int) -> Iterator[memoryview]:
+        """Yield memoryview chunks covering [start, start+length)."""
+        assert 0 <= start and start + length <= self.total
+        end = start + length
+        i = int(np.searchsorted(self._offsets, start, "right")) - 1
+        while start < end and i < len(self._views):
+            v = self._views[i]
+            base = int(self._offsets[i])
+            lo = start - base
+            hi = min(end - base, v.nbytes)
+            if hi > lo:
+                yield v[lo:hi]
+            start = base + hi
+            i += 1
+
+    def read(self, start: int, length: int) -> bytes:
+        return b"".join(bytes(s) for s in self.slices(start, length))
+
+    def crc32(self, start: int = 0, length: Optional[int] = None) -> int:
+        length = self.total - start if length is None else length
+        c = 0
+        for s in self.slices(start, length):
+            c = zlib.crc32(s, c)
+        return c

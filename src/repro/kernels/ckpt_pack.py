@@ -1,0 +1,47 @@
+"""ckpt_pack — fused checkpoint-serialization kernel (TPU Pallas).
+
+The paper's serialization step (§2.1.3) flattens/casts every tensor into
+the byte stream the writers consume. On TPU we fuse, per VMEM-sized
+block: (i) cast to the checkpoint dtype (bf16), (ii) optional scale, and
+(iii) a per-block abs-max reduction — used downstream for integrity
+checks and for the Check-N-Run-style quantized-checkpoint extension.
+One HBM read, one HBM write, no intermediate f32 copy.
+
+Layout: input is flattened and padded to (n_blocks, BLOCK) with BLOCK a
+multiple of the 8×128 VREG tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 8 * 1024            # 8192 floats = 64 (8,128) vregs
+
+
+def _kernel(x_ref, y_ref, amax_ref, *, out_dtype, scale):
+    x = x_ref[...].astype(jnp.float32) * scale
+    y_ref[...] = x.astype(out_dtype)
+    amax_ref[0, 0] = jnp.max(jnp.abs(x))
+
+
+def ckpt_pack_blocks(x2d, *, out_dtype=jnp.bfloat16, scale=1.0,
+                     interpret=False):
+    """x2d (n_blocks, BLOCK) -> (packed (n_blocks, BLOCK) out_dtype,
+    amax (n_blocks,) f32)."""
+    n_blocks, block = x2d.shape
+    kernel = functools.partial(_kernel, out_dtype=out_dtype,
+                               scale=float(scale))
+    packed, amax = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n_blocks, block), out_dtype),
+                   jax.ShapeDtypeStruct((n_blocks, 1), jnp.float32)],
+        interpret=interpret,
+    )(x2d)
+    return packed, amax[:, 0]

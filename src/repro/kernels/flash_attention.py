@@ -1,0 +1,113 @@
+"""Blocked flash attention (TPU Pallas): online softmax with running
+(max, sum, acc) scratch carried across KV-block grid steps.
+
+Supports causal masking, sliding windows (gemma2 local layers), logit
+soft-capping, and GQA (KV-head block index derived from the Q-head grid
+index). VMEM per step: Bq·hd + 2·Bk·hd + Bq·Bk scores — sized for 128-
+aligned MXU tiles.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, cap, block_q, block_k, kv_len):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (Bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (Bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (Bk, hd)
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    mask = kpos < kv_len
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                 # (Bq, 1)
+    m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, cap=None,
+                    block_q=128, block_k=128, interpret=False):
+    """q (B, H, Lq, hd); k, v (B, KV, Lk, hd) -> (B, H, Lq, hd).
+
+    Lq/Lk are padded to block multiples internally; KV positions ≥ Lk are
+    masked out.
+    """
+    B, H, Lq, hd = q.shape
+    KV, Lk = k.shape[1], k.shape[2]
+    rep = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    pq = (-Lq) % block_q
+    pk = (-Lk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = (Lq + pq) // block_q
+    nk = (Lk + pk) // block_k
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, cap=cap,
+        block_q=block_q, block_k=block_k, kv_len=Lk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik, rep=rep: (b, h // rep, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik, rep=rep: (b, h // rep, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Lq + pq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Lq]

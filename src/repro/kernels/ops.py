@@ -1,0 +1,49 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU
+they compile to Mosaic. ``INTERPRET`` flips automatically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ckpt_pack as _cp
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "block", "scale"))
+def ckpt_pack(x, *, out_dtype=jnp.bfloat16, scale=1.0,
+              block=_cp.DEFAULT_BLOCK):
+    """Flatten+cast+amax any-shape tensor into checkpoint blocks.
+
+    Returns (packed flat array of x.size elements, per-block amax)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    x2d = flat.reshape(-1, block)
+    packed, amax = _cp.ckpt_pack_blocks(x2d, out_dtype=out_dtype,
+                                        scale=scale, interpret=INTERPRET)
+    return packed.reshape(-1)[:n], amax
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "cap",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=None, cap=None,
+                    block_q=128, block_k=128):
+    """q (B,H,Lq,hd); k,v (B,KV,Lk,hd)."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               cap=cap, block_q=block_q, block_k=block_k,
+                               interpret=INTERPRET)
+
+
+@jax.jit
+def ssd_intra_chunk(xc, dAc, Bc, Cc):
+    return _ssd.ssd_intra_chunk(xc, dAc, Bc, Cc, interpret=INTERPRET)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import segsum
+
+
+def ckpt_pack_ref(x2d, *, out_dtype=jnp.bfloat16, scale=1.0):
+    xf = x2d.astype(jnp.float32) * scale
+    return xf.astype(out_dtype), jnp.max(jnp.abs(xf), axis=1)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, cap=None):
+    """q (B,H,Lq,hd); k,v (B,KV,Lk,hd) -> (B,H,Lq,hd)."""
+    B, H, Lq, hd = q.shape
+    KV, Lk = k.shape[1], k.shape[2]
+    rep = H // KV
+    kk = jnp.repeat(k, rep, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk)
+    s = s / math.sqrt(hd)
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    qpos = jnp.arange(Lq)[:, None]
+    kpos = jnp.arange(Lk)[None, :]
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv).astype(q.dtype)
+
+
+def ssd_intra_chunk_ref(xc, dAc, Bc, Cc):
+    """Matches kernels.ssd_scan.ssd_intra_chunk (fp32 out)."""
+    xc = xc.astype(jnp.float32)
+    dAc = dAc.astype(jnp.float32)
+    Bc = Bc.astype(jnp.float32)
+    Cc = Cc.astype(jnp.float32)
+    L = jnp.exp(segsum(dAc.transpose(0, 1, 3, 2)))       # (b,nc,h,cl,cl)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc)
+    return jnp.einsum("bchls,bchls,bcshp->bclhp", scores, L, xc)

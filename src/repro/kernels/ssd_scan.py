@@ -1,0 +1,61 @@
+"""ssd_scan — Mamba2 intra-chunk SSD kernel (TPU Pallas).
+
+Computes the quadratic intra-chunk term of the state-space-duality
+algorithm (arXiv:2405.21060): per (batch, chunk, head) grid cell,
+
+    Y_diag = ((C Bᵀ) ∘ exp(segsum(dA))) · X
+
+which is the FLOPs hot-spot of the chunked scan. The sequential
+inter-chunk state recurrence stays outside (lax.scan) — it is O(L/chunk)
+and latency-, not compute-bound. Block shapes are chunk×d_state /
+chunk×head_dim MXU tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dA_ref, b_ref, c_ref, y_ref, *, chunk):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)      # (cl, p)
+    dA = dA_ref[0, 0, :, 0].astype(jnp.float32)       # (cl,)
+    B_ = b_ref[0, 0, :, 0, :].astype(jnp.float32)     # (cl, n)
+    C_ = c_ref[0, 0, :, 0, :].astype(jnp.float32)     # (cl, n)
+
+    cum = jnp.cumsum(dA)                               # (cl,)
+    # segsum(l,s) = cum[l] - cum[s] on the strict lower triangle, 0 on diag
+    seg = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)         # (cl, cl)
+
+    scores = jnp.dot(C_, B_.T, preferred_element_type=jnp.float32) * L
+    y_ref[0, 0, :, 0, :] = jnp.dot(
+        scores, x, preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+
+def ssd_intra_chunk(xc, dAc, Bc, Cc, *, interpret=False):
+    """xc (b, nc, cl, h, p); dAc (b, nc, cl, h); Bc, Cc (b, nc, cl, h, n)
+    -> Y_diag (b, nc, cl, h, p), fp32. Matches the ``ssd_kernel`` hook in
+    ``layers.ssd_chunked``."""
+    b, nc, cl, h, p = xc.shape
+    n = Bc.shape[-1]
+    kernel = functools.partial(_kernel, chunk=cl)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, nc, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, cl, 1, p), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, cl, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, cl, 1, n), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, cl, 1, n), lambda b, c, h: (b, c, 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, cl, 1, p),
+                               lambda b, c, h: (b, c, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nc, cl, h, p), jnp.float32),
+        interpret=interpret,
+    )(xc, dAc, Bc, Cc)
+    return y

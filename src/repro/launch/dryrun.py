@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes, print memory/cost analyses, and extract the
+roofline terms (DESIGN.md §6–7).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2_9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse
+import json
+import re
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.hlo_cost import aggregate as hlo_aggregate
+from repro.launch.inputs import input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import build_model
+from repro.optim.adam import AdamConfig
+from repro.sharding.specs import (batch_specs, cache_specs, dp_axes,
+                                  param_specs, to_shardings, zero1_specs)
+from repro.train.steps import make_train_step
+
+# TPU v5e per-chip constants (DESIGN.md §2)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+def shardings_for(kind, specs, cfg, mesh, batch_size, fsdp=False):
+    """Build in_shardings matching the input_specs pytree.
+
+    fsdp=True additionally shards the bf16 working params over ``data``
+    (ZeRO-3 class — XLA all-gathers each layer's weights on use). The
+    only way multi-hundred-B models fit (see EXPERIMENTS §Dry-run)."""
+    ns = lambda tree: to_shardings(tree, mesh)
+    if kind == "train":
+        state = specs["state"]
+        sh_params = ns((zero1_specs if fsdp else param_specs)(
+            state.params, mesh))
+        sh_opt_master = ns(zero1_specs(state.opt.master, mesh))
+        sh_opt_m = ns(zero1_specs(state.opt.m, mesh))
+        sh_opt_v = ns(zero1_specs(state.opt.v, mesh))
+        sh_step = NamedSharding(mesh, P())
+        sh_state = type(state)(
+            sh_params, type(state.opt)(sh_step, sh_opt_master, sh_opt_m,
+                                       sh_opt_v))
+        sh_batch = ns(batch_specs(specs["batch"], mesh))
+        return (sh_state, sh_batch)
+    sh_params = ns(param_specs(specs["params"], mesh))
+    sh_cache = ns(cache_specs(specs["cache"], mesh, batch_size))
+    if kind == "prefill":
+        sh_batch = ns(batch_specs(specs["batch"], mesh))
+        return (sh_params, sh_batch, sh_cache)
+    return (sh_params, NamedSharding(mesh, P()), sh_cache,
+            NamedSharding(mesh, P()))
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool = False,
+              verbose: bool = True, extra_cfg=None,
+              shard_map_moe: bool = False, fsdp: bool = False):
+    cfg = get_config(arch)
+    if extra_cfg:
+        cfg = replace(cfg, **extra_cfg)
+    shape = INPUT_SHAPES[shape_name]
+    if shape_name in cfg.skip_shapes:
+        return {"arch": arch, "shape": shape_name, "skipped": True}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp_total = 1
+    for a in dp_axes(mesh):
+        dp_total *= mesh.shape[a]
+    n_chips = mesh.size
+
+    # remat + chunked CE are the standard production baseline for training
+    moe_groups = cfg.moe_groups_override or min(dp_total, shape.global_batch)
+    model = build_model(cfg, moe_groups=moe_groups,
+                        remat=(shape.kind == "train"),
+                        ce_chunk=512 if shape.kind == "train" else None,
+                        mesh=mesh if shard_map_moe else None)
+    specs = input_specs(cfg, shape, model)
+    t0 = time.perf_counter()
+
+    with mesh:
+        if shape.kind == "train":
+            step = make_train_step(model, AdamConfig())
+            shardings = shardings_for("train", specs, cfg, mesh,
+                                      shape.global_batch, fsdp=fsdp)
+            out_sh = (shardings[0], NamedSharding(mesh, P()))
+            jitted = jax.jit(step, in_shardings=shardings,
+                             out_shardings=out_sh)
+            lowered = jitted.lower(specs["state"], specs["batch"])
+        elif shape.kind == "prefill":
+            def prefill_step(params, batch, cache):
+                return model.prefill(params, batch, cache)
+            shardings = shardings_for("prefill", specs, cfg, mesh,
+                                      shape.global_batch)
+            jitted = jax.jit(prefill_step, in_shardings=shardings)
+            lowered = jitted.lower(specs["params"], specs["batch"],
+                                   specs["cache"])
+        else:
+            def decode_step(params, tokens, cache, pos):
+                return model.decode(params, tokens, cache, pos)
+            shardings = shardings_for("decode", specs, cfg, mesh,
+                                      shape.global_batch)
+            jitted = jax.jit(decode_step, in_shardings=shardings)
+            lowered = jitted.lower(specs["params"], specs["tokens"],
+                                   specs["cache"], specs["pos"])
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_bytes":
+                getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:              # CPU backend may not support it
+        mem, mem_info = None, {"error": str(e)}
+
+    hlo = compiled.as_text()
+    # trip-count-aware per-device cost (XLA's cost_analysis counts loop
+    # bodies once; our layer stacks are scans — see hlo_cost.py)
+    agg = hlo_aggregate(hlo)
+    flops = agg["flops"]
+    bytes_acc = agg["bytes"]
+    coll = agg["collectives"]
+    coll_total = sum(coll.values())
+
+    model_flops_global = (
+        6 * cfg.active_param_count() * shape.global_batch * shape.seq_len
+        if shape.kind == "train"
+        else 2 * cfg.active_param_count() * shape.global_batch
+        * (shape.seq_len if shape.kind == "prefill" else 1))
+
+    # roofline terms (seconds): per-device work / per-chip rates
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "xla_flops_per_device_noloop": float(cost.get("flops", 0.0)),
+        "collective_bytes_per_device": coll,
+        "collective_total_per_device": coll_total,
+        "memory": mem_info,
+        "t_compute_s": flops / PEAK_FLOPS,
+        "t_memory_s": bytes_acc / HBM_BW,
+        "t_collective_s": coll_total / ICI_BW,
+        "model_flops_global": model_flops_global,
+        "useful_flops_ratio": model_flops_global / max(flops * n_chips, 1.0),
+    }
+    terms = {"compute": result["t_compute_s"],
+             "memory": result["t_memory_s"],
+             "collective": result["t_collective_s"]}
+    result["dominant"] = max(terms, key=terms.get)
+    if verbose:
+        print(json.dumps(result, indent=2))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    pairs = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape
+        pairs = [(args.arch, args.shape)]
+
+    results = []
+    for a, s in pairs:
+        tag = "multipod" if args.multi_pod else "pod"
+        try:
+            r = lower_one(a, s, multi_pod=args.multi_pod)
+        except Exception as e:
+            r = {"arch": a, "shape": s, "error": repr(e)[:500]}
+            print(f"FAILED {a} {s}: {e}")
+        results.append(r)
+        with open(os.path.join(args.out, f"{a}__{s}__{tag}.json"), "w") as f:
+            json.dump(r, f, indent=2)
+    ok = sum(1 for r in results if "error" not in r)
+    print(f"\n{ok}/{len(results)} pairs lowered+compiled")
+
+
+if __name__ == "__main__":
+    main()

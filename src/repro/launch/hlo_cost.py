@@ -1,0 +1,212 @@
+"""Trip-count-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, but our models
+scan over layers — so FLOPs/bytes/collectives inside the layer loop must
+be multiplied by the trip count. This module parses the post-optimization
+(per-device) HLO text, builds per-computation symbol tables and the call
+graph, and aggregates:
+
+  * flops        — dot ops: 2 · prod(result) · prod(contracting dims)
+  * bytes        — Σ operand+result sizes of top-level ops per
+                   computation (HBM-traffic proxy; fusion internals are
+                   not double-counted — only the fusion call site is)
+  * collectives  — result bytes per collective kind
+
+each scaled by the product of enclosing while-loop trip counts. Trip
+counts are recovered from the loop condition's comparison constant.
+"""
+from __future__ import annotations
+
+import functools
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([\d,]*)\]")
+_OP_RE = re.compile(r"(?<![%=\w-])([a-z][a-z0-9\-]*)\(")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(shapes) -> float:
+    return float(sum(_elems(d) * _DTYPE_BYTES.get(t, 0) for t, d in shapes))
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    flops: float = 0.0
+    bytes_: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+    whiles: List[Tuple[str, str]] = field(default_factory=list)  # (body, cond)
+    fusion_calls: Dict[str, int] = field(default_factory=dict)   # callee -> n
+    call_calls: Dict[str, int] = field(default_factory=dict)
+    trip_const: Optional[int] = None
+
+
+def parse(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    symtab: Dict[str, list] = {}
+    for raw in hlo.splitlines():
+        s = raw.strip()
+        if not s:
+            continue
+        hm = _HDR_RE.match(s)
+        if hm and "=" not in s.split("(", 1)[0]:
+            cur = Computation(hm.group(1), is_entry=s.startswith("ENTRY"))
+            comps[cur.name] = cur
+            symtab = {}
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        dm = _DEF_RE.match(s)
+        if not dm:
+            continue
+        name, rhs = dm.groups()
+        om = _OP_RE.search(rhs)
+        if not om:
+            continue
+        op = om.group(1)
+        result_str = rhs[:om.start()]
+        result_shapes = _SHAPE_RE.findall(result_str)
+        symtab[name] = result_shapes
+        # operand names between the op's parentheses
+        depth, i0 = 0, om.end() - 1
+        i = i0
+        while i < len(rhs):
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            i += 1
+        operand_txt = rhs[i0 + 1:i]
+        attr_txt = rhs[i + 1:]
+        opnames = re.findall(r"%([\w\.\-]+)", operand_txt)
+        operand_shapes = [sh for onm in opnames for sh in symtab.get(onm, [])]
+
+        if op == "dot":
+            res = sum(_elems(d) for _, d in result_shapes)
+            contract = 1
+            cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", attr_txt)
+            lhs_shape = symtab.get(opnames[0], []) if opnames else []
+            if cm and lhs_shape:
+                dims = lhs_shape[0][1].split(",")
+                for ci in cm.group(1).split(","):
+                    if ci and int(ci) < len(dims) and dims[int(ci)]:
+                        contract *= int(dims[int(ci)])
+            cur.flops += 2.0 * res * contract
+        base_op = op[:-6] if op.endswith("-start") else op
+        if base_op in COLLECTIVES:
+            cur.coll[base_op] = cur.coll.get(base_op, 0.0) + \
+                _shapes_bytes(result_shapes)
+        if op not in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "while"):
+            rb = _shapes_bytes(result_shapes)
+            ob = _shapes_bytes(operand_shapes)
+            # dynamic-update-slice aliases its big operand in place: real
+            # traffic is the UPDATE slice, not the whole buffer. Applies
+            # to bare DUS and to fusions rooted at one (name hint).
+            if op == "dynamic-update-slice" or (
+                    op == "fusion" and "dynamic-update-slice" in name):
+                per_operand = [_shapes_bytes([sh]) for sh in operand_shapes]
+                big = max(per_operand, default=0.0)
+                ob -= big
+                if rb >= big > 0:
+                    rb -= big
+            cur.bytes_ += rb + ob
+        if op == "while":
+            bm = re.search(r"body=%?([\w\.\-]+)", attr_txt)
+            cm2 = re.search(r"condition=%?([\w\.\-]+)", attr_txt)
+            if bm and cm2:
+                cur.whiles.append((bm.group(1), cm2.group(1)))
+        elif op in ("fusion",):
+            mm = re.search(r"calls=%?([\w\.\-]+)", attr_txt)
+            if mm:
+                cur.fusion_calls[mm.group(1)] = \
+                    cur.fusion_calls.get(mm.group(1), 0) + 1
+        elif op in ("call", "conditional", "async-start", "custom-call"):
+            mm = re.search(r"(?:to_apply|calls)=%?([\w\.\-]+)", attr_txt)
+            if mm:
+                cur.call_calls[mm.group(1)] = \
+                    cur.call_calls.get(mm.group(1), 0) + 1
+        if op == "constant":
+            mc = re.match(r"\s*(\d+)\s*$", operand_txt)
+            if mc:
+                cur.trip_const = max(cur.trip_const or 0, int(mc.group(1)))
+    return comps
+
+
+def aggregate(hlo: str):
+    """Returns {'flops', 'bytes', 'collectives'} for one device's
+    partitioned module, while-loop trip counts applied."""
+    comps = parse(hlo)
+
+    def trip(cond_name: str) -> int:
+        c = comps.get(cond_name)
+        return c.trip_const if c and c.trip_const else 1
+
+    @functools.lru_cache(maxsize=None)
+    def cost(name: str):
+        c = comps.get(name)
+        if c is None:
+            return 0.0, 0.0, ()
+        fl, by = c.flops, c.bytes_
+        coll = dict(c.coll)
+        for body, cond in c.whiles:
+            t = trip(cond)
+            for nm, mult in ((body, t), (cond, t)):
+                f2, b2, c2 = cost(nm)
+                fl += f2 * mult
+                by += b2 * mult
+                for k, v in c2:
+                    coll[k] = coll.get(k, 0.0) + v * mult
+        # fusion internals: flops counted (dots can live in fusions);
+        # bytes NOT added (call-site operands/results already counted)
+        for callee, n in c.fusion_calls.items():
+            f2, _, c2 = cost(callee)
+            fl += f2 * n
+            for k, v in c2:
+                coll[k] = coll.get(k, 0.0) + v * n
+        for callee, n in c.call_calls.items():
+            f2, b2, c2 = cost(callee)
+            fl += f2 * n
+            by += b2 * n
+            for k, v in c2:
+                coll[k] = coll.get(k, 0.0) + v * n
+        return fl, by, tuple(sorted(coll.items()))
+
+    entry = next((n for n, c in comps.items() if c.is_entry), None)
+    if entry is None:
+        called = {cal for c in comps.values()
+                  for cal in list(c.fusion_calls) + list(c.call_calls)
+                  + [x for w in c.whiles for x in w]}
+        entry = next((n for n in comps if n not in called), None)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {},
+                "n_computations": len(comps)}
+    f, b, cc = cost(entry)
+    return {"flops": f, "bytes": b, "collectives": dict(cc),
+            "n_computations": len(comps)}

@@ -1,0 +1,54 @@
+"""ShapeDtypeStruct stand-ins for every model input — shardable,
+weak-type-correct, no device allocation. The dry-run lowers against
+these; nothing here touches real device memory."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.models.registry import build_model
+from repro.optim.adam import AdamConfig
+from repro.train.steps import init_train_state, make_train_step
+
+
+def batch_structs(cfg: ModelConfig, batch: int, seq: int):
+    b = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.frontend == "vision":
+        b["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.arch_type == "encdec":
+        b["audio_frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_enc_ctx, cfg.d_model), jnp.bfloat16)
+    return b
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, model,
+                gas: int = 1):
+    """Returns (kind, kwargs-of-ShapeDtypeStructs) for the step to lower."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        state = jax.eval_shape(
+            lambda: init_train_state(model, jax.random.PRNGKey(0)))
+        batch = batch_structs(cfg, B, S)
+        return {"state": state, "batch": batch}
+    params = jax.eval_shape(
+        lambda: jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16) if p.dtype == jnp.float32
+            else p, model.init(jax.random.PRNGKey(0))))
+    n_prefix = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+    if shape.kind == "prefill":
+        cache = jax.eval_shape(lambda: model.init_cache(B, S + n_prefix))
+        batch = batch_structs(cfg, B, S)
+        batch.pop("labels")
+        return {"params": params, "batch": batch, "cache": cache}
+    # decode: ONE new token against a seq-length cache
+    cache_len = S + n_prefix
+    cache = jax.eval_shape(lambda: model.init_cache(B, cache_len))
+    return {"params": params,
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "cache": cache,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}

@@ -1,0 +1,76 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm_1_6b \
+        --reduced --steps 50 --batch 8 --seq 128 \
+        --ckpt-dir /tmp/ckpt --ckpt-mode fastpersist --every 1 --pipeline
+
+On this CPU container use --reduced; on a TPU pod the full config lowers
+through the same path with the production mesh (see dryrun.py for the
+sharding configuration the full-scale run uses).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config, reduced as make_reduced
+from repro.core.checkpointer import FastPersistConfig
+from repro.core.partition import Topology
+from repro.core.writer import WriterConfig
+from repro.optim.adam import AdamConfig
+from repro.train.trainer import CheckpointPolicy, Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--gas", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-mode", default="fastpersist",
+                    choices=["fastpersist", "baseline", "none"])
+    ap.add_argument("--every", type=int, default=1)
+    ap.add_argument("--pipeline", action="store_true", default=True)
+    ap.add_argument("--no-pipeline", dest="pipeline", action="store_false")
+    ap.add_argument("--writers", default="auto",
+                    choices=["auto", "replica", "socket"])
+    ap.add_argument("--dp", type=int, default=4,
+                    help="simulated DP degree for checkpoint writers")
+    ap.add_argument("--restore", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+
+    ckpt = None
+    if args.ckpt_dir and args.ckpt_mode != "none":
+        ckpt = CheckpointPolicy(
+            directory=args.ckpt_dir, every=args.every, mode=args.ckpt_mode,
+            pipeline=args.pipeline,
+            fp=FastPersistConfig(
+                strategy=args.writers,
+                topology=Topology(dp_degree=args.dp, ranks_per_node=4),
+                writer=WriterConfig()))
+
+    tr = Trainer(TrainerConfig(
+        model=cfg, steps=args.steps, global_batch=args.batch,
+        seq_len=args.seq, gas=args.gas, opt=AdamConfig(lr=args.lr),
+        checkpoint=ckpt))
+
+    start = 0
+    if args.restore and ckpt and args.ckpt_mode == "fastpersist":
+        start = tr.restore()
+        print(f"restored from step {start}")
+    state, metrics = tr.run(start_step=start)
+    import numpy as np
+    print(f"done: loss={float(metrics.get('loss', float('nan'))):.4f} "
+          f"mean_iter={np.mean(tr.iter_times)*1e3:.1f}ms "
+          f"ckpt_stall={tr.ckpt_stall*1e3:.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

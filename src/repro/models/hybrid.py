@@ -1,0 +1,172 @@
+"""Zamba2-style hybrid [arXiv:2411.15242]: Mamba2 backbone with a SHARED
+full-attention transformer block invoked every ``attn_every`` SSM blocks
+(per-invocation norms). See DESIGN.md for documented deviations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as ly
+from repro.models import transformer as tf
+from repro.models.layers import _ssm_dims
+
+
+def _n_groups(cfg):
+    assert cfg.n_layers % cfg.attn_every == 0
+    return cfg.n_layers // cfg.attn_every
+
+
+def init(key, cfg: ModelConfig):
+    k_emb, k_ssm, k_attn, k_mlp, k_inv = jax.random.split(key, 5)
+    G = _n_groups(cfg)
+    ssm_layers = jax.vmap(lambda k: {
+        "ln": ly.rmsnorm_init(cfg.d_model),
+        "mixer": ly.mamba2_init(k, cfg),
+    })(jax.random.split(k_ssm, cfg.n_layers))
+    # reshape stacked ssm params to (G, attn_every, ...)
+    ssm_layers = jax.tree.map(
+        lambda a: a.reshape(G, cfg.attn_every, *a.shape[1:]), ssm_layers)
+    return {
+        "embed": ly.uniform_scale(k_emb, (cfg.vocab_size, cfg.d_model),
+                                  cfg.d_model),
+        "ssm_layers": ssm_layers,
+        "shared_attn": {
+            "attn": ly.gqa_init(k_attn, cfg),
+            "mlp": ly.mlp_init(k_mlp, cfg.d_model, cfg.d_ff, cfg.gated_mlp),
+        },
+        "inv_norms": {"ln1": jnp.ones((G, cfg.d_model)),
+                      "ln2": jnp.ones((G, cfg.d_model))},
+        "final_norm": ly.rmsnorm_init(cfg.d_model),
+    }
+
+
+def _shared_attn_block(params, cfg, x, ln1, ln2, pos, cache_k, cache_v,
+                       cache_pos):
+    sp = params["shared_attn"]
+    h = ly.rmsnorm(x, ln1, cfg.norm_eps)
+    q, k, v = ly.gqa_qkv(sp["attn"], h, cfg)
+    cos, sin = ly.rope_tables(pos, cfg.resolved_head_dim, cfg.rope_theta)
+    q, k = ly.apply_rope(q, cos, sin), ly.apply_rope(k, cos, sin)
+    if cache_k is not None:
+        cache_k = lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           (0, cache_pos, 0, 0))
+        cache_v = lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, cache_pos, 0, 0))
+        kv_pos = jnp.arange(cache_k.shape[1])
+        valid = cache_pos + x.shape[1]
+        k_use, v_use = cache_k, cache_v
+    else:
+        kv_pos, valid, k_use, v_use = pos, None, k, v
+    o = ly.attention(q, k_use, v_use, q_pos=pos, kv_pos=kv_pos,
+                     kv_valid_len=valid)
+    x = x + ly.gqa_out(sp["attn"], o)
+    h = ly.rmsnorm(x, ln2, cfg.norm_eps)
+    x = x + ly.mlp(sp["mlp"], h, gated=cfg.gated_mlp, act=jax.nn.silu)
+    return x, cache_k, cache_v
+
+
+def _run(params, cfg: ModelConfig, x, ssm_cache, attn_k, attn_v,
+         start_pos, ssd_kernel=None):
+    """Scan over G groups: attn_every SSM blocks then the shared attn.
+
+    ssm_cache is None for train/prefill (fresh zero SSM state; chunked
+    scan) and the stacked decode state otherwise. attn_k/attn_v are None
+    for train, cache buffers for prefill/decode."""
+    Lq = x.shape[1]
+    pos = start_pos + jnp.arange(Lq)
+
+    def ssm_stack(x, ssm_lp, ssm_c):
+        if ssm_c is None:
+            def body_nc(x, lp):
+                h = ly.rmsnorm(x, lp["ln"], cfg.norm_eps)
+                y, nc = ly.mamba2_apply(lp["mixer"], h, cfg,
+                                        ssd_kernel=ssd_kernel)
+                return x + y, nc
+            return lax.scan(body_nc, x, ssm_lp)
+
+        def body(x, inner):
+            lp, c = inner
+            h = ly.rmsnorm(x, lp["ln"], cfg.norm_eps)
+            y, nc = ly.mamba2_apply(lp["mixer"], h, cfg, cache=c)
+            return x + y, nc
+        return lax.scan(body, x, (ssm_lp, ssm_c))
+
+    if ssm_cache is None:
+        def group_body(x, xs):
+            if attn_k is None:
+                ssm_lp, ln1, ln2 = xs
+                ck = cv = None
+            else:
+                ssm_lp, ln1, ln2, ck, cv = xs
+            x, new_ssm_c = ssm_stack(x, ssm_lp, None)
+            x, nck, ncv = _shared_attn_block(params, cfg, x, ln1, ln2, pos,
+                                             ck, cv, start_pos)
+            return x, (new_ssm_c, nck, ncv)
+
+        xs = (params["ssm_layers"], params["inv_norms"]["ln1"],
+              params["inv_norms"]["ln2"])
+        if attn_k is not None:
+            xs = xs + (attn_k, attn_v)
+        x, new = lax.scan(group_body, x, xs)
+    else:
+        def group_body(x, xs):
+            ssm_lp, ln1, ln2, ssm_c, ck, cv = xs
+            x, new_ssm_c = ssm_stack(x, ssm_lp, ssm_c)
+            x, nck, ncv = _shared_attn_block(params, cfg, x, ln1, ln2, pos,
+                                             ck, cv, start_pos)
+            return x, (new_ssm_c, nck, ncv)
+
+        x, new = lax.scan(group_body, x,
+                          (params["ssm_layers"], params["inv_norms"]["ln1"],
+                           params["inv_norms"]["ln2"], ssm_cache,
+                           attn_k, attn_v))
+    new_cache = {"ssm": new[0], "k": new[1], "v": new[2]}
+    return x, new_cache
+
+
+def forward(params, cfg: ModelConfig, batch, *, remat=False, moe_groups=1,
+            dtype=jnp.bfloat16, ssd_kernel=None):
+    x = params["embed"].astype(dtype)[batch["tokens"]]
+    x, _ = _run(params, cfg, x, None, None, None, jnp.int32(0), ssd_kernel)
+    x = ly.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["embed"].T.astype(dtype), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, cache_len: int,
+               dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _ssm_dims(cfg)
+    G = _n_groups(cfg)
+    hd = cfg.resolved_head_dim
+    return {
+        "ssm": {
+            "conv": jnp.zeros((G, cfg.attn_every, batch_size,
+                               s.conv_width - 1, conv_dim), dtype),
+            "ssm": jnp.zeros((G, cfg.attn_every, batch_size, nheads,
+                              s.head_dim, s.d_state), jnp.float32),
+        },
+        "k": jnp.zeros((G, batch_size, cache_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((G, batch_size, cache_len, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, *, moe_groups=1,
+            dtype=jnp.bfloat16, ssd_kernel=None):
+    x = params["embed"].astype(dtype)[batch["tokens"]]
+    # fresh SSM state (chunked scan) + real attn cache buffers written at
+    # positions [0, L)
+    x, new_cache = _run(params, cfg, x, None, cache["k"], cache["v"],
+                        jnp.int32(0), ssd_kernel)
+    x = ly.rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return x @ params["embed"].T.astype(dtype), new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos, *,
+                moe_groups=1, dtype=jnp.bfloat16):
+    x = params["embed"].astype(dtype)[tokens]
+    x, new_cache = _run(params, cfg, x, cache["ssm"], cache["k"],
+                        cache["v"], pos)
+    x = ly.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["embed"].T.astype(dtype), new_cache

@@ -1,0 +1,581 @@
+"""Shared model building blocks, pure JAX (init fns + apply fns).
+
+Parameters are nested dicts of jnp arrays. Per-layer parameters are
+STACKED on a leading layer axis and traversed with ``lax.scan`` so that
+94-layer configs compile in seconds rather than minutes.
+
+Compute dtype is bf16 (params held in the optimizer's low-precision copy,
+§2.1.3 of the paper: fp16/bf16 model + fp32 optimizer = ~14 B/param).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+MASK_VALUE = -1e30
+
+
+def uniform_scale(key, shape, fan_in, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32):
+    return uniform_scale(key, (d_in, d_out), d_in, dtype)
+
+
+# ---------------------------------------------------------------- RMSNorm
+
+def rmsnorm_init(d):
+    return jnp.ones((d,), jnp.float32)
+
+
+def rmsnorm(x, w, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * lax.rsqrt(var + eps)) * w).astype(dt)
+
+
+# ------------------------------------------------------------------ RoPE
+
+def rope_tables(positions, head_dim, theta):
+    """positions (...,) -> cos,sin (..., head_dim//2) in fp32."""
+    half = head_dim // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., L, H, hd); cos/sin (..., L, hd//2) — rotate-half pairs."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c, s = cos[..., None, :], sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(dt)
+
+
+# ------------------------------------------------------------- Attention
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+def attention(q, k, v, *, q_pos, kv_pos, causal=True,
+              window: Optional[int] = None, cap: Optional[float] = None,
+              kv_valid_len=None):
+    """GQA attention.
+
+    q: (B, Lq, H, hd); k,v: (B, Lk, KV, hd). ``q_pos``/(B-free) ``kv_pos``
+    are int32 position vectors of length Lq / Lk used for causal and
+    sliding-window masks. ``kv_valid_len`` masks out not-yet-filled cache
+    slots during decode.
+    """
+    B, Lq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qf = q.reshape(B, Lq, KV, rep, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bqghd,bkgd->bghqk", qf, kf) / math.sqrt(hd)
+    scores = softcap(scores, cap)
+    mask = jnp.ones((Lq, k.shape[1]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window is not None:
+        # window may be a TRACED scalar (gemma2 local/global alternation
+        # inside the layer scan — §Perf: one attention with a dynamic
+        # window instead of computing both variants and selecting)
+        mask &= q_pos[:, None] - kv_pos[None, :] < window
+    if kv_valid_len is not None:
+        mask &= (kv_pos < kv_valid_len)[None, :]
+    scores = jnp.where(mask[None, None, None], scores, MASK_VALUE)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bghqk,bkgd->bqghd", probs, v)
+    return out.reshape(B, Lq, H, v.shape[-1])   # v head dim may differ (MLA)
+
+
+def gqa_init(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,))
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,))
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,))
+    return p
+
+
+def gqa_qkv(p, x, cfg: ModelConfig):
+    B, L, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return (q.reshape(B, L, cfg.n_heads, hd),
+            k.reshape(B, L, cfg.n_kv_heads, hd),
+            v.reshape(B, L, cfg.n_kv_heads, hd))
+
+
+def gqa_out(p, o):
+    B, L, H, hd = o.shape
+    return o.reshape(B, L, H * hd) @ p["wo"].astype(o.dtype)
+
+
+# ------------------------------------------------------------------- MLA
+
+def mla_init(key, cfg: ModelConfig):
+    m, d, H = cfg.mla, cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, m.q_lora_rank),
+        "q_norm": rmsnorm_init(m.q_lora_rank),
+        "wq_b": dense_init(ks[1], m.q_lora_rank, H * qk),
+        "wkv_a": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank),
+        "wkv_b": dense_init(ks[3], m.kv_lora_rank,
+                            H * (m.qk_nope_head_dim + m.v_head_dim)),
+        "wo": dense_init(ks[4], H * m.v_head_dim, d),
+    }
+
+
+def mla_attention(p, x, cfg: ModelConfig, pos, cache=None, cache_pos=None,
+                  absorb=False):
+    """Multi-head latent attention. Cache stores the COMPRESSED kv latent
+    (B, S, kv_lora_rank + rope_dim) — the MLA memory saving.
+
+    pos: (L,) int32 query positions. Returns (out, new_cache_entry).
+
+    absorb=True (decode §Perf optimization, DeepSeek-V2 inference trick):
+    the up-projection wkv_b is absorbed into the query/output sides, so
+    attention runs IN LATENT SPACE — per-position K/V are never
+    materialized from the cache. Identical math, ~(H·(nope+v)/rank)× less
+    cache-expansion traffic per step.
+    """
+    m, H = cfg.mla, cfg.n_heads
+    B, L, _ = x.shape
+    nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q = rmsnorm(x @ p["wq_a"].astype(x.dtype), p["q_norm"], cfg.norm_eps)
+    q = (q @ p["wq_b"].astype(x.dtype)).reshape(B, L, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+
+    kv_a = x @ p["wkv_a"].astype(x.dtype)          # (B,L,rank+rope)
+    latent, k_rope_flat = kv_a[..., :m.kv_lora_rank], kv_a[..., m.kv_lora_rank:]
+
+    cos, sin = rope_tables(pos, rope_d, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope_flat[:, :, None, :], cos, sin)  # (B,L,1,rope)
+    # norm-at-write: the cache stores the NORMALIZED latent, so reads
+    # need no per-step rmsnorm over the whole cache (§Perf iteration 3 —
+    # otherwise XLA carries a second, fp32 copy of the cache through the
+    # decode loop just to feed the norm).
+    latent = rmsnorm(latent, p["kv_norm"], cfg.norm_eps)
+    new_entry = jnp.concatenate([latent, k_rope[:, :, 0, :]], axis=-1)
+
+    if cache is not None:
+        cache = lax.dynamic_update_slice(cache, new_entry.astype(cache.dtype),
+                                         (0, cache_pos, 0))
+        full = cache
+        kv_len = cache.shape[1]
+        kv_pos = jnp.arange(kv_len)
+        valid = cache_pos + L
+    else:
+        full = new_entry
+        kv_pos = pos
+        valid = None
+
+    latent_all = full[..., :m.kv_lora_rank]        # already normalized
+    k_rope_all = full[..., m.kv_lora_rank:]
+
+    if absorb:
+        # W_UK: (rank, H, nope); W_UV: (rank, H, vd)
+        wkv = p["wkv_b"].astype(x.dtype).reshape(m.kv_lora_rank, H,
+                                                 nope + vd)
+        w_uk, w_uv = wkv[..., :nope], wkv[..., nope:]
+        # fold the key up-projection into the query. bf16 operands with
+        # f32 accumulation (preferred_element_type) — casting the cache
+        # itself to f32 would make XLA carry an f32 copy of the whole
+        # cache through the layer loop (§Perf iteration 2).
+        q_lat = jnp.einsum("blhn,rhn->blhr", q_nope, w_uk)
+        s_lat = jnp.einsum("blhr,bsr->bhls", q_lat, latent_all,
+                           preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("blhn,bsn->bhls", q_rope,
+                            k_rope_all.astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        qk_dim = nope + rope_d
+        s = (s_lat + s_rope) / math.sqrt(qk_dim)
+        mask = pos[:, None] >= kv_pos[None, :]
+        if valid is not None:
+            mask &= (kv_pos < valid)[None, :]
+        s = jnp.where(mask[None, None], s, MASK_VALUE)
+        probs = jax.nn.softmax(s, axis=-1)
+        # attend in latent space, then apply the value up-projection
+        o_lat = jnp.einsum("bhls,bsr->blhr", probs.astype(x.dtype),
+                           latent_all,
+                           preferred_element_type=jnp.float32)
+        o = jnp.einsum("blhr,rhv->blhv", o_lat.astype(x.dtype), w_uv)
+    else:
+        kv = (latent_all @ p["wkv_b"].astype(x.dtype)
+              ).reshape(B, -1, H, nope + vd)
+        k_nope, v = kv[..., :nope], kv[..., nope:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope_all[:, :, None, :],
+                                      (*k_nope.shape[:3], rope_d))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = attention(qq, k, v, q_pos=pos, kv_pos=kv_pos, kv_valid_len=valid)
+    out = o.reshape(B, L, H * vd) @ p["wo"].astype(x.dtype)
+    return out, (cache if cache is not None else new_entry)
+
+
+# ------------------------------------------------------------------- MLP
+
+def mlp_init(key, d, ff, gated=True):
+    ks = jax.random.split(key, 3)
+    if gated:
+        return {"wi": dense_init(ks[0], d, ff), "wg": dense_init(ks[1], d, ff),
+                "wo": dense_init(ks[2], ff, d)}
+    return {"wi": dense_init(ks[0], d, ff), "wo": dense_init(ks[2], ff, d)}
+
+
+def mlp(p, x, gated=True, act=jax.nn.gelu):
+    h = x @ p["wi"].astype(x.dtype)
+    if gated:
+        h = act(x @ p["wg"].astype(x.dtype)) * h
+    else:
+        h = act(h)
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MoE
+
+def moe_init(key, cfg: ModelConfig):
+    e, d, ff = cfg.moe.n_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, e),
+        "wi": uniform_scale(ks[1], (e, d, ff), d),
+        "wg": uniform_scale(ks[2], (e, d, ff), d),
+        "wo": uniform_scale(ks[3], (e, ff, d), ff),
+    }
+    if cfg.moe.dense_residual:
+        p["dense"] = mlp_init(ks[4], d, cfg.moe.dense_ff or cfg.d_ff)
+    return p
+
+
+def moe_apply(p, x, cfg: ModelConfig, *, n_groups=1, capacity_factor=None,
+              impl="einsum"):
+    """Mixture-of-experts layer. Returns (out, aux_loss).
+
+    impl="einsum": GShard-style capacity dispatch via one-hot einsums —
+    the faithful baseline. Its dispatch einsums contract over ALL tokens
+    per (expert, slot) pair: O(T·E·C·D) FLOPs, which dominates the
+    roofline for fine-grained-expert models (qwen3: E=128, K=8).
+
+    impl="sorted": §Perf beyond-baseline path — tokens are routed by
+    argsort + gather/scatter (MegaBlocks/Tutel class). Expert matmuls are
+    the ONLY O(D·F) compute; dispatch is pure data movement. Same
+    semantics when capacity is ample; drop ORDER differs when slots
+    overflow (sorted drops by token index within expert, einsum drops by
+    arrival order — both are valid capacity policies).
+    """
+    if impl == "sorted":
+        return moe_apply_sorted(p, x, cfg, n_groups=n_groups,
+                                capacity_factor=capacity_factor)
+    B, L, D = x.shape
+    E, K = cfg.moe.n_experts, cfg.moe.top_k
+    if capacity_factor is None:
+        capacity_factor = cfg.moe.capacity_factor
+    G = min(n_groups, B) if B * L % min(n_groups, B * L) == 0 else 1
+    G = max(G, 1)
+    T = (B * L) // G
+    xt = x.reshape(G, T, D)
+
+    logits = (xt.astype(jnp.float32)
+              @ p["router"].astype(jnp.float32))          # (G,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_v, gate_i = lax.top_k(probs, K)                  # (G,T,K)
+    gate_v = gate_v / jnp.clip(gate_v.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(gate_i, E, dtype=jnp.float32)  # (G,T,K,E)
+    # position of each (token, k) inside its expert's capacity buffer
+    pos = (jnp.cumsum(onehot.reshape(G, T * K, E), axis=1)
+           .reshape(G, T, K, E) - 1.0)
+    C = max(int(T * K / E * capacity_factor), 1)
+    keep = (pos < C) & (onehot > 0)
+    pos = jnp.clip(pos, 0, C - 1).astype(jnp.int32)
+
+    # (G,T,K,E,C) one-hot — contracted immediately; sharded over G and E.
+    # Built in the compute dtype: these are exact 0/1 (and gate) values,
+    # so bf16 storage is lossless for the mask and halves the dominant
+    # dispatch bytes (§Perf).
+    slot = jax.nn.one_hot(pos, C, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+    dispatch = slot.sum(2)                                # (G,T,E,C)
+    combine = jnp.einsum("gtke,gtkec->gtec",
+                         (gate_v[..., None] * onehot).astype(x.dtype), slot,
+                         preferred_element_type=jnp.float32)
+
+    ex_in = jnp.einsum("gtec,gtd->gecd", dispatch, xt)
+    h = jnp.einsum("gecd,edf->gecf", ex_in, p["wi"].astype(x.dtype))
+    g = jnp.einsum("gecd,edf->gecf", ex_in, p["wg"].astype(x.dtype))
+    h = jax.nn.silu(g) * h
+    ex_out = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype))
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ex_out)
+    out = out.reshape(B, L, D)
+
+    # Switch-style load-balance auxiliary loss
+    me = probs.mean(axis=(0, 1))                          # (E,)
+    ce = onehot.sum(2).mean(axis=(0, 1))                  # fraction routed
+    aux = cfg.moe.aux_loss_coef * E * jnp.sum(me * ce)
+
+    if cfg.moe.dense_residual:
+        out = out + mlp(p["dense"], x, gated=cfg.gated_mlp, act=jax.nn.silu)
+    return out, aux
+
+
+def moe_apply_sorted(p, x, cfg: ModelConfig, *, n_groups=1,
+                     capacity_factor=None):
+    """Sort-based MoE dispatch (see moe_apply docstring)."""
+    B, L, D = x.shape
+    E, K = cfg.moe.n_experts, cfg.moe.top_k
+    if capacity_factor is None:
+        capacity_factor = cfg.moe.capacity_factor
+    G = min(n_groups, B) if B * L % min(n_groups, B * L) == 0 else 1
+    G = max(G, 1)
+    T = (B * L) // G
+    C = max(int(T * K / E * capacity_factor), 1)
+    xt = x.reshape(G, T, D)
+
+    logits = (xt.astype(jnp.float32)
+              @ p["router"].astype(jnp.float32))            # (G,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_v, gate_i = lax.top_k(probs, K)                    # (G,T,K)
+    gate_v = gate_v / jnp.clip(gate_v.sum(-1, keepdims=True), 1e-9)
+
+    def route_group(xg, eg, gg):
+        # xg (T,D); eg,gg (T,K)
+        TK = T * K
+        flat_e = eg.reshape(TK)
+        order = jnp.argsort(flat_e, stable=True)            # group by expert
+        sorted_e = flat_e[order]
+        counts = jnp.bincount(flat_e, length=E)
+        starts = jnp.cumsum(counts) - counts                # (E,)
+        pos_in_e = jnp.arange(TK) - starts[sorted_e]
+        keep = pos_in_e < C
+        slot = sorted_e * C + jnp.clip(pos_in_e, 0, C - 1)  # (TK,)
+        # expert input gather: slot -> source token (dummy T for empty)
+        dest = jnp.where(keep, slot, E * C)      # out-of-range ⇒ dropped
+        src_tok = jnp.full((E * C,), T, jnp.int32)
+        src_tok = src_tok.at[dest].set((order // K).astype(jnp.int32),
+                                       mode="drop")
+        xg_pad = jnp.concatenate([xg, jnp.zeros((1, D), xg.dtype)], 0)
+        ex_in = xg_pad[src_tok].reshape(E, C, D)
+        # expert FFN (einsum over the stacked expert weights)
+        h = jnp.einsum("ecd,edf->ecf", ex_in, p["wi"].astype(xg.dtype))
+        g = jnp.einsum("ecd,edf->ecf", ex_in, p["wg"].astype(xg.dtype))
+        ex_out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h,
+                            p["wo"].astype(xg.dtype))
+        # combine: (t,k) -> its slot (or dummy)
+        slot_tk = jnp.full((TK,), E * C, jnp.int32)
+        slot_tk = slot_tk.at[order].set(jnp.where(keep, slot, E * C))
+        out_pad = jnp.concatenate(
+            [ex_out.reshape(E * C, D), jnp.zeros((1, D), xg.dtype)], 0)
+        picked = out_pad[slot_tk].reshape(T, K, D)
+        return jnp.einsum("tk,tkd->td", gg.astype(xg.dtype), picked)
+
+    out = jax.vmap(route_group)(xt, gate_i, gate_v).reshape(B, L, D)
+
+    onehot = jax.nn.one_hot(gate_i, E, dtype=jnp.float32)
+    me = probs.mean(axis=(0, 1))
+    ce = onehot.sum(2).mean(axis=(0, 1))
+    aux = cfg.moe.aux_loss_coef * E * jnp.sum(me * ce)
+    if cfg.moe.dense_residual:
+        out = out + mlp(p["dense"], x, gated=cfg.gated_mlp, act=jax.nn.silu)
+    return out, aux
+
+
+# ------------------------------------------------------------ Mamba2 SSD
+
+def _ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, nheads, conv_dim
+
+
+def mamba2_init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = _ssm_dims(cfg)
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + nheads
+    dt = jnp.exp(jax.random.uniform(ks[2], (nheads,))
+                 * (math.log(s.dt_max) - math.log(s.dt_min))
+                 + math.log(s.dt_min))
+    return {
+        "in_proj": dense_init(ks[0], d, d_in_proj),
+        "conv_w": uniform_scale(ks[1], (s.conv_width, conv_dim), s.conv_width),
+        "conv_b": jnp.zeros((conv_dim,)),
+        "dt_bias": jnp.log(jnp.expm1(dt)),          # inverse softplus
+        "A_log": jnp.log(jnp.arange(1, nheads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nheads,)),
+        "norm": rmsnorm_init(d_inner),
+        "out_proj": dense_init(ks[4], d_inner, d),
+    }
+
+
+def segsum(x):
+    """x (..., l) -> (..., l, l) lower-tri segment sums exp-able."""
+    l = x.shape[-1]
+    xx = jnp.broadcast_to(x[..., None, :], (*x.shape, l)).swapaxes(-1, -2)
+    mask = jnp.tril(jnp.ones((l, l), bool), -1)
+    xx = jnp.where(mask, xx, 0.0)
+    out = jnp.cumsum(xx, axis=-2)
+    return jnp.where(jnp.tril(jnp.ones((l, l), bool)), out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B_, C_, D, chunk, ssd_kernel=None):
+    """SSD scan (arXiv:2405.21060 listing 1), fp32 state math.
+
+    x (b,l,h,p) dt (b,l,h) A (h,) B_,C_ (b,l,g,n) D (h,)
+    Returns y (b,l,h,p) and final state (b,h,p,n).
+    """
+    b, l, h, p = x.shape
+    g, n = B_.shape[2], B_.shape[3]
+    x0 = x
+    rep = h // g
+
+    xb = (x * dt[..., None]).astype(jnp.float32)
+    dA = (dt * A).astype(jnp.float32)                     # (b,l,h)
+
+    # pad to a chunk multiple: x=0, dA=0, B=C=0 keeps state/outputs exact
+    l_orig = l
+    if l % chunk:
+        pad = chunk - l % chunk
+        padfn = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                                  [(0, 0)] * (t.ndim - 2))
+        xb, dA = padfn(xb), padfn(dA)
+        B_, C_ = padfn(B_), padfn(C_)
+        l += pad
+    nc = l // chunk
+
+    def ch(t, extra=()):                                  # chunkify
+        return t.reshape(b, nc, chunk, *t.shape[2:])
+
+    xc, dAc = ch(xb), ch(dA)
+    Bc = jnp.repeat(ch(B_.astype(jnp.float32)), rep, axis=3)  # (b,nc,cl,h,n)
+    Cc = jnp.repeat(ch(C_.astype(jnp.float32)), rep, axis=3)
+
+    dA_cs = jnp.cumsum(dAc, axis=2)                       # (b,nc,cl,h)
+
+    if ssd_kernel is not None:
+        Y_diag = ssd_kernel(xc, dAc, Bc, Cc)
+    else:
+        L = jnp.exp(segsum(dAc.transpose(0, 1, 3, 2)))    # (b,nc,h,cl,cl)
+        # exp(-inf) = 0 on the upper triangle, so L is already masked
+        scores = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc)
+        Y_diag = jnp.einsum("bchls,bchls,bcshp->bclhp", scores, L, xc)
+
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)   # (b,nc,cl,h)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", Bc, decay_states, xc)
+
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])             # (b,nc,h)
+
+    def step(carry, inp):
+        st_in = carry
+        st_chunk, dec = inp
+        out = st_in
+        st = st_in * dec[:, :, None, None] + st_chunk
+        return st, out
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = lax.scan(
+        step, init, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)              # (b,nc,h,p,n)
+
+    state_decay = jnp.exp(dA_cs)                          # (b,nc,cl,h)
+    Y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Cc, prev_states, state_decay)
+
+    y = (Y_diag + Y_off).reshape(b, l, h, p)[:, :l_orig]
+    y = y + (D[None, None, :, None] * x0.astype(jnp.float32))
+    return y.astype(x0.dtype), final
+
+
+def mamba2_apply(p, x, cfg: ModelConfig, *, cache=None, ssd_kernel=None):
+    """Full mamba2 block. cache = {"conv": (b, w-1, conv_dim),
+    "ssm": (b,h,p,n)} for single-token decode; None for train/prefill.
+    Returns (y, new_cache)."""
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _ssm_dims(cfg)
+    B, L, _ = x.shape
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + conv_dim]
+    dt = proj[..., d_inner + conv_dim:]
+    # causal depthwise conv over xbc
+    w = p["conv_w"].astype(x.dtype)                       # (width, conv_dim)
+    if cache is None:
+        pad = jnp.zeros((B, s.conv_width - 1, conv_dim), x.dtype)
+        xp = jnp.concatenate([pad, xbc], axis=1)
+        conv = sum(xp[:, i:i + L] * w[i] for i in range(s.conv_width))
+        new_conv_state = xp[:, -(s.conv_width - 1):] if s.conv_width > 1 else \
+            jnp.zeros((B, 0, conv_dim), x.dtype)
+    else:
+        xp = jnp.concatenate([cache["conv"].astype(x.dtype), xbc], axis=1)
+        conv = sum(xp[:, i:i + L] * w[i] for i in range(s.conv_width))
+        new_conv_state = xp[:, -(s.conv_width - 1):]
+    conv = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))
+
+    xs = conv[..., :d_inner].reshape(B, L, nheads, s.head_dim)
+    B_ = conv[..., d_inner:d_inner + s.n_groups * s.d_state] \
+        .reshape(B, L, s.n_groups, s.d_state)
+    C_ = conv[..., d_inner + s.n_groups * s.d_state:] \
+        .reshape(B, L, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"])                  # (B,L,H)
+    A = -jnp.exp(p["A_log"])                              # (H,)
+
+    if cache is None:
+        y, final = ssd_chunked(xs, dt, A, B_, C_, p["D"], s.chunk,
+                               ssd_kernel=ssd_kernel)
+        new_ssm = final
+    else:
+        # single-step recurrence (L == 1)
+        st = cache["ssm"].astype(jnp.float32)             # (B,H,P,N)
+        dt1 = dt[:, 0]                                    # (B,H)
+        dA = jnp.exp(dt1 * A[None, :])                    # (B,H)
+        xb = xs[:, 0].astype(jnp.float32) * dt1[..., None]
+        Bh = jnp.repeat(B_[:, 0], nheads // s.n_groups, 1).astype(jnp.float32)
+        Ch = jnp.repeat(C_[:, 0], nheads // s.n_groups, 1).astype(jnp.float32)
+        st = st * dA[..., None, None] + jnp.einsum("bhp,bhn->bhpn", xb, Bh)
+        y1 = jnp.einsum("bhpn,bhn->bhp", st, Ch) \
+            + p["D"][None, :, None] * xs[:, 0].astype(jnp.float32)
+        y = y1[:, None].astype(x.dtype)
+        new_ssm = st
+
+    y = y.reshape(B, L, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"conv": new_conv_state.astype(x.dtype),
+                 "ssm": new_ssm}

@@ -1,0 +1,84 @@
+"""Mamba2 (SSD) decoder-only backbone [arXiv:2405.21060]."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as ly
+from repro.models.layers import _ssm_dims
+
+
+def init(key, cfg: ModelConfig):
+    k_emb, k_layers = jax.random.split(key)
+    return {
+        "embed": ly.uniform_scale(k_emb, (cfg.vocab_size, cfg.d_model),
+                                  cfg.d_model),
+        "layers": jax.vmap(lambda k: {
+            "ln": ly.rmsnorm_init(cfg.d_model),
+            "mixer": ly.mamba2_init(k, cfg),
+        })(jax.random.split(k_layers, cfg.n_layers)),
+        "final_norm": ly.rmsnorm_init(cfg.d_model),
+    }
+
+
+def _scan_layers(params, cfg, x, cache, ssd_kernel=None):
+    """cache None (train) or stacked {"conv": (L,B,w-1,cd), "ssm": (L,B,H,P,N)}."""
+
+    def body(x, xs):
+        lp, c = xs
+        h = ly.rmsnorm(x, lp["ln"], cfg.norm_eps)
+        y, new_c = ly.mamba2_apply(lp["mixer"], h, cfg, cache=c,
+                                   ssd_kernel=ssd_kernel)
+        return x + y, new_c
+
+    if cache is None:
+        xs = (params["layers"], None)
+
+        def body_nc(x, lp):
+            h = ly.rmsnorm(x, lp["ln"], cfg.norm_eps)
+            y, new_c = ly.mamba2_apply(lp["mixer"], h, cfg,
+                                       ssd_kernel=ssd_kernel)
+            return x + y, new_c
+
+        x, new_cache = lax.scan(body_nc, x, params["layers"])
+    else:
+        x, new_cache = lax.scan(body, x, (params["layers"], cache))
+    return x, new_cache
+
+
+def forward(params, cfg: ModelConfig, batch, *, remat=False, moe_groups=1,
+            dtype=jnp.bfloat16, ssd_kernel=None):
+    x = params["embed"].astype(dtype)[batch["tokens"]]
+    x, _ = _scan_layers(params, cfg, x, None, ssd_kernel)
+    x = ly.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["embed"].T.astype(dtype), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, cache_len: int,
+               dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _ssm_dims(cfg)
+    L = cfg.n_layers
+    return {
+        "conv": jnp.zeros((L, batch_size, s.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((L, batch_size, nheads, s.head_dim, s.d_state),
+                         jnp.float32),
+    }
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, *, moe_groups=1,
+            dtype=jnp.bfloat16, ssd_kernel=None):
+    x = params["embed"].astype(dtype)[batch["tokens"]]
+    x, new_cache = _scan_layers(params, cfg, x, None, ssd_kernel)
+    x = ly.rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return x @ params["embed"].T.astype(dtype), new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos, *,
+                moe_groups=1, dtype=jnp.bfloat16):
+    x = params["embed"].astype(dtype)[tokens]
+    x, new_cache = _scan_layers(params, cfg, x, cache)
+    x = ly.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["embed"].T.astype(dtype), new_cache

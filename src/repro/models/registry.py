@@ -1,0 +1,142 @@
+"""Uniform model interface over all architecture families.
+
+``build_model(cfg)`` returns a ``Model`` whose methods are pure functions
+suitable for jit/pjit:
+
+  init(rng)                        -> params
+  forward(params, batch)           -> (logits, aux_loss)
+  loss(params, batch)              -> scalar (CE + aux)
+  init_cache(batch_size, cache_len)-> cache pytree
+  prefill(params, batch, cache)    -> (last_logits, cache)
+  decode(params, tokens, cache, pos)-> (logits, cache)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, mamba2, transformer
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": mamba2,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+
+def cross_entropy(logits, labels, n_prefix=0, chunk=None):
+    """Mean CE over the label positions. logits (B, P+L, V), labels (B, L).
+
+    ``chunk``: compute the log-softmax over sequence chunks via scan to
+    bound live logit memory (beyond-paper §Perf option)."""
+    if n_prefix:
+        logits = logits[:, n_prefix:]
+    logits = logits.astype(jnp.float32)
+    B, L, V = logits.shape
+
+    def ce(lg, lb):
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, lb[..., None], axis=-1)[..., 0]
+        return lse - gold
+
+    if chunk and L % chunk == 0 and L > chunk:
+        lg = logits.reshape(B, L // chunk, chunk, V).swapaxes(0, 1)
+        lb = labels.reshape(B, L // chunk, chunk).swapaxes(0, 1)
+        losses = jax.lax.map(lambda ab: ce(*ab), (lg, lb))
+        return losses.mean()
+    return ce(logits, labels).mean()
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    loss: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode: Callable
+
+
+def build_model(cfg: ModelConfig, *, moe_groups: int = 1,
+                remat: bool = False, dtype=jnp.bfloat16,
+                ce_chunk: int | None = None,
+                use_pallas: bool = False, mesh=None) -> Model:
+    """use_pallas: route SSM archs through the Pallas ssd_scan kernel
+    (TPU target; interpret mode on CPU — validated vs the jnp oracle in
+    tests/test_kernels.py).
+
+    mesh: enable shard_map expert parallelism for MoE layers (local
+    sort-based dispatch + one psum per layer — sharding/moe_ep.py)."""
+    fam = _FAMILIES[cfg.arch_type]
+    kern = {}
+    if mesh is not None and cfg.moe is not None:
+        from repro.sharding.moe_ep import make_shard_map_moe
+        kern["moe_kernel"] = make_shard_map_moe(mesh)
+    if use_pallas and cfg.arch_type in ("ssm", "hybrid"):
+        from repro.kernels import ops
+        kern["ssd_kernel"] = lambda *a: ops.ssd_intra_chunk(*a)
+    if use_pallas and cfg.arch_type in ("dense", "moe", "vlm") \
+            and cfg.attn_kind == "gqa" and cfg.window_size is None:
+        from repro.kernels import ops
+
+        def _fa(q, k, v, cap=None):
+            return ops.flash_attention(q, k, v, causal=True, cap=cap,
+                                       block_q=64, block_k=64)
+        kern["attn_kernel"] = _fa
+
+    def init(rng):
+        return fam.init(rng, cfg)
+
+    def forward(params, batch):
+        return fam.forward(params, cfg, batch, remat=remat,
+                           moe_groups=moe_groups, dtype=dtype, **kern)
+
+    def loss(params, batch):
+        logits, aux = forward(params, batch)
+        n_prefix = 0
+        if cfg.frontend == "vision" and "patch_embeds" in batch:
+            n_prefix = batch["patch_embeds"].shape[1]
+        return cross_entropy(logits, batch["labels"], n_prefix,
+                             chunk=ce_chunk) + aux
+
+    def init_cache(batch_size, cache_len):
+        return fam.init_cache(cfg, batch_size, cache_len, dtype=dtype)
+
+    def prefill(params, batch, cache):
+        return fam.prefill(params, cfg, batch, cache,
+                           moe_groups=moe_groups, dtype=dtype)
+
+    def decode(params, tokens, cache, pos):
+        return fam.decode_step(params, cfg, tokens, cache, pos,
+                               moe_groups=moe_groups, dtype=dtype)
+
+    return Model(cfg, init, forward, loss, init_cache, prefill, decode)
+
+
+def make_batch(cfg: ModelConfig, batch_size: int, seq_len: int, rng=None,
+               kind: str = "train", dtype=jnp.bfloat16):
+    """Concrete batch for tests/examples (synthetic)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(rng)
+    batch = {
+        "tokens": jax.random.randint(k1, (batch_size, seq_len), 0,
+                                     cfg.vocab_size, jnp.int32),
+        "labels": jax.random.randint(k2, (batch_size, seq_len), 0,
+                                     cfg.vocab_size, jnp.int32),
+    }
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.zeros(
+            (batch_size, cfg.n_frontend_tokens, cfg.d_model), dtype) + 0.01
+    if cfg.arch_type == "encdec":
+        batch["audio_frames"] = jnp.zeros(
+            (batch_size, cfg.n_enc_ctx, cfg.d_model), dtype) + 0.01
+    return batch

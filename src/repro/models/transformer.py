@@ -1,0 +1,368 @@
+"""Decoder-only transformer covering dense / GQA / MLA / MoE / VLM archs.
+
+Layers are stacked on a leading axis and traversed with lax.scan; per-layer
+heterogeneity (gemma2 local/global alternation) rides along as scanned
+boolean arrays. KV caches are stacked (L, B, S, KV, hd).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as ly
+
+
+def _layer_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": ly.rmsnorm_init(cfg.d_model),
+         "ln2": ly.rmsnorm_init(cfg.d_model)}
+    if cfg.attn_kind == "mla":
+        p["attn"] = ly.mla_init(ks[0], cfg)
+    else:
+        p["attn"] = ly.gqa_init(ks[0], cfg)
+    if cfg.moe is not None:
+        p["mlp"] = ly.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = ly.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp)
+    if cfg.attn_softcap is not None:     # gemma2 style post-norms
+        p["ln1b"] = ly.rmsnorm_init(cfg.d_model)
+        p["ln2b"] = ly.rmsnorm_init(cfg.d_model)
+    return p
+
+
+def init(key, cfg: ModelConfig):
+    k_emb, k_layers, k_head, k_proj = jax.random.split(key, 4)
+    params = {
+        "embed": ly.uniform_scale(k_emb, (cfg.vocab_size, cfg.d_model),
+                                  cfg.d_model),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg))(
+            jax.random.split(k_layers, cfg.n_layers)),
+        "final_norm": ly.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = ly.dense_init(k_head, cfg.d_model, cfg.vocab_size)
+    if cfg.frontend == "vision":
+        params["vis_proj"] = ly.dense_init(k_proj, cfg.d_model, cfg.d_model)
+    return params
+
+
+def _is_global(cfg: ModelConfig):
+    """(L,) bool: which layers use global (non-windowed) attention."""
+    idx = jnp.arange(cfg.n_layers)
+    if cfg.global_every:
+        return (idx % cfg.global_every) == (cfg.global_every - 1)
+    return jnp.ones((cfg.n_layers,), bool)
+
+
+def _block(cfg: ModelConfig, x, lp, is_glob, pos, *, cache_k=None,
+           cache_v=None, cache_pos=None, moe_groups=1, attn_kernel=None,
+           moe_kernel=None):
+    """One decoder block. Returns (x, new_k_entry_or_cache, new_v, aux)."""
+    h = ly.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.attn_kind == "mla":
+        attn_out, new_cache = ly.mla_attention(
+            lp["attn"], h, cfg, pos, cache=cache_k, cache_pos=cache_pos,
+            absorb=cfg.mla_absorb and cache_k is not None)
+        new_k, new_v = new_cache, None
+    else:
+        q, k, v = ly.gqa_qkv(lp["attn"], h, cfg)
+        cos, sin = ly.rope_tables(pos, cfg.resolved_head_dim, cfg.rope_theta)
+        q = ly.apply_rope(q, cos, sin)
+        k = ly.apply_rope(k, cos, sin)
+        if cache_k is not None:
+            cache_k = lax.dynamic_update_slice(
+                cache_k, k.astype(cache_k.dtype), (0, cache_pos, 0, 0))
+            cache_v = lax.dynamic_update_slice(
+                cache_v, v.astype(cache_v.dtype), (0, cache_pos, 0, 0))
+            kv_pos = jnp.arange(cache_k.shape[1])
+            valid = cache_pos + x.shape[1]
+            k_use, v_use = cache_k, cache_v
+        else:
+            kv_pos, valid = pos, None
+            k_use, v_use = k, v
+        if cfg.window_size is not None:
+            # ONE attention with a per-layer dynamic window: global layers
+            # get an unbounded window (2^30), local layers the sliding
+            # window. Halves attention compute vs computing both variants.
+            window = jnp.where(is_glob, jnp.int32(2 ** 30),
+                               jnp.int32(cfg.window_size))
+        else:
+            window = None
+        if attn_kernel is not None and cache_k is None and window is None:
+            # Pallas flash attention (blocked, scores stay in VMEM)
+            o = attn_kernel(q.swapaxes(1, 2), k_use.swapaxes(1, 2),
+                            v_use.swapaxes(1, 2),
+                            cap=cfg.attn_softcap).swapaxes(1, 2)
+        else:
+            o = ly.attention(q, k_use, v_use, q_pos=pos, kv_pos=kv_pos,
+                             window=window, cap=cfg.attn_softcap,
+                             kv_valid_len=valid)
+        attn_out = ly.gqa_out(lp["attn"], o)
+        new_k = cache_k if cache_k is not None else k
+        new_v = cache_v if cache_v is not None else v
+    if "ln1b" in lp:
+        attn_out = ly.rmsnorm(attn_out, lp["ln1b"], cfg.norm_eps)
+    x = x + attn_out
+
+    h = ly.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        if moe_kernel is not None:
+            mlp_out, aux = moe_kernel(lp["mlp"], h, cfg)
+        else:
+            mlp_out, aux = ly.moe_apply(lp["mlp"], h, cfg,
+                                        n_groups=moe_groups,
+                                        impl=cfg.moe_impl)
+    else:
+        mlp_out = ly.mlp(lp["mlp"], h, gated=cfg.gated_mlp,
+                         act=jax.nn.gelu if cfg.attn_softcap else jax.nn.silu)
+    if "ln2b" in lp:
+        mlp_out = ly.rmsnorm(mlp_out, lp["ln2b"], cfg.norm_eps)
+    return x + mlp_out, new_k, new_v, aux
+
+
+def embed_inputs(params, cfg: ModelConfig, batch, dtype=jnp.bfloat16):
+    """Token (+ frontend) embedding. Returns (x, n_prefix_tokens)."""
+    tok = params["embed"].astype(dtype)[batch["tokens"]]
+    if cfg.final_softcap is not None:   # gemma-family embedding scaling
+        tok = tok * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    n_prefix = 0
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        vis = batch["patch_embeds"].astype(dtype) @ params["vis_proj"].astype(dtype)
+        tok = jnp.concatenate([vis, tok], axis=1)
+        n_prefix = vis.shape[1]
+    return tok, n_prefix
+
+
+def _unembed(params, cfg: ModelConfig, x):
+    w = (params["embed"].T if cfg.tie_embeddings
+         else params["lm_head"]).astype(x.dtype)
+    logits = x @ w
+    if cfg.final_softcap is not None:
+        logits = ly.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits
+
+
+def forward(params, cfg: ModelConfig, batch, *, remat=False, moe_groups=1,
+            dtype=jnp.bfloat16, attn_kernel=None, moe_kernel=None):
+    """Teacher-forced full-sequence forward. Returns (logits, aux_loss)."""
+    x, _ = embed_inputs(params, cfg, batch, dtype)
+    L = x.shape[1]
+    pos = jnp.arange(L)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, is_glob = xs
+        x, _, _, a = _block(cfg, x, lp, is_glob, pos, moe_groups=moe_groups,
+                            attn_kernel=attn_kernel, moe_kernel=moe_kernel)
+        return (x, aux + a), None
+
+    f = jax.checkpoint(body) if remat else body
+    (x, aux), _ = lax.scan(f, (x, jnp.zeros((), jnp.float32)),
+                           (params["layers"], _is_global(cfg)))
+    x = ly.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x), aux
+
+
+def _paired(cfg: ModelConfig) -> bool:
+    """Local/global alternating archs (gemma2) use a PAIR layout for the
+    decode cache: local layers keep only a window-length ring buffer
+    (§Perf — 128× less cache memory/traffic at 500k context)."""
+    return (cfg.window_size is not None and cfg.global_every == 2
+            and cfg.n_layers % 2 == 0)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, cache_len: int,
+               dtype=jnp.bfloat16):
+    L = cfg.n_layers
+    if cfg.attn_kind == "mla":
+        w = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+        return {"latent": jnp.zeros((L, batch_size, cache_len, w), dtype)}
+    hd = cfg.resolved_head_dim
+    if _paired(cfg):
+        P = L // 2
+        wc = min(cache_len, cfg.window_size)
+        mk = lambda s: jnp.zeros((P, batch_size, s, cfg.n_kv_heads, hd), dtype)
+        return {"k_loc": mk(wc), "v_loc": mk(wc),
+                "k": mk(cache_len), "v": mk(cache_len)}
+    return {"k": jnp.zeros((L, batch_size, cache_len, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((L, batch_size, cache_len, cfg.n_kv_heads, hd), dtype)}
+
+
+def _ring_slot_pos(pos_max, W):
+    """Position stored in each ring slot when the newest position is
+    ``pos_max``: slot i holds the largest p ≤ pos_max with p % W == i."""
+    i = jnp.arange(W)
+    return pos_max - ((pos_max - i) % W)
+
+
+def _ring_attend(cfg, lp, x, pos, ck, cv, cache_pos):
+    """Decode-side attention for a LOCAL (sliding-window) layer against a
+    ring cache of length W. x (B, 1, d); positions ≥ 0 are valid."""
+    W = ck.shape[1]
+    q, k, v = ly.gqa_qkv(lp["attn"], x, cfg)
+    cos, sin = ly.rope_tables(pos, cfg.resolved_head_dim, cfg.rope_theta)
+    q, k = ly.apply_rope(q, cos, sin), ly.apply_rope(k, cos, sin)
+    slot = cache_pos % W
+    ck = lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+    cv = lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+    slot_pos = _ring_slot_pos(cache_pos, W)
+    B, Lq, H, hd = q.shape
+    KV = ck.shape[2]
+    qf = q.reshape(B, Lq, KV, H // KV, hd).astype(jnp.float32)
+    s = jnp.einsum("bqghd,bkgd->bghqk", qf, ck.astype(jnp.float32))
+    s = ly.softcap(s / (hd ** 0.5), cfg.attn_softcap)
+    valid = (slot_pos >= 0) & (slot_pos <= cache_pos)
+    s = jnp.where(valid[None, None, None, None, :], s, ly.MASK_VALUE)
+    p = jax.nn.softmax(s, axis=-1).astype(cv.dtype)
+    o = jnp.einsum("bghqk,bkgd->bqghd", p, cv).reshape(B, Lq, H, hd)
+    out = ly.gqa_out(lp["attn"], o)
+    return out, ck, cv
+
+
+def _decode_paired(params, cfg, x, cache, start_pos, moe_groups):
+    """Pair-scan decode: (local ring layer, global full layer) × L/2."""
+    Lq = x.shape[1]
+    pos = start_pos + jnp.arange(Lq)
+    pair_params = jax.tree.map(
+        lambda a: a.reshape(cfg.n_layers // 2, 2, *a.shape[1:]),
+        params["layers"])
+
+    def body(carry, xs):
+        x, aux = carry
+        lp_pair, ckl, cvl, ckg, cvg = xs
+        lp_loc = jax.tree.map(lambda a: a[0], lp_pair)
+        lp_glob = jax.tree.map(lambda a: a[1], lp_pair)
+        # local layer: ring-buffer window attention
+        h = ly.rmsnorm(x, lp_loc["ln1"], cfg.norm_eps)
+        attn, ckl, cvl = _ring_attend(cfg, lp_loc, h, pos, ckl, cvl,
+                                      start_pos)
+        if "ln1b" in lp_loc:
+            attn = ly.rmsnorm(attn, lp_loc["ln1b"], cfg.norm_eps)
+        x = x + attn
+        h = ly.rmsnorm(x, lp_loc["ln2"], cfg.norm_eps)
+        mo = ly.mlp(lp_loc["mlp"], h, gated=cfg.gated_mlp)
+        if "ln2b" in lp_loc:
+            mo = ly.rmsnorm(mo, lp_loc["ln2b"], cfg.norm_eps)
+        x = x + mo
+        # global layer: standard full-cache path
+        x, ckg, cvg, a = _block(cfg, x, lp_glob, jnp.bool_(True), pos,
+                                cache_k=ckg, cache_v=cvg,
+                                cache_pos=start_pos, moe_groups=moe_groups)
+        return (x, aux + a), (ckl, cvl, ckg, cvg)
+
+    (x, _), new = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                           (pair_params, cache["k_loc"], cache["v_loc"],
+                            cache["k"], cache["v"]))
+    new_cache = {"k_loc": new[0], "v_loc": new[1], "k": new[2], "v": new[3]}
+    x = ly.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x), new_cache
+
+
+def _with_cache(params, cfg, x, cache, start_pos, moe_groups):
+    Lq = x.shape[1]
+    pos = start_pos + jnp.arange(Lq)
+
+    def body(carry, xs):
+        x, aux = carry
+        if cfg.attn_kind == "mla":
+            lp, is_glob, c_lat = xs
+            x, new_lat, _, a = _block(cfg, x, lp, is_glob, pos,
+                                      cache_k=c_lat, cache_pos=start_pos,
+                                      moe_groups=moe_groups)
+            return (x, aux + a), new_lat
+        lp, is_glob, ck, cv = xs
+        x, nk, nv, a = _block(cfg, x, lp, is_glob, pos, cache_k=ck,
+                              cache_v=cv, cache_pos=start_pos,
+                              moe_groups=moe_groups)
+        return (x, aux + a), (nk, nv)
+
+    if cfg.attn_kind == "mla":
+        xs = (params["layers"], _is_global(cfg), cache["latent"])
+    else:
+        xs = (params["layers"], _is_global(cfg), cache["k"], cache["v"])
+    (x, aux), new = lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    new_cache = ({"latent": new} if cfg.attn_kind == "mla"
+                 else {"k": new[0], "v": new[1]})
+    x = ly.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x), new_cache, aux
+
+
+def _prefill_paired(params, cfg, x, cache, moe_groups):
+    """Prefill for the pair layout: local layers run windowed attention
+    over the prompt and keep only the last-W keys (ring order); global
+    layers fill the full cache."""
+    B, Lq, _ = x.shape
+    pos = jnp.arange(Lq)
+    W = cache["k_loc"].shape[2]
+    pair_params = jax.tree.map(
+        lambda a: a.reshape(cfg.n_layers // 2, 2, *a.shape[1:]),
+        params["layers"])
+    # ring slot i <- prompt position p_i (largest p ≤ Lq-1, p % W == i)
+    p_i = (Lq - 1) - ((Lq - 1 - jnp.arange(W)) % W)
+    gather_idx = jnp.clip(p_i, 0)        # invalid slots masked at decode
+
+    def body(carry, xs):
+        x, aux = carry
+        lp_pair, ckg, cvg = xs
+        lp_loc = jax.tree.map(lambda a: a[0], lp_pair)
+        lp_glob = jax.tree.map(lambda a: a[1], lp_pair)
+        h = ly.rmsnorm(x, lp_loc["ln1"], cfg.norm_eps)
+        q, k, v = ly.gqa_qkv(lp_loc["attn"], h, cfg)
+        cos, sin = ly.rope_tables(pos, cfg.resolved_head_dim, cfg.rope_theta)
+        q, k = ly.apply_rope(q, cos, sin), ly.apply_rope(k, cos, sin)
+        o = ly.attention(q, k, v, q_pos=pos, kv_pos=pos,
+                         window=cfg.window_size, cap=cfg.attn_softcap)
+        attn = ly.gqa_out(lp_loc["attn"], o)
+        if "ln1b" in lp_loc:
+            attn = ly.rmsnorm(attn, lp_loc["ln1b"], cfg.norm_eps)
+        x = x + attn
+        h = ly.rmsnorm(x, lp_loc["ln2"], cfg.norm_eps)
+        mo = ly.mlp(lp_loc["mlp"], h, gated=cfg.gated_mlp)
+        if "ln2b" in lp_loc:
+            mo = ly.rmsnorm(mo, lp_loc["ln2b"], cfg.norm_eps)
+        x = x + mo
+        ckl = k[:, gather_idx]
+        cvl = v[:, gather_idx]
+        x, nckg, ncvg, a = _block(cfg, x, lp_glob, jnp.bool_(True), pos,
+                                  cache_k=ckg, cache_v=cvg,
+                                  cache_pos=jnp.int32(0),
+                                  moe_groups=moe_groups)
+        return (x, aux + a), (ckl.astype(cache["k_loc"].dtype),
+                              cvl.astype(cache["v_loc"].dtype), nckg, ncvg)
+
+    (x, _), new = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                           (pair_params, cache["k"], cache["v"]))
+    new_cache = {"k_loc": new[0], "v_loc": new[1], "k": new[2], "v": new[3]}
+    x = ly.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x), new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, *, moe_groups=1,
+            dtype=jnp.bfloat16):
+    """Fill cache from a full prompt; returns (last-token logits, cache)."""
+    x, n_prefix = embed_inputs(params, cfg, batch, dtype)
+    if _paired(cfg) and "k_loc" in cache:
+        logits, cache = _prefill_paired(params, cfg, x, cache, moe_groups)
+        return logits[:, -1:], cache
+    logits, cache, _ = _with_cache(params, cfg, x, cache,
+                                   jnp.int32(0), moe_groups)
+    return logits[:, -1:], cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos, *,
+                moe_groups=1, dtype=jnp.bfloat16):
+    """One-token decode against the cache. tokens (B,1); pos scalar int32 =
+    number of tokens already in the cache."""
+    x = params["embed"].astype(dtype)[tokens]
+    if cfg.final_softcap is not None:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    if _paired(cfg) and "k_loc" in cache:
+        return _decode_paired(params, cfg, x, cache, pos, moe_groups)
+    logits, cache, _ = _with_cache(params, cfg, x, cache, pos, moe_groups)
+    return logits, cache

@@ -1,0 +1,74 @@
+"""Mixed-precision Adam (paper §2.1.3).
+
+State per parameter: bf16 model copy (what forward/backward consume) plus
+fp32 master weights, first and second moments ⇒ 2+4+4+4 = 14 bytes per
+parameter, reproducing the paper's checkpoint-size rule S_C ≈ 14·N.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray       # int32
+    master: Any             # fp32 master weights (pytree)
+    m: Any                  # fp32 first moment
+    v: Any                  # fp32 second moment
+
+
+def init(params_bf16) -> AdamState:
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params_bf16)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), master)
+    return AdamState(jnp.zeros((), jnp.int32), master, zeros,
+                     jax.tree.map(jnp.copy, zeros))
+
+
+def _schedule(cfg: AdamConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / cfg.warmup_steps, 1.0)
+    return cfg.lr * warm
+
+
+def apply(cfg: AdamConfig, grads, state: AdamState):
+    """Returns (new bf16 params, new AdamState)."""
+    step = state.step + 1
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = _schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, mw, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        update = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        mw = mw - lr * (update + cfg.weight_decay * mw)
+        return mw, m, v
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_mw = jax.tree.leaves(state.master)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    new = [upd(g, mw, m, v) for g, mw, m, v in
+           zip(flat_g, flat_mw, flat_m, flat_v)]
+    master = jax.tree.unflatten(tdef, [n[0] for n in new])
+    m = jax.tree.unflatten(tdef, [n[1] for n in new])
+    v = jax.tree.unflatten(tdef, [n[2] for n in new])
+    params = jax.tree.map(lambda p: p.astype(jnp.bfloat16), master)
+    return params, AdamState(step, master, m, v)

@@ -1,0 +1,175 @@
+"""Sharding rules: Megatron-style TP on the ``model`` axis, DP over
+(``pod``, ``data``), ZeRO-1 optimizer-state sharding over ``data``.
+
+All rules are DIVISIBILITY-AWARE: a dim that the model-axis size does not
+divide stays replicated (e.g. arctic's 56 Q heads shard on the fused
+head·dim axis of 7168 instead). Per-layer stacked leaves keep a leading
+layer axis that is never sharded.
+
+ZeRO-1 note (DESIGN.md §6): sharding optimizer state over ``data`` is the
+TPU-native analogue of FastPersist's byte-partitioning across DP ranks —
+each DP rank persists exactly the state it owns.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaf names whose LAST dim carries TP (column-parallel)
+_COL = {"wq", "wk", "wv", "wi", "wg", "in_proj", "wq_a", "wq_b",
+        "wkv_a", "wkv_b", "bq", "bk", "bv"}
+# leaf names whose SECOND-TO-LAST dim carries TP (row-parallel)
+_ROW = {"wo", "out_proj"}
+_REPLICATED = {"router", "conv_w", "conv_b", "dt_bias", "A_log", "D",
+               "norm", "ln", "ln1", "ln2", "ln1b", "ln2b", "ln_x",
+               "q_norm", "kv_norm", "final_norm", "enc_norm", "vis_proj",
+               "step"}
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "idx", last)))
+
+
+def _in_moe(path) -> bool:
+    names = [str(getattr(p, "key", "")) for p in path]
+    return "mlp" in names and False  # resolved by rank instead
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _msize(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def param_spec(path, shape, mesh: Mesh, n_stack_axes: int = 0) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    n_stack_axes: how many leading stacked-layer axes the leaf has (1 for
+    transformer/ssm stacks, 2 for zamba2 (group, layer) stacks, 0 for
+    unstacked leaves like embed)."""
+    name = _leaf_name(path)
+    m = _msize(mesh)
+    rank = len(shape)
+    body = shape[n_stack_axes:]
+    spec = [None] * rank
+
+    def ok(dim):
+        return body[dim] % m == 0
+
+    if name in _REPLICATED or rank == n_stack_axes or len(body) <= 1:
+        return P(*spec)
+    # MoE expert stacks: (..., E, d, ff) rank-3 bodies under wi/wg/wo —
+    # expert-parallel on the E axis
+    if name in ("wi", "wg", "wo") and len(body) == 3:
+        if body[0] % m == 0:
+            spec[n_stack_axes] = "model"
+        return P(*spec)
+    if name == "embed":
+        if body[0] % m == 0:
+            spec[n_stack_axes] = "model"     # vocab-parallel embedding
+        return P(*spec)
+    if name == "lm_head":
+        if body[-1] % m == 0:
+            spec[rank - 1] = "model"
+        return P(*spec)
+    if name in _COL:
+        if ok(-1):
+            spec[rank - 1] = "model"
+        return P(*spec)
+    if name in _ROW:
+        if ok(-2):
+            spec[rank - 2] = "model"
+        return P(*spec)
+    return P(*spec)
+
+
+def _stack_axes_for(path) -> int:
+    names = [str(getattr(p, "key", "")) for p in path]
+    if "ssm_layers" in names:      # zamba2: (group, layer, ...)
+        return 2
+    if "inv_norms" in names:
+        return 1
+    if any(n in ("layers", "enc_layers", "dec_layers") for n in names):
+        return 1
+    return 0
+
+
+def param_specs(params_tree, mesh: Mesh):
+    """PartitionSpec pytree for a model's parameters (shape structs ok)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf.shape, mesh,
+                                      _stack_axes_for(path)),
+        params_tree)
+
+
+def zero1_specs(params_tree, mesh: Mesh):
+    """Optimizer-state specs: TP spec + shard the first still-replicated,
+    divisible dim over ``data`` (ZeRO-1)."""
+    d = mesh.shape.get("data", 1)
+
+    def one(path, leaf):
+        base = param_spec(path, leaf.shape, mesh, _stack_axes_for(path))
+        spec = list(base) + [None] * (len(leaf.shape) - len(base))
+        for i, (s, dim) in enumerate(zip(spec, leaf.shape)):
+            if s is None and dim % d == 0 and dim >= d:
+                spec[i] = "data"
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def batch_specs(batch_tree, mesh: Mesh):
+    """Input batches: leading (global-)batch dim over (pod, data)."""
+    dp = dp_axes(mesh)
+
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        dpsize = 1
+        for a in dp:
+            dpsize *= mesh.shape[a]
+        if leaf.shape and leaf.shape[0] % dpsize == 0 and leaf.shape[0] > 1:
+            spec[0] = dp
+        return P(*spec)
+
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_specs(cache_tree, mesh: Mesh, batch_size: int):
+    """KV/SSM cache specs: batch dim over (pod, data) when divisible,
+    else the sequence dim over ``model`` (long-context single-request)."""
+    dp = dp_axes(mesh)
+    dpsize = 1
+    for a in dp:
+        dpsize *= mesh.shape[a]
+    m = _msize(mesh)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        # find the batch axis = first axis equal to batch_size after stacks
+        try:
+            b_ax = next(i for i, s in enumerate(shape) if s == batch_size)
+        except StopIteration:
+            b_ax = None
+        if b_ax is not None and batch_size % dpsize == 0 and batch_size > 1:
+            spec[b_ax] = dp
+        # shard the (large) sequence axis over model if present+divisible
+        name = _leaf_name(path)
+        if name in ("k", "v", "latent"):
+            seq_ax = (b_ax + 1) if b_ax is not None else len(shape) - 3
+            if shape[seq_ax] % m == 0 and shape[seq_ax] >= m * 128:
+                spec[seq_ax] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

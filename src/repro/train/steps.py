@@ -1,0 +1,71 @@
+"""jit-able train / prefill / decode steps over the uniform Model API."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adam
+from repro.optim.adam import AdamConfig, AdamState
+
+
+class TrainState(NamedTuple):
+    params: Any          # bf16 working copy (2 B/param)
+    opt: AdamState       # fp32 master + m + v (12 B/param) ⇒ 14 B total
+
+
+def init_train_state(model, rng) -> TrainState:
+    params_f32 = model.init(rng)
+    params = jax.tree.map(lambda p: p.astype(jnp.bfloat16)
+                          if p.dtype == jnp.float32 else p, params_f32)
+    return TrainState(params, adam.init(params))
+
+
+def make_train_step(model, opt_cfg: AdamConfig, gas: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    gas > 1: gradient accumulation — batch's leading dim is split into
+    ``gas`` microbatches scanned sequentially (paper §2.1.2)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(state: TrainState, batch):
+        if gas == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        else:
+            def micro(carry, mb):
+                acc, tot = carry
+                l, g = jax.value_and_grad(loss_fn)(state.params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, tot + l), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(gas, x.shape[0] // gas, *x.shape[1:]),
+                batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss_sum), _ = jax.lax.scan(micro, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / gas, grads)
+            loss = loss_sum / gas
+        params, opt = adam.apply(opt_cfg, grads, state.opt)
+        metrics = {"loss": loss.astype(jnp.float32), "step": opt.step}
+        return TrainState(params, opt), metrics
+
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, tokens, cache, pos):
+        logits, cache = model.decode(params, tokens, cache, pos)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return decode_step

@@ -1,0 +1,142 @@
+"""Training loop with FastPersist checkpointing as a first-class feature.
+
+Implements the paper's Fig. 4 execution schedules:
+
+  baseline  : train step → rank-0 synchronous torch.save-style write
+  fastpersist (no pipeline): train step → parallel NVMe write (sync)
+  fastpersist (pipeline)   : write overlaps the next iteration's
+                             forward/backward; we block before the next
+                             optimizer step (here: before dispatching the
+                             next train_step, which fuses F+B+O) until the
+                             previous checkpoint committed.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.baseline import BaselineCheckpointer
+from repro.core.checkpointer import (FastPersistCheckpointer,
+                                     FastPersistConfig)
+from repro.core.pipeline import PipelinedCheckpointer
+from repro.core.retention import RetentionManager, RetentionPolicy
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.models.registry import build_model
+from repro.optim.adam import AdamConfig
+from repro.train.steps import TrainState, init_train_state, make_train_step
+
+
+@dataclass
+class CheckpointPolicy:
+    directory: str
+    every: int = 1                     # paper: per-iteration
+    mode: str = "fastpersist"          # fastpersist | baseline | none
+    pipeline: bool = True
+    fp: FastPersistConfig = field(default_factory=FastPersistConfig)
+    retention: Optional[RetentionPolicy] = None   # None = keep everything
+
+
+@dataclass
+class TrainerConfig:
+    model: ModelConfig
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    gas: int = 1
+    seed: int = 0
+    opt: AdamConfig = field(default_factory=AdamConfig)
+    checkpoint: Optional[CheckpointPolicy] = None
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig):
+        self.cfg = cfg
+        self.model = build_model(cfg.model)
+        self.data = TokenStream(DataConfig(cfg.model.vocab_size,
+                                           cfg.seq_len, cfg.global_batch,
+                                           cfg.seed))
+        self.train_step = jax.jit(
+            make_train_step(self.model, cfg.opt, cfg.gas), donate_argnums=0)
+        self.state: Optional[TrainState] = None
+        self._ckpt = None
+        self._pipe = None
+        self.iter_times = []
+        self.ckpt_stall = 0.0
+        if cfg.checkpoint and cfg.checkpoint.mode != "none":
+            self._setup_checkpointer(cfg.checkpoint)
+
+    def _setup_checkpointer(self, pol: CheckpointPolicy):
+        if pol.mode == "baseline":
+            self._ckpt = BaselineCheckpointer(pol.directory)
+        else:
+            self._ckpt = FastPersistCheckpointer(pol.directory, pol.fp)
+        if pol.pipeline and pol.mode == "fastpersist":
+            self._pipe = PipelinedCheckpointer(self._ckpt)
+        self._retain = (RetentionManager(pol.directory, pol.retention)
+                        if pol.retention else None)
+
+    # ------------------------------------------------------------ state
+    def init_state(self, rng=None):
+        rng = rng if rng is not None else jax.random.PRNGKey(self.cfg.seed)
+        self.state = init_train_state(self.model, rng)
+        return self.state
+
+    def restore(self, step: Optional[int] = None) -> int:
+        """Resume from the most recent checkpoint. Returns the step."""
+        assert isinstance(self._ckpt, FastPersistCheckpointer)
+        step = step if step is not None else self._ckpt.latest_step()
+        if step is None:
+            return 0
+        if self.state is None:
+            self.init_state()
+        restored, manifest = self._ckpt.load(step, like=self.state)
+        self.state = jax.tree.map(jax.numpy.asarray, restored)
+        extras = manifest.extras
+        if "data" in extras:
+            self.data = TokenStream.from_state(self.data.cfg, extras["data"])
+        return int(extras.get("step", step))
+
+    # ------------------------------------------------------------- loop
+    def _save(self, step: int):
+        extras = {"step": step, "data": self.data.state()}
+        if self._pipe is not None:
+            self._pipe.submit(self.state, step, extras)
+        elif isinstance(self._ckpt, FastPersistCheckpointer):
+            self._ckpt.save(self.state, step, extras)
+        else:
+            self._ckpt.save(self.state, step)
+
+    def run(self, start_step: int = 0):
+        if self.state is None:
+            self.init_state()
+        pol = self.cfg.checkpoint
+        metrics = {}
+        for step in range(start_step, self.cfg.steps):
+            t0 = time.perf_counter()
+            batch = next(self.data)
+            if self._pipe is not None:
+                # §4.3 sync point: the previous checkpoint must commit
+                # before the optimizer may update the params it snapshots.
+                t_w = time.perf_counter()
+                self._pipe.wait()
+                self.ckpt_stall += time.perf_counter() - t_w
+            self.state, metrics = self.train_step(self.state, batch)
+            if pol and pol.mode != "none" and (step + 1) % pol.every == 0:
+                jax.block_until_ready(self.state.params)
+                self._save(step + 1)
+                if self._retain is not None:
+                    self._retain.after_commit()
+            self.iter_times.append(time.perf_counter() - t0)
+            if (step + 1) % self.cfg.log_every == 0:
+                print(f"step {step+1}: loss={float(metrics['loss']):.4f} "
+                      f"it={np.mean(self.iter_times[-self.cfg.log_every:])*1e3:.1f}ms")
+        if self._pipe is not None:
+            self._pipe.close()
+        jax.block_until_ready(self.state.params)
+        return self.state, metrics

@@ -1,0 +1,107 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baseline import BaselineCheckpointer
+from repro.core.checkpointer import (FastPersistCheckpointer,
+                                     FastPersistConfig)
+from repro.core.partition import Topology
+from repro.core.serializer import serialize
+from repro.core.writer import WriterConfig
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 4)
+    return {
+        "params": {"w1": jax.random.normal(ks[0], (64, 128), jnp.bfloat16),
+                   "w2": jax.random.normal(ks[1], (128, 32))},
+        "opt": {"m": jax.random.normal(ks[2], (64, 128)),
+                "v": jnp.abs(jax.random.normal(ks[3], (64, 128)))},
+        "step": jnp.int32(41),
+    }
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+@pytest.mark.parametrize("n_writers", [1, 2, 5, 16])
+def test_sharded_roundtrip(tmp_path, n_writers):
+    cfg = FastPersistConfig(
+        strategy="replica",
+        topology=Topology(dp_degree=n_writers, ranks_per_node=4))
+    fp = FastPersistCheckpointer(str(tmp_path), cfg)
+    state = _state()
+    stats = fp.save(state, 1, extras={"k": 1})
+    assert stats.n_writers == n_writers
+    loaded, manifest = fp.load(1, like=state)
+    _assert_tree_equal(loaded, state)
+    assert manifest.extras["k"] == 1
+
+
+def test_single_file_roundtrip(tmp_path):
+    cfg = FastPersistConfig(
+        strategy="replica", single_file=True,
+        topology=Topology(dp_degree=4, ranks_per_node=2),
+        writer=WriterConfig(use_direct=False))
+    fp = FastPersistCheckpointer(str(tmp_path), cfg)
+    state = _state(2)
+    fp.save(state, 7)
+    loaded, _ = fp.load(7, like=state)
+    _assert_tree_equal(loaded, state)
+    assert os.path.exists(str(tmp_path / "ckpt_00000007" / "checkpoint.bin"))
+
+
+def test_fastpersist_equals_baseline_content(tmp_path):
+    """FastPersist preserves the serialized stream exactly (same bytes a
+    baseline writer would persist)."""
+    state = _state(3)
+    fp = FastPersistCheckpointer(
+        str(tmp_path / "fp"),
+        FastPersistConfig(strategy="replica",
+                          topology=Topology(dp_degree=3)))
+    bl = BaselineCheckpointer(str(tmp_path / "bl"))
+    fp.save(state, 1)
+    bl.save(state, 1)
+    a, _ = fp.load(1, like=state)
+    b, _ = bl.load(1, like=state)
+    _assert_tree_equal(a, b)
+
+
+def test_latest_step(tmp_path):
+    fp = FastPersistCheckpointer(str(tmp_path), FastPersistConfig(
+        strategy="replica", topology=Topology(dp_degree=1)))
+    assert fp.latest_step() is None
+    st = _state()
+    fp.save(st, 3)
+    fp.save(st, 11)
+    assert fp.latest_step() == 11
+
+
+def test_plan_cached_at_setup(tmp_path):
+    """Paper §4.2: partitioning is computed once before training."""
+    fp = FastPersistCheckpointer(str(tmp_path), FastPersistConfig(
+        strategy="replica", topology=Topology(dp_degree=2)))
+    st = _state()
+    manifest, buffers = serialize(st)
+    p1 = fp.plan_for(manifest.total_bytes)
+    p2 = fp.plan_for(manifest.total_bytes)
+    assert p1 is p2
+
+
+def test_shard_sizes_balanced(tmp_path):
+    fp = FastPersistCheckpointer(str(tmp_path), FastPersistConfig(
+        strategy="replica", topology=Topology(dp_degree=7)))
+    st = _state()
+    fp.save(st, 1)
+    d = fp.path(1)
+    sizes = [os.path.getsize(os.path.join(d, f))
+             for f in sorted(os.listdir(d)) if f.startswith("shard_")]
+    assert len(sizes) == 7
+    assert max(sizes) - min(sizes) <= 1

@@ -1,0 +1,59 @@
+"""The trip-count-aware HLO cost parser vs hand-counted programs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import aggregate
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_plain_matmul_flops():
+    A = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    B = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    r = aggregate(_compile(lambda a, b: a @ b, A, B))
+    assert r["flops"] == pytest.approx(2 * 128 * 256 * 512, rel=0.01)
+
+
+def test_scan_multiplies_by_trip_count():
+    """THE reason this parser exists: XLA counts loop bodies once."""
+    W = jax.ShapeDtypeStruct((8, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+
+    def f(ws, x):
+        y, _ = jax.lax.scan(lambda c, w: (c @ w, None), x, ws)
+        return y
+
+    r = aggregate(_compile(f, W, x))
+    assert r["flops"] == pytest.approx(2 * 32 * 64 * 64 * 8, rel=0.01)
+
+
+def test_nested_scan():
+    W = jax.ShapeDtypeStruct((3, 4, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((16, 64), jnp.float32)
+
+    def f(ws, x):
+        def outer(c, wg):
+            c2, _ = jax.lax.scan(lambda c, w: (c @ w, None), c, wg)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y
+
+    r = aggregate(_compile(f, W, x))
+    assert r["flops"] == pytest.approx(2 * 16 * 64 * 64 * 12, rel=0.01)
+
+
+def test_batched_dot_contracting_dims():
+    A = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    B = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+    r = aggregate(_compile(lambda a, b: jnp.einsum("bij,bjk->bik", a, b),
+                           A, B))
+    assert r["flops"] == pytest.approx(2 * 4 * 32 * 64 * 16, rel=0.01)
+
+
+def test_bytes_nonzero_and_bounded():
+    A = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    r = aggregate(_compile(lambda a: a + 1.0, A))
+    assert 2 * A.size * 4 * 0.9 <= r["bytes"] <= 6 * A.size * 4

@@ -1,0 +1,28 @@
+"""The train launcher CLI end-to-end (subprocess)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_train_cli_with_checkpointing(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    args = [sys.executable, "-m", "repro.launch.train",
+            "--arch", "stablelm_1_6b", "--reduced", "--steps", "3",
+            "--batch", "2", "--seq", "16", "--ckpt-dir", str(tmp_path),
+            "--ckpt-mode", "fastpersist", "--every", "1", "--dp", "2"]
+    r = subprocess.run(args, env=env, capture_output=True, text=True,
+                       timeout=500)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "done: loss=" in r.stdout
+    assert any(n.startswith("ckpt_") for n in os.listdir(tmp_path))
+
+    # restore path
+    r2 = subprocess.run(args + ["--restore", "--steps", "3"], env=env,
+                        capture_output=True, text=True, timeout=500)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "restored from step 3" in r2.stdout

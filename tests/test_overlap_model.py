@@ -1,0 +1,69 @@
+"""Eq. 1 / Eq. 2 / Table 1 analytic-model tests."""
+import pytest
+
+from repro.configs import get_paper_config
+from repro.core.overlap import (IterationModel, checkpoint_seconds,
+                                effective_overhead, estimate_iteration,
+                                recovery_overhead_gpu_seconds,
+                                required_bandwidth)
+from repro.core.partition import Topology
+
+
+def test_eq1_required_bandwidth():
+    it = IterationModel(t_forward=1.0, t_backward=2.0, t_optimizer=0.2)
+    assert required_bandwidth(30e9, it) == pytest.approx(10e9)
+
+
+def test_eq1_monotonic_in_model_size():
+    """Table 1: B_C grows with checkpoint size for fixed iteration."""
+    it = IterationModel(0.5, 1.0, 0.1)
+    sizes = [10e9, 17e9, 35e9, 88e9]
+    bws = [required_bandwidth(s, it) for s in sizes]
+    assert bws == sorted(bws)
+
+
+def test_eq2_recovery():
+    # n=100 iterations, 1024 GPUs, 10 s/iter -> 512k GPU-seconds
+    assert recovery_overhead_gpu_seconds(100, 1024, 10.0) == \
+        pytest.approx(100 / 2 * 1024 * 10.0)
+    # minimized at n=1 (the paper's motivation for per-iteration ckpt)
+    assert recovery_overhead_gpu_seconds(1, 1024, 10.0) < \
+        recovery_overhead_gpu_seconds(2, 1024, 10.0)
+
+
+def test_pipelined_overhead_hidden_when_bandwidth_sufficient():
+    it = IterationModel(1.0, 2.0, 0.15)
+    assert effective_overhead(it, ckpt_seconds=2.5, pipelined=True) == 0.0
+    assert effective_overhead(it, ckpt_seconds=2.5, pipelined=False) > 0.7
+
+
+def test_pipelined_partial_stall():
+    it = IterationModel(1.0, 2.0, 0.15)
+    ov = effective_overhead(it, ckpt_seconds=3.5, pipelined=True)
+    assert 0.0 < ov < effective_overhead(it, 3.5, pipelined=False)
+
+
+def test_gas_reduces_overhead():
+    """§2.1.2: higher GA ⇒ longer compute ⇒ smaller relative overhead."""
+    cfg = get_paper_config("gpt3_1_3b")
+    it1 = estimate_iteration(cfg, 512, 2048, n_accel=64, gas=1)
+    it8 = estimate_iteration(cfg, 512, 2048, n_accel=64, gas=8)
+    ck = checkpoint_seconds(cfg.checkpoint_bytes(),
+                            Topology(dp_degree=4, ranks_per_node=16))
+    assert effective_overhead(it8, ck, True) <= \
+        effective_overhead(it1, ck, True)
+
+
+def test_table1_bandwidths_within_hardware_reach():
+    """Paper Table 1: required B_C is below the aggregate SSD bandwidth
+    of the node count that config runs on."""
+    rows = [("gpt3_0_7b", 256, 16), ("gpt3_1_3b", 512, 64),
+            ("gpt3_2_7b", 512, 128), ("gpt3_6_7b", 1024, 512),
+            ("gpt3_13b", 1024, 1024)]
+    for key, dp, nodes in rows:
+        cfg = get_paper_config(key)
+        it = estimate_iteration(cfg, dp, 2048, n_accel=dp,
+                                peak_flops=125e12, mfu=0.4)
+        bc = required_bandwidth(cfg.checkpoint_bytes(), it)
+        available = nodes * 24.8e9
+        assert bc < available, (key, bc / 1e9, available / 1e9)

@@ -1,0 +1,84 @@
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import (Topology, make_plan,
+                                  predict_write_seconds, select_writers)
+
+
+@settings(deadline=None, max_examples=200)
+@given(total=st.integers(0, 10**9),
+       dp=st.integers(1, 128),
+       rpn=st.integers(1, 16),
+       strategy=st.sampled_from(["replica", "socket", "auto"]),
+       wpn=st.integers(1, 4))
+def test_plan_invariants(total, dp, rpn, strategy, wpn):
+    """Paper §4.2: full coverage, disjoint extents, ≤1-byte imbalance —
+    for every topology and strategy."""
+    topo = Topology(dp_degree=dp, ranks_per_node=rpn)
+    plan = make_plan(total, topo, strategy, wpn)
+    plan.validate()      # asserts coverage, disjointness, balance
+    assert all(0 <= e.rank < dp for e in plan.extents)
+    assert len(set(e.rank for e in plan.extents)) == len(plan.extents)
+
+
+def test_replica_uses_all_ranks():
+    topo = Topology(dp_degree=8, ranks_per_node=4)
+    plan = make_plan(1000, topo, "replica")
+    assert sorted(plan.writers) == list(range(8))
+
+
+def test_socket_spans_all_nodes():
+    """Paper: same-node subsets under-utilize other nodes' SSDs."""
+    topo = Topology(dp_degree=16, ranks_per_node=8)   # 2 nodes
+    writers = select_writers(topo, "socket", writers_per_node=2)
+    nodes = {topo.node_of(r) for r in writers}
+    assert nodes == {0, 1}
+    assert len(writers) == 4
+
+
+def test_socket_writer_count_bounded():
+    topo = Topology(dp_degree=64, ranks_per_node=16)  # 4 nodes
+    writers = select_writers(topo, "socket", writers_per_node=2)
+    per_node = {}
+    for r in writers:
+        per_node[topo.node_of(r)] = per_node.get(topo.node_of(r), 0) + 1
+    assert all(v <= 2 for v in per_node.values())
+
+
+def test_single_rank_plan():
+    plan = make_plan(12345, Topology(dp_degree=1), "replica")
+    assert len(plan.extents) == 1
+    assert plan.extents[0].length == 12345
+
+
+def test_auto_beats_or_ties_fixed_strategies():
+    topo = Topology(dp_degree=128, ranks_per_node=16)
+    total = 100 * 10**9     # 100 GB checkpoint
+    t_auto = predict_write_seconds(topo, total,
+                                   select_writers(topo, "auto", total_bytes=total))
+    for s, w in [("replica", 2), ("socket", 1), ("socket", 2), ("socket", 4)]:
+        t = predict_write_seconds(topo, total, select_writers(topo, s, w))
+        assert t_auto <= t + 1e-12
+
+
+def test_more_nodes_scale_bandwidth():
+    """Fig. 8/9(b): aggregate bandwidth grows with node count."""
+    total = 10 * 10**9
+    t1 = predict_write_seconds(Topology(16, 16), total,
+                               select_writers(Topology(16, 16), "socket", 2))
+    t8 = predict_write_seconds(Topology(128, 16), total,
+                               select_writers(Topology(128, 16), "socket", 2))
+    assert t8 < t1 / 4      # near-linear scaling to 8 nodes
+
+
+def test_contention_hurts_replica_at_scale():
+    """Fig. 8: Replica with 16 writers/node is slower than Socket with 2
+    per node for the same checkpoint (per-writer size shrinks +
+    contention grows)."""
+    topo = Topology(dp_degree=128, ranks_per_node=16)
+    total = 10 * 10**9
+    t_replica = predict_write_seconds(topo, total,
+                                      select_writers(topo, "replica"))
+    t_socket = predict_write_seconds(topo, total,
+                                     select_writers(topo, "socket", 2))
+    assert t_socket < t_replica

@@ -1,0 +1,126 @@
+"""§Perf variants must be EXACTLY equivalent to their baselines (the
+hillclimbing contract: keep the speedup, keep correctness)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.registry import build_model, make_batch
+
+
+def _decode_check(cfg, tol=2e-3):
+    m = build_model(cfg, dtype=jnp.float32)
+    params = m.init(jax.random.PRNGKey(0))
+    B, L = 2, 16
+    batch = make_batch(cfg, B, L)
+    logits, _ = jax.jit(m.forward)(params, batch)
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :L - 1]
+    cache = m.init_cache(B, L + 4)
+    _, cache = jax.jit(m.prefill)(params, pre, cache)
+    dec, _ = jax.jit(m.decode)(params, batch["tokens"][:, L - 1:L], cache,
+                               jnp.int32(L - 1))
+    return float(jnp.max(jnp.abs(dec[:, 0] - logits[:, -1])))
+
+
+def test_mla_absorbed_decode_equals_naive():
+    base = reduced(get_config("minicpm3_4b"))
+    for absorb in (False, True):
+        cfg = dataclasses.replace(base, mla_absorb=absorb)
+        assert _decode_check(cfg) < 2e-3, f"absorb={absorb}"
+
+
+def test_mla_absorbed_same_logits_as_naive():
+    base = reduced(get_config("minicpm3_4b"))
+    outs = []
+    for absorb in (False, True):
+        cfg = dataclasses.replace(base, mla_absorb=absorb)
+        m = build_model(cfg, dtype=jnp.float32)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = make_batch(cfg, 2, 12)
+        pre = dict(batch)
+        pre["tokens"] = batch["tokens"][:, :11]
+        cache = m.init_cache(2, 16)
+        _, cache = jax.jit(m.prefill)(params, pre, cache)
+        dec, _ = jax.jit(m.decode)(params, batch["tokens"][:, 11:12],
+                                   cache, jnp.int32(11))
+        outs.append(np.asarray(dec))
+    np.testing.assert_allclose(outs[0], outs[1], atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["qwen3_moe_235b", "arctic_480b"])
+def test_moe_sorted_equals_einsum_when_capacity_ample(arch):
+    base = reduced(get_config(arch))
+    base = dataclasses.replace(
+        base, moe=dataclasses.replace(base.moe,
+                                      capacity_factor=float(base.moe.n_experts)))
+    outs = {}
+    for impl in ("einsum", "sorted"):
+        cfg = dataclasses.replace(base, moe_impl=impl)
+        m = build_model(cfg, dtype=jnp.float32)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = make_batch(cfg, 2, 32)
+        logits, _ = jax.jit(m.forward)(params, batch)
+        outs[impl] = np.asarray(logits)
+    np.testing.assert_allclose(outs["einsum"], outs["sorted"], atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_moe_group_count_does_not_change_routing_without_drops():
+    base = reduced(get_config("qwen3_moe_235b"))
+    base = dataclasses.replace(
+        base, moe=dataclasses.replace(base.moe,
+                                      capacity_factor=float(base.moe.n_experts)))
+    outs = []
+    for g in (1, 2, 4):
+        m = build_model(base, moe_groups=g, dtype=jnp.float32)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = make_batch(base, 4, 16)
+        logits, _ = jax.jit(m.forward)(params, batch)
+        outs.append(np.asarray(logits))
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(outs[0], outs[2], atol=1e-4, rtol=1e-4)
+
+
+def test_gemma2_ring_cache_long_decode():
+    """Ring cache must match full forward even when the decode position
+    is far past the window (multiple wraps)."""
+    cfg = reduced(get_config("gemma2_9b"))   # window=8, 2 layers
+    m = build_model(cfg, dtype=jnp.float32)
+    params = m.init(jax.random.PRNGKey(0))
+    B, L = 2, 30                             # > 3 window wraps
+    batch = make_batch(cfg, B, L)
+    logits, _ = jax.jit(m.forward)(params, batch)
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :L - 1]
+    cache = m.init_cache(B, L + 2)
+    assert cache["k_loc"].shape[2] == cfg.window_size   # ring, not full
+    _, cache = jax.jit(m.prefill)(params, pre, cache)
+    dec, _ = jax.jit(m.decode)(params, batch["tokens"][:, L - 1:L], cache,
+                               jnp.int32(L - 1))
+    err = float(jnp.max(jnp.abs(dec[:, 0] - logits[:, -1])))
+    assert err < 2e-3, err
+
+
+def test_gemma2_sequential_ring_decode():
+    """Several sequential decode steps through ring wrap-around."""
+    cfg = reduced(get_config("gemma2_9b"))
+    m = build_model(cfg, dtype=jnp.float32)
+    params = m.init(jax.random.PRNGKey(0))
+    B, L, extra = 1, 12, 6
+    batch = make_batch(cfg, B, L + extra)
+    full, _ = jax.jit(m.forward)(params, batch)
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :L]
+    cache = m.init_cache(B, L + extra + 2)
+    _, cache = jax.jit(m.prefill)(params, pre, cache)
+    decode = jax.jit(m.decode)
+    for i in range(extra):
+        tok = batch["tokens"][:, L + i:L + i + 1]
+        dec, cache = decode(params, tok, cache, jnp.int32(L + i))
+        want = full[:, L + i]
+        err = float(jnp.max(jnp.abs(dec[:, 0] - want)))
+        assert err < 2e-3, (i, err)

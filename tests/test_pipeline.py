@@ -1,0 +1,96 @@
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.checkpointer import FastPersistCheckpointer, \
+    FastPersistConfig
+from repro.core.partition import Topology
+from repro.core.pipeline import PipelinedCheckpointer
+
+
+class SlowCheckpointer:
+    """Records call ordering; sleeps to expose overlap."""
+
+    def __init__(self, delay=0.05):
+        self.delay = delay
+        self.saved = []
+
+    def save(self, state, step, extras=None):
+        time.sleep(self.delay)
+        self.saved.append((step, state))
+        return step
+
+
+def test_overlap_and_ordering():
+    inner = SlowCheckpointer()
+    with PipelinedCheckpointer(inner) as pc:
+        for step in range(3):
+            pc.wait()                      # §4.3: before optimizer
+            pc.submit({"w": step}, step)   # after optimizer
+    assert [s for s, _ in inner.saved] == [0, 1, 2]
+    assert pc.stats.committed == 3
+
+
+def test_wait_blocks_until_commit():
+    inner = SlowCheckpointer(delay=0.2)
+    pc = PipelinedCheckpointer(inner)
+    pc.submit({"w": 0}, 0)
+    t0 = time.perf_counter()
+    pc.wait()
+    assert time.perf_counter() - t0 > 0.1
+    assert inner.saved and inner.saved[0][0] == 0
+    pc.close()
+
+
+def test_main_thread_not_blocked_during_write():
+    """The write must overlap main-thread 'compute' (Fig. 4d)."""
+    inner = SlowCheckpointer(delay=0.3)
+    pc = PipelinedCheckpointer(inner)
+    pc.submit({"w": 1}, 1)
+    t0 = time.perf_counter()
+    # simulated forward+backward of the next iteration
+    time.sleep(0.05)
+    overlap_work = time.perf_counter() - t0
+    assert overlap_work < 0.2          # we were NOT blocked by the write
+    pc.wait()
+    pc.close()
+    assert pc.stats.committed == 1
+
+
+def test_error_propagates_on_wait():
+    class Failing:
+        def save(self, *a, **k):
+            raise IOError("disk gone")
+
+    pc = PipelinedCheckpointer(Failing())
+    pc.submit({"w": 0}, 0)
+    with pytest.raises(IOError):
+        pc.wait()
+    pc._q.put(None)
+
+
+def test_pipelined_writes_real_checkpointer(tmp_path):
+    fp = FastPersistCheckpointer(str(tmp_path), FastPersistConfig(
+        strategy="replica", topology=Topology(dp_degree=2)))
+    state = {"w": jnp.arange(1000, dtype=jnp.float32)}
+    with PipelinedCheckpointer(fp) as pc:
+        for step in range(1, 4):
+            pc.wait()
+            pc.submit(state, step, {"step": step})
+    loaded, mf = fp.load(3, like=state)
+    np.testing.assert_array_equal(np.asarray(loaded["w"]),
+                                  np.asarray(state["w"]))
+    assert mf.extras["step"] == 3
+
+
+def test_stall_accounting():
+    inner = SlowCheckpointer(delay=0.1)
+    pc = PipelinedCheckpointer(inner)
+    pc.submit({}, 0)
+    pc.wait()
+    assert pc.stats.stall_seconds > 0.0
+    assert pc.stats.write_seconds >= 0.1
+    pc.close()

@@ -1,0 +1,64 @@
+"""Checkpoint retention/GC policy."""
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.checkpointer import FastPersistCheckpointer, \
+    FastPersistConfig
+from repro.core.partition import Topology
+from repro.core.retention import (RetentionManager, RetentionPolicy,
+                                  collect, collectable)
+from repro.train.trainer import CheckpointPolicy, Trainer, TrainerConfig
+
+
+def _write_ckpts(tmp_path, steps):
+    fp = FastPersistCheckpointer(str(tmp_path), FastPersistConfig(
+        strategy="replica", topology=Topology(dp_degree=1)))
+    state = {"w": jnp.arange(100, dtype=jnp.float32)}
+    for s in steps:
+        fp.save(state, s)
+    return fp
+
+
+def test_keep_last(tmp_path):
+    fp = _write_ckpts(tmp_path, [1, 2, 3, 4, 5])
+    assert collectable(str(tmp_path), RetentionPolicy(keep_last=2)) == \
+        [1, 2, 3]
+    deleted = collect(str(tmp_path), RetentionPolicy(keep_last=2))
+    assert deleted == [1, 2, 3]
+    assert fp.latest_step() == 5
+    fp.load(4, like={"w": jnp.zeros(100)})    # window intact
+
+
+def test_keep_every_milestones(tmp_path):
+    _write_ckpts(tmp_path, list(range(1, 11)))
+    pol = RetentionPolicy(keep_last=2, keep_every=5)
+    deleted = collect(str(tmp_path), pol)
+    remaining = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path))
+    assert remaining == [5, 9, 10]            # milestones + last 2
+    assert 5 not in deleted
+
+
+def test_never_deletes_only_checkpoint(tmp_path):
+    _write_ckpts(tmp_path, [7])
+    assert collectable(str(tmp_path), RetentionPolicy(keep_last=1)) == []
+
+
+def test_trainer_integration(tmp_path):
+    cfg = reduced(get_config("stablelm_1_6b"))
+    tc = TrainerConfig(
+        model=cfg, steps=6, global_batch=2, seq_len=16, log_every=1000,
+        checkpoint=CheckpointPolicy(
+            directory=str(tmp_path), every=1, pipeline=False,
+            fp=FastPersistConfig(strategy="replica",
+                                 topology=Topology(dp_degree=1)),
+            retention=RetentionPolicy(keep_last=2, keep_every=4)))
+    t = Trainer(tc)
+    t.run()
+    remaining = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path))
+    assert remaining == [4, 5, 6]
+    # restore still works from the retained window
+    t2 = Trainer(tc)
+    assert t2.restore() == 6

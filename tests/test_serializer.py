@@ -1,0 +1,80 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.serializer import ByteStreamView, Manifest, deserialize, \
+    serialize
+
+
+def _state():
+    return {
+        "a": jnp.arange(1000, dtype=jnp.float32).reshape(10, 100),
+        "b": {"c": jnp.ones((7, 3), jnp.bfloat16),
+              "d": jnp.array([1, 2, 3], jnp.int32)},
+        "e": jnp.float32(3.5),
+    }
+
+
+def test_roundtrip_structure_and_values():
+    state = _state()
+    manifest, buffers = serialize(state)
+    stream = b"".join(bytes(memoryview(b).cast("B")) for b in buffers)
+    assert len(stream) == manifest.total_bytes
+    out = deserialize(manifest, stream, like=state)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a, dtype=np.float32),
+                                      np.asarray(b, dtype=np.float32))
+
+
+def test_manifest_json_roundtrip():
+    manifest, _ = serialize(_state())
+    manifest.extras = {"step": 17, "data": {"seed": 0, "position": 5}}
+    m2 = Manifest.from_json(manifest.to_json())
+    assert m2.total_bytes == manifest.total_bytes
+    assert m2.extras["data"]["position"] == 5
+    assert [r.name for r in m2.records] == [r.name for r in manifest.records]
+
+
+def test_record_offsets_contiguous():
+    manifest, buffers = serialize(_state())
+    pos = 0
+    for rec, buf in zip(manifest.records, buffers):
+        assert rec.offset == pos
+        assert rec.nbytes == buf.nbytes
+        pos += rec.nbytes
+    assert pos == manifest.total_bytes
+
+
+def test_bf16_preserved():
+    state = {"w": jnp.array([1.5, -2.25, 3.0], jnp.bfloat16)}
+    manifest, buffers = serialize(state)
+    stream = b"".join(bytes(memoryview(b).cast("B")) for b in buffers)
+    out = deserialize(manifest, stream, like=state)
+    assert str(np.asarray(out["w"]).dtype) == "bfloat16"
+    np.testing.assert_array_equal(np.asarray(out["w"], np.float32),
+                                  np.asarray(state["w"], np.float32))
+
+
+@settings(deadline=None, max_examples=50)
+@given(start=st.integers(0, 4110), length=st.integers(0, 4110))
+def test_bytestream_view_slices_property(start, length):
+    """Any (start, length) window reads exactly the reference bytes."""
+    rng = np.random.default_rng(0)
+    bufs = [rng.integers(0, 255, size=n, dtype=np.uint8)
+            for n in (13, 1, 0, 997, 3100)]
+    ref = b"".join(b.tobytes() for b in bufs)
+    view = ByteStreamView(bufs)
+    assert view.total == len(ref)
+    start = min(start, view.total)
+    length = min(length, view.total - start)
+    assert view.read(start, length) == ref[start:start + length]
+
+
+def test_bytestream_crc_consistency():
+    import zlib
+    bufs = [np.arange(100, dtype=np.uint8), np.ones(55, np.uint8)]
+    view = ByteStreamView(bufs)
+    ref = b"".join(b.tobytes() for b in bufs)
+    assert view.crc32() == zlib.crc32(ref)

@@ -1,0 +1,88 @@
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.serializer import ByteStreamView
+from repro.core.writer import (WriterConfig, aligned_buffer, open_direct,
+                               write_stream)
+
+
+def _segments(total, seed=0, max_seg=7000):
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 255, size=total, dtype=np.uint8)
+    view = ByteStreamView([data])
+    return data.tobytes(), view
+
+
+@pytest.mark.parametrize("double", [False, True])
+@pytest.mark.parametrize("direct", [False, True])
+@pytest.mark.parametrize("total", [0, 1, 511, 4096, 4097, 123_457,
+                                   1_048_576 + 13])
+def test_write_stream_exact_bytes(tmp_path, double, direct, total):
+    """§4.1: prefix/suffix split + coalescing must reproduce the stream
+    bit-exactly for aligned and unaligned sizes."""
+    ref, view = _segments(total)
+    path = str(tmp_path / f"out_{double}_{direct}_{total}.bin")
+    cfg = WriterConfig(io_buffer_size=64 * 1024, double_buffer=double,
+                       use_direct=direct)
+    stats = write_stream(path, view.slices(0, total), total, cfg)
+    assert stats.bytes_written == total
+    with open(path, "rb") as f:
+        assert f.read() == ref
+
+
+def test_write_stream_many_small_segments(tmp_path):
+    """Tensor bytes may span writes and writes may span tensors."""
+    rng = np.random.default_rng(1)
+    bufs = [rng.integers(0, 255, size=n, dtype=np.uint8)
+            for n in [3, 513, 4096, 1, 0, 9999, 128]]
+    view = ByteStreamView(bufs)
+    ref = b"".join(b.tobytes() for b in bufs)
+    path = str(tmp_path / "multi.bin")
+    write_stream(path, view.slices(0, view.total), view.total,
+                 WriterConfig(io_buffer_size=4096))
+    with open(path, "rb") as f:
+        assert f.read() == ref
+
+
+def test_write_at_offset(tmp_path):
+    """single-file mode: extents written at their stream offsets."""
+    ref, view = _segments(100_000)
+    path = str(tmp_path / "offset.bin")
+    cfg = WriterConfig(io_buffer_size=16 * 1024)
+    half = 50_000
+    write_stream(path, view.slices(half, half), half, cfg, file_offset=half)
+    write_stream(path, view.slices(0, half), half, cfg, file_offset=0)
+    with open(path, "rb") as f:
+        assert f.read() == ref
+
+
+def test_aligned_buffer_alignment():
+    for align in (512, 4096):
+        buf = aligned_buffer(10000, align)
+        addr = np.frombuffer(buf, np.uint8).ctypes.data
+        assert addr % align == 0
+        assert len(buf) == 10000
+
+
+def test_open_direct_flags(tmp_path):
+    fd, is_direct = open_direct(str(tmp_path / "d.bin"), 4096)
+    os.close(fd)
+    assert isinstance(is_direct, bool)
+
+
+@settings(deadline=None, max_examples=25)
+@given(total=st.integers(0, 200_000),
+       bufsz=st.sampled_from([4096, 8192, 65536]),
+       double=st.booleans())
+def test_write_stream_property(tmp_path_factory, total, bufsz, double):
+    tmp = tmp_path_factory.mktemp("prop")
+    ref, view = _segments(total, seed=total % 97)
+    path = str(tmp / "p.bin")
+    cfg = WriterConfig(io_buffer_size=bufsz, double_buffer=double)
+    stats = write_stream(path, view.slices(0, total), total, cfg)
+    assert stats.bytes_written == total
+    with open(path, "rb") as f:
+        assert f.read() == ref
