@@ -21,12 +21,13 @@ TINY = ModelConfig(
     source="bench")
 
 
-def _run(steps, gas, ckpt_mode, pipeline, d):
+def _run(steps, gas, backend, d):
+    """``backend`` is a CheckpointEngine registry key, or "none"."""
     shutil.rmtree(d, ignore_errors=True)
     pol = None
-    if ckpt_mode != "none":
+    if backend != "none":
         pol = CheckpointPolicy(
-            directory=d, every=1, mode=ckpt_mode, pipeline=pipeline,
+            directory=d, every=1, backend=backend,
             fp=FastPersistConfig(strategy="replica",
                                  topology=Topology(dp_degree=4,
                                                    ranks_per_node=4)))
@@ -43,10 +44,10 @@ def run(quick=True):
     gas_list = [1, 4, 16] if quick else [1, 2, 4, 8, 16, 64]
     for gas in gas_list:
         d = os.path.join(bench_dir(), "f11")
-        t_none = _run(steps, gas, "none", False, d)
-        t_fp = _run(steps, gas, "fastpersist", False, d)
-        t_pipe = _run(steps, gas, "fastpersist", True, d)
-        t_base = _run(steps, gas, "baseline", False, d)
+        t_none = _run(steps, gas, "none", d)
+        t_fp = _run(steps, gas, "fastpersist", d)
+        t_pipe = _run(steps, gas, "fastpersist-pipelined", d)
+        t_base = _run(steps, gas, "baseline", d)
         shutil.rmtree(d, ignore_errors=True)
         slow_fp = t_fp / t_none - 1
         slow_pipe = t_pipe / t_none - 1

@@ -13,9 +13,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import bench_dir, cleanup, emit
 from repro.configs import PAPER_TABLE2, get_paper_config
-from repro.core.baseline import BaselineCheckpointer
-from repro.core.checkpointer import FastPersistCheckpointer, \
-    FastPersistConfig
+from repro.core.checkpointer import FastPersistConfig
+from repro.core.engine import CheckpointEngine, CheckpointSpec
 from repro.core.overlap import (V100_FP16_FLOPS, effective_overhead,
                                 estimate_iteration)
 from repro.core.partition import Topology
@@ -49,16 +48,19 @@ def run(quick=True):
         jax.block_until_ready(state["p"])
 
         d = os.path.join(bench_dir(), f"f9_{key}")
-        bl = BaselineCheckpointer(os.path.join(d, "bl"))
-        sb = bl.save(state, 0)
+        with CheckpointEngine(CheckpointSpec(
+                directory=os.path.join(d, "bl"),
+                backend="baseline")) as eng:
+            sb = eng.save(state, 0).result()
         n_writers = min(dp, 8)           # this box: kernel I/O parallelism
-        fp = FastPersistCheckpointer(
-            os.path.join(d, "fp"),
-            FastPersistConfig(strategy="replica",
-                              topology=Topology(dp_degree=n_writers,
-                                                ranks_per_node=8),
-                              writer=WriterConfig()))
-        sf = fp.save(state, 0)
+        with CheckpointEngine(CheckpointSpec(
+                directory=os.path.join(d, "fp"), backend="fastpersist",
+                fp=FastPersistConfig(
+                    strategy="replica",
+                    topology=Topology(dp_degree=n_writers,
+                                      ranks_per_node=8),
+                    writer=WriterConfig()))) as eng:
+            sf = eng.save(state, 0).result()
         shutil.rmtree(d, ignore_errors=True)
         speedup = sb.seconds / sf.seconds
         emit(f"fig9a/{key}_ckpt_speedup", sf.seconds,

@@ -1,5 +1,6 @@
 """Quickstart: train a reduced model with per-iteration FastPersist
-checkpointing, interrupt, restore, continue.
+checkpointing (via the unified CheckpointEngine, pipelined backend),
+interrupt, restore, continue.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -19,7 +20,7 @@ def main():
         tc = TrainerConfig(
             model=cfg, steps=10, global_batch=4, seq_len=64, log_every=2,
             checkpoint=CheckpointPolicy(
-                directory=d, every=1, mode="fastpersist", pipeline=True,
+                directory=d, every=1, backend="fastpersist-pipelined",
                 fp=FastPersistConfig(
                     strategy="replica",
                     topology=Topology(dp_degree=4, ranks_per_node=2))))

@@ -41,7 +41,7 @@ def main():
         seq_len=args.seq, opt=AdamConfig(lr=6e-4, warmup_steps=50),
         log_every=20,
         checkpoint=CheckpointPolicy(
-            directory=args.dir, every=1, mode="fastpersist", pipeline=True,
+            directory=args.dir, every=1, backend="fastpersist-pipelined",
             fp=FastPersistConfig(
                 strategy="auto",
                 topology=Topology(dp_degree=8, ranks_per_node=4)))))

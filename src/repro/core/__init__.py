@@ -1,6 +1,12 @@
+from repro.core import layout
 from repro.core.baseline import BaselineCheckpointer, BaselineStats
 from repro.core.checkpointer import (FastPersistCheckpointer,
                                      FastPersistConfig, SaveStats)
+from repro.core.engine import (CheckpointBackend, CheckpointEngine,
+                               CheckpointSpec, EngineStats, SaveHandle,
+                               available_backends, register_backend)
+from repro.core.layout import (LAYOUT_VERSION, CheckpointError,
+                               TornCheckpointError, committed_steps)
 from repro.core.overlap import (IterationModel, checkpoint_seconds,
                                 effective_overhead, estimate_iteration,
                                 recovery_overhead_gpu_seconds,

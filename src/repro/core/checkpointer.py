@@ -22,6 +22,7 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import List, Optional
 
+from repro.core import layout
 from repro.core.partition import Topology, WritePlan, make_plan
 from repro.core.serializer import (ByteStreamView, Manifest, deserialize,
                                    serialize)
@@ -42,11 +43,17 @@ class FastPersistConfig:
 
 @dataclass
 class SaveStats:
+    """Unified per-save statistics. Every engine backend returns this
+    shape from ``SaveHandle.result()`` (baseline fills the writer fields
+    with its single logical writer)."""
     total_bytes: int
-    seconds: float
+    seconds: float                     # wall time of the persist phase
     serialize_seconds: float
     per_writer: List[WriteStats]
     n_writers: int
+    backend: str = ""                  # set by CheckpointEngine
+    step: int = -1                     # set by CheckpointEngine
+    commit_seconds: float = 0.0        # COMMIT marker + atomic rename
 
     @property
     def gbps(self):
@@ -72,8 +79,11 @@ class FastPersistCheckpointer:
     def path(self, step: int) -> str:
         return os.path.join(self.directory, f"ckpt_{step:08d}")
 
-    def save(self, state, step: int, extras: Optional[dict] = None
-             ) -> SaveStats:
+    def save(self, state, step: int, extras: Optional[dict] = None,
+             directory: Optional[str] = None) -> SaveStats:
+        """Persist ``state``. ``directory`` overrides the step directory —
+        the CheckpointEngine points it at a staging dir so the commit
+        protocol (COMMIT marker + atomic rename) stays engine-owned."""
         t_ser = time.perf_counter()
         manifest, buffers = serialize(state)
         manifest.extras = extras or {}
@@ -86,7 +96,7 @@ class FastPersistCheckpointer:
         ser_s = time.perf_counter() - t_ser
 
         plan = self.plan_for(view.total)
-        d = self.path(step)
+        d = directory if directory is not None else self.path(step)
         os.makedirs(d, exist_ok=True)
 
         t0 = time.perf_counter()
@@ -109,8 +119,9 @@ class FastPersistCheckpointer:
                 per_writer = list(ex.map(run_writer, plan.extents))
         wall = time.perf_counter() - t0
 
-        mpath = os.path.join(d, "manifest.json")
+        mpath = os.path.join(d, layout.MANIFEST_FILE)
         meta = json.loads(manifest.to_json())
+        meta["layout_version"] = layout.LAYOUT_VERSION
         extents_meta = [vars(e).copy() for e in plan.extents]
         if self.config.checksum:
             for em in extents_meta:
@@ -126,8 +137,9 @@ class FastPersistCheckpointer:
                          len(plan.extents))
 
     # ------------------------------------------------------------- load
-    def _read_manifest(self, step: int):
-        with open(os.path.join(self.path(step), "manifest.json")) as f:
+    def _read_manifest(self, step: int, directory: Optional[str] = None):
+        d = directory if directory is not None else self.path(step)
+        with open(os.path.join(d, layout.MANIFEST_FILE)) as f:
             meta = json.load(f)
         manifest = Manifest(
             records=[], total_bytes=meta["total_bytes"],
@@ -139,9 +151,10 @@ class FastPersistCheckpointer:
                             for r in meta["records"]]
         return manifest, meta["plan"]
 
-    def read_shard(self, step: int, shard_index: int, extent) -> bytes:
+    def read_shard(self, step: int, shard_index: int, extent,
+                   directory: Optional[str] = None) -> bytes:
         """One rank's load step (before the allgather)."""
-        d = self.path(step)
+        d = directory if directory is not None else self.path(step)
         if self.config.single_file:
             with open(os.path.join(d, "checkpoint.bin"), "rb") as f:
                 f.seek(extent["offset"])
@@ -149,15 +162,16 @@ class FastPersistCheckpointer:
         with open(os.path.join(d, f"shard_{shard_index:03d}.bin"), "rb") as f:
             return f.read(extent["length"])
 
-    def load(self, step: int, like=None, verify: bool = True):
+    def load(self, step: int, like=None, verify: bool = True,
+             directory: Optional[str] = None):
         """Assemble the full stream (the 'allgather') and rebuild arrays.
         Per-extent CRC32s are verified when present (production integrity
         check — a torn/corrupted shard fails loudly, not silently)."""
         import zlib
-        manifest, plan = self._read_manifest(step)
+        manifest, plan = self._read_manifest(step, directory)
         stream = bytearray(manifest.total_bytes)
         for e in plan["extents"]:
-            data = self.read_shard(step, e["shard_index"], e)
+            data = self.read_shard(step, e["shard_index"], e, directory)
             if verify and "crc32" in e:
                 crc = zlib.crc32(data)
                 if crc != e["crc32"]:
@@ -179,6 +193,8 @@ class FastPersistCheckpointer:
         return deserialize(manifest, stream, like=like), manifest
 
     def latest_step(self) -> Optional[int]:
-        steps = [int(n.split("_")[1]) for n in os.listdir(self.directory)
-                 if n.startswith("ckpt_")]
-        return max(steps) if steps else None
+        """Most recent COMMITTED step. Defensive: staging ``.tmp`` dirs,
+        ``ckpt_foo``, stray files, and torn directories are ignored
+        rather than crashing the restore path."""
+        steps = layout.committed_steps(self.directory, legacy_ok=True)
+        return steps[-1] if steps else None

@@ -1,0 +1,469 @@
+"""Unified checkpoint engine (DESIGN.md §1): ONE public API for every
+checkpointing mode in this repo.
+
+    spec   = CheckpointSpec(directory="/ckpts", backend="fastpersist-pipelined")
+    engine = CheckpointEngine(spec)
+    handle = engine.save(state, step, extras={"step": step})   # SaveHandle
+    ...
+    engine.wait()                  # §4.3 sync point (no-op for sync backends)
+    stats  = handle.result()       # unified SaveStats
+    state, manifest = engine.load(like=state)      # latest committed step
+
+Design (after Check-N-Run and DataStates-LLM): the engine decouples the
+three concerns the old classes fused —
+
+  * **snapshot/persist strategy** lives in a pluggable backend selected
+    by a string key; third parties add their own via
+    :func:`register_backend` without touching the trainer;
+  * **asynchrony** is expressed by the future-based :class:`SaveHandle`,
+    so sync backends simply return completed handles and callers never
+    branch on the mode;
+  * **commit semantics** are engine-owned and crash-atomic for every
+    backend: payloads land in ``ckpt_<step>.tmp/``, a manifest-checksummed
+    ``COMMIT`` marker seals the directory, and an atomic rename publishes
+    it (see :mod:`repro.core.layout`). A writer killed at any instant
+    never produces a loadable-looking torn checkpoint.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import shutil
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import layout
+from repro.core.baseline import BaselineCheckpointer
+from repro.core.checkpointer import (FastPersistCheckpointer,
+                                     FastPersistConfig, SaveStats)
+
+
+# ===================================================================== spec
+@dataclass
+class CheckpointSpec:
+    """Everything the engine needs; the single configuration surface."""
+    directory: str
+    backend: str = "fastpersist"
+    fp: FastPersistConfig = field(default_factory=FastPersistConfig)
+    baseline_buffer_size: int = 64 * 1024
+    max_outstanding: int = 1        # async backends: in-flight save bound
+    fsync_commit: bool = True       # fsync COMMIT + parent dir on publish
+    verify_on_load: bool = True
+    clean_stale_staging: bool = True    # sweep crashed writers' .tmp dirs
+
+
+# ================================================================== handle
+class SaveHandle:
+    """Future for one checkpoint save. Sync backends hand back handles
+    that are already done; async backends complete them from the helper
+    thread. ``wait``/``result`` re-raise the save's exception."""
+
+    def __init__(self, step: int, backend: str):
+        self.step = step
+        self.backend = backend
+        self._done = threading.Event()
+        self._stats: Optional[SaveStats] = None
+        self._exc: Optional[BaseException] = None
+
+    @classmethod
+    def completed(cls, step: int, backend: str,
+                  stats: SaveStats) -> "SaveHandle":
+        h = cls(step, backend)
+        h._finish(stats=stats)
+        return h
+
+    def _finish(self, stats: Optional[SaveStats] = None,
+                exc: Optional[BaseException] = None):
+        self._stats, self._exc = stats, exc
+        self._done.set()
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> SaveStats:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"save of step {self.step} still in flight")
+        if self._exc is not None:
+            raise self._exc
+        return self._stats
+
+    result = wait
+
+    def exception(self, timeout: Optional[float] = None
+                  ) -> Optional[BaseException]:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"save of step {self.step} still in flight")
+        return self._exc
+
+    def __repr__(self):
+        st = "done" if self.done() else "pending"
+        return f"SaveHandle(step={self.step}, backend={self.backend}, {st})"
+
+
+# ================================================================ backends
+class CheckpointBackend:
+    """Payload strategy: HOW bytes reach a directory. The engine owns
+    WHERE (staging) and WHEN it becomes visible (commit protocol)."""
+
+    #: async backends persist on a helper thread; the engine returns a
+    #: pending SaveHandle and completes it off the critical path.
+    async_save = False
+
+    def __init__(self, spec: CheckpointSpec):
+        self.spec = spec
+
+    def write_payload(self, state, step: int, extras: Optional[dict],
+                      directory: str) -> SaveStats:
+        raise NotImplementedError
+
+    def read_payload(self, directory: str, step: int, like=None,
+                     verify: bool = True) -> Tuple[object, object]:
+        raise NotImplementedError
+
+    def close(self):
+        pass
+
+
+class FastPersistBackend(CheckpointBackend):
+    """Paper §4: parallel aligned NVMe writers, synchronous commit."""
+
+    def __init__(self, spec: CheckpointSpec):
+        super().__init__(spec)
+        self._inner = FastPersistCheckpointer(spec.directory, spec.fp)
+
+    def write_payload(self, state, step, extras, directory) -> SaveStats:
+        return self._inner.save(state, step, extras, directory=directory)
+
+    def read_payload(self, directory, step, like=None, verify=True):
+        return self._inner.load(step, like=like, verify=verify,
+                                directory=directory)
+
+
+class PipelinedFastPersistBackend(FastPersistBackend):
+    """Paper §4.3: same write path, persisted by the engine's helper
+    thread so it overlaps the next iteration's forward/backward."""
+    async_save = True
+
+
+class BaselineBackend(CheckpointBackend):
+    """torch.save()-style single buffered writer (paper §3.1)."""
+
+    def __init__(self, spec: CheckpointSpec):
+        super().__init__(spec)
+        self._inner = BaselineCheckpointer(spec.directory,
+                                           spec.baseline_buffer_size)
+
+    def write_payload(self, state, step, extras, directory) -> SaveStats:
+        t0 = time.perf_counter()
+        bs = self._inner.save(state, step, extras, directory=directory)
+        # lift into the unified stats shape: one logical writer, and the
+        # baseline interleaves serialize+write so it is all "persist" time
+        return SaveStats(total_bytes=bs.bytes_written, seconds=bs.seconds,
+                         serialize_seconds=max(
+                             time.perf_counter() - t0 - bs.seconds, 0.0),
+                         per_writer=[], n_writers=1)
+
+    def read_payload(self, directory, step, like=None, verify=True):
+        return self._inner.load(step, like=like, directory=directory)
+
+
+_REGISTRY: Dict[str, Callable[[CheckpointSpec], CheckpointBackend]] = {}
+
+
+def register_backend(name: str,
+                     factory: Callable[[CheckpointSpec], CheckpointBackend],
+                     overwrite: bool = False):
+    """Register a checkpoint backend under a string key. Third-party
+    strategies plug in here and immediately work with Trainer,
+    RetentionManager, benchmarks, and the CLI."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    _REGISTRY[name] = factory
+
+
+def unregister_backend(name: str):
+    _REGISTRY.pop(name, None)
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend_factory(name: str
+                        ) -> Callable[[CheckpointSpec], CheckpointBackend]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown checkpoint backend {name!r}; "
+                       f"available: {', '.join(available_backends())}")
+
+
+register_backend("baseline", BaselineBackend)
+register_backend("fastpersist", FastPersistBackend)
+register_backend("fastpersist-pipelined", PipelinedFastPersistBackend)
+
+
+# ================================================================== worker
+class _SaveWorker:
+    """Single helper thread executing queued save jobs in order (the
+    paper's §4.3 checkpoint worker). Each job completes its handle."""
+
+    def __init__(self):
+        self._q: "queue.Queue" = queue.Queue()
+        self._t = threading.Thread(target=self._run, daemon=True,
+                                   name="ckpt-engine-worker")
+        self._t.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            job, handle = item
+            try:
+                handle._finish(stats=job())
+            except BaseException as e:
+                handle._finish(exc=e)
+
+    def submit(self, job: Callable[[], SaveStats], handle: SaveHandle):
+        self._q.put((job, handle))
+
+    def close(self):
+        self._q.put(None)
+        self._t.join()
+
+
+# ================================================================== engine
+@dataclass
+class EngineStats:
+    submitted: int = 0
+    committed: int = 0
+    failed: int = 0
+    stall_seconds: float = 0.0        # caller time blocked in wait()
+    write_seconds: float = 0.0        # sum of per-save persist wall time
+    bytes_written: int = 0
+
+
+class CheckpointEngine:
+    """Facade over every checkpointing mode. One save path, one load
+    path, one on-disk layout — regardless of backend."""
+
+    def __init__(self, spec: CheckpointSpec):
+        self.spec = spec
+        os.makedirs(spec.directory, exist_ok=True)
+        if spec.clean_stale_staging:
+            layout.clean_stale_staging(spec.directory)
+        self._backend = get_backend_factory(spec.backend)(spec)
+        self._read_backends: Dict[str, CheckpointBackend] = {
+            spec.backend: self._backend}
+        self._worker: Optional[_SaveWorker] = None   # started lazily
+        self._inflight: List[SaveHandle] = []
+        self._deferred_exc: Optional[BaseException] = None
+        self._lock = threading.Lock()
+        self.stats = EngineStats()
+        self._warn_if_legacy_only()
+
+    # ---------------------------------------------------------- properties
+    @property
+    def directory(self) -> str:
+        return self.spec.directory
+
+    @property
+    def async_save(self) -> bool:
+        return self._backend.async_save
+
+    # ---------------------------------------------------------------- save
+    def save(self, state, step: int, extras: Optional[dict] = None
+             ) -> SaveHandle:
+        """Persist a checkpoint of ``state`` at ``step``. Returns a
+        :class:`SaveHandle`; for sync backends it is already done (and
+        errors raise immediately), for async backends it completes when
+        the helper thread commits."""
+        handle = SaveHandle(step, self.spec.backend)
+        job = lambda: self._save_committed(state, step, extras)  # noqa: E731
+        self.stats.submitted += 1
+        if self._backend.async_save:
+            if self._worker is None:
+                self._worker = _SaveWorker()
+            self._throttle()
+            with self._lock:
+                self._inflight.append(handle)
+            self._worker.submit(job, handle)
+            return handle
+        try:
+            handle._finish(stats=job())      # failures counted inside job
+        except BaseException as e:
+            handle._finish(exc=e)
+            raise
+        return handle
+
+    def _warn_if_legacy_only(self):
+        """Pre-engine checkpoints (manifest.json, no COMMIT) are
+        indistinguishable from torn directories, so the engine will not
+        read them (DESIGN.md §4) — but silently restarting from step 0
+        would be worse, so say it loudly once."""
+        if layout.committed_steps(self.spec.directory, legacy_ok=False):
+            return
+        legacy = layout.committed_steps(self.spec.directory, legacy_ok=True)
+        if legacy:
+            import warnings
+            warnings.warn(
+                f"{self.spec.directory} contains only legacy (pre-engine, "
+                f"COMMIT-less) checkpoints {legacy}; CheckpointEngine "
+                f"cannot verify them and will ignore them. Load them with "
+                f"the legacy checkpointer classes and re-save through the "
+                f"engine (DESIGN.md §4).", stacklevel=3)
+
+    def _prune_inflight_locked(self) -> List[SaveHandle]:
+        """Drop completed handles, capturing any failure so wait() still
+        re-raises it (never silently swallow a lost checkpoint)."""
+        pending = []
+        for h in self._inflight:
+            if h.done():
+                if h._exc is not None and self._deferred_exc is None:
+                    self._deferred_exc = h._exc
+            else:
+                pending.append(h)
+        self._inflight = pending
+        return pending
+
+    def _throttle(self):
+        """Bound in-flight async saves (memory: each holds a snapshot)."""
+        t0 = time.perf_counter()
+        while True:
+            with self._lock:
+                pending = self._prune_inflight_locked()
+                if len(pending) < self.spec.max_outstanding:
+                    break
+            pending[0]._done.wait()
+        self.stats.stall_seconds += time.perf_counter() - t0
+
+    def _save_committed(self, state, step: int,
+                        extras: Optional[dict]) -> SaveStats:
+        """The crash-atomic save: stage → seal (COMMIT) → publish
+        (rename). Runs on the caller or the helper thread; a death at
+        any point leaves only ignorable ``.tmp`` debris."""
+        root = self.spec.directory
+        staging = os.path.join(root, layout.staging_dir_name(step))
+        final = os.path.join(root, layout.step_dir_name(step))
+        if os.path.exists(staging):
+            shutil.rmtree(staging)
+        os.makedirs(staging)
+        try:
+            stats = self._backend.write_payload(state, step, extras, staging)
+            t0 = time.perf_counter()
+            if self.spec.fsync_commit:
+                # the bytes COMMIT vouches for must be durable first —
+                # otherwise power loss can keep the marker, drop the data
+                layout.fsync_payload(staging)
+            layout.write_commit_marker(staging, step, self.spec.backend,
+                                       fsync=self.spec.fsync_commit)
+            layout.publish(staging, final, fsync=self.spec.fsync_commit)
+            stats.commit_seconds = time.perf_counter() - t0
+        except BaseException:
+            # graceful-failure path; a SIGKILL leaves the .tmp dir, which
+            # every reader ignores and the next engine start sweeps
+            shutil.rmtree(staging, ignore_errors=True)
+            self.stats.failed += 1
+            raise
+        stats.backend = self.spec.backend
+        stats.step = step
+        self.stats.committed += 1
+        self.stats.write_seconds += stats.seconds
+        self.stats.bytes_written += stats.total_bytes
+        return stats
+
+    # ---------------------------------------------------------------- sync
+    def wait(self):
+        """Block until every submitted save has committed (the paper's
+        block-before-optimizer sync point). Re-raises the first failure.
+        No-op for sync backends."""
+        t0 = time.perf_counter()
+        with self._lock:
+            pending, self._inflight = self._inflight, []
+            err, self._deferred_exc = self._deferred_exc, None
+        for h in pending:
+            h._done.wait()
+            if err is None and h.exception() is not None:
+                err = h.exception()
+        self.stats.stall_seconds += time.perf_counter() - t0
+        if err is not None:
+            raise err
+
+    def drain(self):
+        """wait() plus parking the helper thread — no thread outlives
+        the work. The engine stays fully usable; the next async save
+        restarts the worker."""
+        try:
+            self.wait()
+        finally:
+            if self._worker is not None:
+                self._worker.close()
+                self._worker = None
+
+    def close(self):
+        """Drain outstanding saves, stop the helper thread, and close
+        the backend."""
+        try:
+            self.drain()
+        finally:
+            self._backend.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ---------------------------------------------------------------- read
+    def steps(self) -> List[int]:
+        """All committed steps (shallow marker check, sorted)."""
+        return layout.committed_steps(self.spec.directory, legacy_ok=False)
+
+    def latest_step(self) -> Optional[int]:
+        """Most recent step that passes DEEP commit verification —
+        uncommitted, torn, and stray directories are skipped, so a
+        restore after a mid-save crash resumes from the last good
+        checkpoint instead of exploding."""
+        for step in reversed(self.steps()):
+            try:
+                layout.verify_commit(
+                    os.path.join(self.spec.directory,
+                                 layout.step_dir_name(step)), deep=True)
+                return step
+            except layout.TornCheckpointError:
+                continue
+        return None
+
+    def load(self, step: Optional[int] = None, like=None,
+             verify: Optional[bool] = None):
+        """Load a committed checkpoint (latest when ``step`` is None).
+        Raises :class:`layout.TornCheckpointError` on an uncommitted or
+        torn step — a half-written checkpoint is never silently loaded.
+        The COMMIT marker records which backend wrote the payload, so an
+        engine can read checkpoints written by a different backend."""
+        verify = self.spec.verify_on_load if verify is None else verify
+        preverified = False
+        if step is None:
+            step = self.latest_step()       # already deep-verifies
+            preverified = True
+            if step is None:
+                raise FileNotFoundError(
+                    f"no committed checkpoint under {self.spec.directory}")
+        d = os.path.join(self.spec.directory, layout.step_dir_name(step))
+        if not os.path.isdir(d):
+            raise FileNotFoundError(f"no checkpoint directory {d}")
+        marker = (layout.read_commit_marker(d) if preverified else None)
+        if marker is None:
+            marker = layout.verify_commit(d, deep=verify)
+        reader = self._reader_for(marker.get("backend", self.spec.backend))
+        return reader.read_payload(d, step, like=like, verify=verify)
+
+    def _reader_for(self, backend_name: str) -> CheckpointBackend:
+        if backend_name not in self._read_backends:
+            self._read_backends[backend_name] = \
+                get_backend_factory(backend_name)(self.spec)
+        return self._read_backends[backend_name]

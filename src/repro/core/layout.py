@@ -1,0 +1,275 @@
+"""Checkpoint directory layout + crash-atomic commit protocol.
+
+A checkpoint is PUBLISHED, never written in place (DESIGN.md §3):
+
+    ckpt_00000042.tmp/        staging — writers land every byte here
+      manifest.json
+      shard_000.bin ...
+    ckpt_00000042.tmp/COMMIT  marker: layout_version, manifest CRC32,
+                              expected size of every payload file
+    ckpt_00000042/            os.replace() of the staging directory —
+                              the atomic publish point
+
+A crash at ANY instant therefore leaves either (a) a stale ``.tmp``
+directory that readers ignore, or (b) a fully committed checkpoint.
+There is no third state: the rename is atomic on POSIX filesystems and
+happens only after the COMMIT marker (and optionally the payload) has
+been fsynced.
+
+Readers use :func:`committed_steps` / :func:`verify_commit`; anything
+that fails the marker checks (missing COMMIT, checksum mismatch,
+truncated payload file, unknown future ``layout_version``) is treated
+as torn and skipped — or raised loudly on an explicit ``load``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import zlib
+from typing import Dict, List, Optional
+
+#: Bump when the on-disk layout changes incompatibly. Readers refuse
+#: directories whose COMMIT declares a NEWER version (forward compat).
+LAYOUT_VERSION = 1
+
+COMMIT_FILE = "COMMIT"
+MANIFEST_FILE = "manifest.json"
+STAGING_SUFFIX = ".tmp"
+
+_STEP_RE = re.compile(r"^ckpt_(\d+)$")
+_STAGING_RE = re.compile(r"^ckpt_(\d+)\.tmp$")
+
+
+class CheckpointError(IOError):
+    """Base class for checkpoint layout/commit errors."""
+
+
+class TornCheckpointError(CheckpointError):
+    """An uncommitted or torn (partially persisted) checkpoint was read."""
+
+
+def step_dir_name(step: int) -> str:
+    return f"ckpt_{step:08d}"
+
+
+def staging_dir_name(step: int) -> str:
+    return step_dir_name(step) + STAGING_SUFFIX
+
+
+def parse_step(name: str) -> Optional[int]:
+    """Step number of a COMMITTED directory name, else None. Defensive:
+    staging dirs, ``ckpt_foo``, stray files all map to None."""
+    m = _STEP_RE.match(name)
+    return int(m.group(1)) if m else None
+
+
+def parse_staging_step(name: str) -> Optional[int]:
+    m = _STAGING_RE.match(name)
+    return int(m.group(1)) if m else None
+
+
+def _fsync_path(path: str):
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def manifest_crc32(directory: str) -> int:
+    with open(os.path.join(directory, MANIFEST_FILE), "rb") as f:
+        return zlib.crc32(f.read())
+
+
+def payload_files(directory: str) -> Dict[str, int]:
+    """{relative filename: size} for every payload file (COMMIT excluded)."""
+    out = {}
+    for name in sorted(os.listdir(directory)):
+        if name == COMMIT_FILE:
+            continue
+        p = os.path.join(directory, name)
+        if os.path.isfile(p):
+            out[name] = os.path.getsize(p)
+    return out
+
+
+def write_commit_marker(directory: str, step: int, backend: str,
+                        fsync: bool = True) -> dict:
+    """Seal ``directory`` (still at its staging path): checksum the
+    manifest, record every payload file's size, write COMMIT, fsync."""
+    marker = {
+        "layout_version": LAYOUT_VERSION,
+        "step": step,
+        "backend": backend,
+        "manifest_crc32": manifest_crc32(directory),
+        "files": payload_files(directory),
+    }
+    path = os.path.join(directory, COMMIT_FILE)
+    with open(path, "w") as f:
+        json.dump(marker, f)
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
+    if fsync:
+        _fsync_path(directory)
+    return marker
+
+
+def read_commit_marker(directory: str) -> Optional[dict]:
+    """Parsed COMMIT marker, or None if absent/unparseable/from-the-future."""
+    try:
+        with open(os.path.join(directory, COMMIT_FILE)) as f:
+            marker = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+    if not isinstance(marker, dict):
+        return None
+    if marker.get("layout_version", 0) > LAYOUT_VERSION:
+        return None            # written by a newer release — don't guess
+    return marker
+
+
+def verify_commit(directory: str, deep: bool = True) -> dict:
+    """Validate a checkpoint directory against its COMMIT marker.
+
+    Raises :class:`TornCheckpointError` when the marker is missing or the
+    payload does not match it. ``deep`` additionally stats every payload
+    file (size) and re-checksums the manifest — cheap (no shard reads)
+    and catches truncated shards from a writer killed mid-flight.
+    """
+    marker = read_commit_marker(directory)
+    if marker is None:
+        raise TornCheckpointError(
+            f"{directory}: no valid COMMIT marker — checkpoint was never "
+            f"committed (or was written by a newer layout_version)")
+    if not deep:
+        return marker
+    for name, size in marker.get("files", {}).items():
+        p = os.path.join(directory, name)
+        if not os.path.isfile(p):
+            raise TornCheckpointError(f"{directory}: payload file {name} "
+                                      f"missing")
+        actual = os.path.getsize(p)
+        if actual != size:
+            raise TornCheckpointError(
+                f"{directory}: {name} is {actual} bytes, COMMIT recorded "
+                f"{size} — torn write")
+    if "manifest_crc32" in marker:
+        try:
+            crc = manifest_crc32(directory)
+        except OSError as e:
+            raise TornCheckpointError(f"{directory}: manifest unreadable: "
+                                      f"{e}") from e
+        if crc != marker["manifest_crc32"]:
+            raise TornCheckpointError(
+                f"{directory}: manifest crc {crc:#x} != COMMIT "
+                f"{marker['manifest_crc32']:#x}")
+    return marker
+
+
+def is_committed(directory: str, deep: bool = False,
+                 legacy_ok: bool = False) -> bool:
+    """True if ``directory`` holds a committed checkpoint. With
+    ``legacy_ok``, a pre-engine directory (manifest.json but no COMMIT)
+    also counts — those were published by the old non-atomic writers."""
+    try:
+        verify_commit(directory, deep=deep)
+        return True
+    except TornCheckpointError:
+        pass
+    if legacy_ok and not os.path.exists(os.path.join(directory, COMMIT_FILE)):
+        return os.path.exists(os.path.join(directory, MANIFEST_FILE))
+    return False
+
+
+def committed_steps(root: str, deep: bool = False,
+                    legacy_ok: bool = True) -> List[int]:
+    """Sorted steps of committed checkpoints under ``root``. Staging
+    dirs, torn dirs, and stray entries are ignored, never raised on."""
+    steps = []
+    try:
+        names = os.listdir(root)
+    except OSError:
+        return []
+    for name in names:
+        step = parse_step(name)
+        if step is None:
+            continue
+        d = os.path.join(root, name)
+        if os.path.isdir(d) and is_committed(d, deep=deep,
+                                             legacy_ok=legacy_ok):
+            steps.append(step)
+    return sorted(steps)
+
+
+def fsync_payload(directory: str):
+    """fsync every payload file plus the directory itself, so the data a
+    COMMIT marker vouches for is durable BEFORE the marker is written
+    (otherwise power loss could keep the marker but drop shard bytes)."""
+    for name in os.listdir(directory):
+        p = os.path.join(directory, name)
+        if os.path.isfile(p):
+            fd = os.open(p, os.O_RDONLY)
+            try:
+                os.fsync(fd)
+            finally:
+                os.close(fd)
+    _fsync_path(directory)
+
+
+def publish(staging: str, final: str, fsync: bool = True):
+    """Atomically publish a sealed staging directory. The rename IS the
+    commit point: before it readers see nothing, after it they see a
+    complete checkpoint.
+
+    Re-saving an existing step parks the old committed copy at a
+    ``.trash`` name (ignored by readers, swept at engine start) before
+    the rename — never an rmtree-then-rename window where a crash
+    could lose BOTH copies of the step."""
+    import shutil
+    trash = None
+    if os.path.exists(final):
+        trash = final + ".trash"
+        if os.path.exists(trash):
+            shutil.rmtree(trash)
+        os.replace(final, trash)
+    os.replace(staging, final)
+    if fsync:
+        _fsync_path(os.path.dirname(final) or ".")
+    if trash is not None:
+        shutil.rmtree(trash, ignore_errors=True)
+
+
+_DEBRIS_RE = re.compile(r"^ckpt_(\d+)\.(tmp|trash)$")
+
+
+def stale_staging_dirs(root: str) -> List[str]:
+    try:
+        names = os.listdir(root)
+    except OSError:
+        return []
+    return sorted(os.path.join(root, n) for n in names
+                  if _DEBRIS_RE.match(n)
+                  and os.path.isdir(os.path.join(root, n)))
+
+
+def clean_stale_staging(root: str) -> List[str]:
+    """Remove leftover ``.tmp``/``.trash`` dirs (a crashed writer's
+    debris). Call only when no save can be in flight (engine startup).
+
+    Exception: a ``.trash`` dir is a previously PUBLISHED checkpoint
+    parked during a re-save. If the crash hit between publish()'s two
+    renames, the step has no published copy left — recover the parked
+    one (rename it back) instead of deleting the step outright."""
+    import shutil
+    removed = []
+    for d in stale_staging_dirs(root):
+        if d.endswith(".trash"):
+            final = d[:-len(".trash")]
+            if not os.path.exists(final) and is_committed(d, deep=True):
+                os.replace(d, final)
+                continue
+        shutil.rmtree(d, ignore_errors=True)
+        removed.append(d)
+    return removed

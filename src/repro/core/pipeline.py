@@ -9,6 +9,12 @@ before the NEXT optimizer step until the previous checkpoint commits
   main:    before optimizer: wait for previous commit
            after  optimizer: send new checkpoint request
 
+DEPRECATED as a public API: prefer ``repro.core.engine.CheckpointEngine``
+with backend ``"fastpersist-pipelined"``, whose ``SaveHandle`` futures and
+crash-atomic commits subsume this wrapper (DESIGN.md §4 has the migration
+table). The class remains as a standalone utility for wrapping arbitrary
+checkpointers.
+
 JAX note (DESIGN.md §2): jax arrays are immutable, so the snapshot the
 helper holds can never be corrupted by the next optimizer step — UNLESS
 the train step donates its argument buffers (donate_argnums), in which

@@ -18,6 +18,8 @@ import threading
 from dataclasses import dataclass
 from typing import List, Optional
 
+from repro.core import layout
+
 
 @dataclass(frozen=True)
 class RetentionPolicy:
@@ -26,14 +28,9 @@ class RetentionPolicy:
 
 
 def _committed_steps(directory: str) -> List[int]:
-    steps = []
-    for name in os.listdir(directory):
-        if not name.startswith("ckpt_"):
-            continue
-        d = os.path.join(directory, name)
-        if os.path.exists(os.path.join(d, "manifest.json")):
-            steps.append(int(name.split("_")[1]))
-    return sorted(steps)
+    # COMMIT-marked (engine) and legacy (manifest-only) checkpoints are
+    # both eligible; staging .tmp dirs and stray entries never are.
+    return layout.committed_steps(directory, legacy_ok=True)
 
 
 def collectable(directory: str, policy: RetentionPolicy) -> List[int]:
@@ -51,7 +48,7 @@ def collect(directory: str, policy: RetentionPolicy) -> List[int]:
     """Delete collectable checkpoints. Returns the deleted steps."""
     victims = collectable(directory, policy)
     for s in victims:
-        shutil.rmtree(os.path.join(directory, f"ckpt_{s:08d}"),
+        shutil.rmtree(os.path.join(directory, layout.step_dir_name(s)),
                       ignore_errors=True)
     return victims
 

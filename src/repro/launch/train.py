@@ -32,6 +32,10 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-mode", default="fastpersist",
                     choices=["fastpersist", "baseline", "none"])
+    ap.add_argument("--backend", default=None,
+                    help="explicit CheckpointEngine backend name "
+                         "(overrides --ckpt-mode/--pipeline); see "
+                         "repro.core.engine.available_backends()")
     ap.add_argument("--every", type=int, default=1)
     ap.add_argument("--pipeline", action="store_true", default=True)
     ap.add_argument("--no-pipeline", dest="pipeline", action="store_false")
@@ -47,10 +51,11 @@ def main():
         cfg = make_reduced(cfg)
 
     ckpt = None
-    if args.ckpt_dir and args.ckpt_mode != "none":
+    # an explicit --backend wins over --ckpt-mode, including "none"
+    if args.ckpt_dir and (args.backend or args.ckpt_mode != "none"):
         ckpt = CheckpointPolicy(
             directory=args.ckpt_dir, every=args.every, mode=args.ckpt_mode,
-            pipeline=args.pipeline,
+            pipeline=args.pipeline, backend=args.backend,
             fp=FastPersistConfig(
                 strategy=args.writers,
                 topology=Topology(dp_degree=args.dp, ranks_per_node=4),
@@ -62,7 +67,9 @@ def main():
         checkpoint=ckpt))
 
     start = 0
-    if args.restore and ckpt and args.ckpt_mode == "fastpersist":
+    if args.restore and ckpt:
+        # restores from any backend's COMMIT-marked checkpoints (legacy
+        # pre-engine directories need the old classes — DESIGN.md §4)
         start = tr.restore()
         print(f"restored from step {start}")
     state, metrics = tr.run(start_step=start)

@@ -1,29 +1,31 @@
 """Training loop with FastPersist checkpointing as a first-class feature.
 
-Implements the paper's Fig. 4 execution schedules:
+Implements the paper's Fig. 4 execution schedules, all driven through the
+unified :class:`repro.core.engine.CheckpointEngine` — the trainer never
+branches on the checkpointer implementation:
 
-  baseline  : train step → rank-0 synchronous torch.save-style write
-  fastpersist (no pipeline): train step → parallel NVMe write (sync)
-  fastpersist (pipeline)   : write overlaps the next iteration's
-                             forward/backward; we block before the next
-                             optimizer step (here: before dispatching the
-                             next train_step, which fuses F+B+O) until the
-                             previous checkpoint committed.
+  baseline               : train step → rank-0 synchronous torch.save-style
+                           write (completed SaveHandle)
+  fastpersist            : train step → parallel NVMe write (completed
+                           SaveHandle)
+  fastpersist-pipelined  : write overlaps the next iteration's
+                           forward/backward; we block before the next
+                           optimizer step (here: before dispatching the
+                           next train_step, which fuses F+B+O) until the
+                           previous checkpoint committed (engine.wait()).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.baseline import BaselineCheckpointer
-from repro.core.checkpointer import (FastPersistCheckpointer,
-                                     FastPersistConfig)
-from repro.core.pipeline import PipelinedCheckpointer
+from repro.core.checkpointer import FastPersistConfig
+from repro.core.engine import CheckpointEngine, CheckpointSpec
 from repro.core.retention import RetentionManager, RetentionPolicy
 from repro.data.pipeline import DataConfig, TokenStream
 from repro.models.registry import build_model
@@ -37,8 +39,18 @@ class CheckpointPolicy:
     every: int = 1                     # paper: per-iteration
     mode: str = "fastpersist"          # fastpersist | baseline | none
     pipeline: bool = True
+    backend: Optional[str] = None      # explicit engine backend name;
+    #                                    overrides mode/pipeline when set
     fp: FastPersistConfig = field(default_factory=FastPersistConfig)
     retention: Optional[RetentionPolicy] = None   # None = keep everything
+
+    def backend_name(self) -> str:
+        """Map the (legacy) mode/pipeline pair onto a registry key."""
+        if self.backend is not None:
+            return self.backend
+        if self.mode == "fastpersist":
+            return "fastpersist-pipelined" if self.pipeline else "fastpersist"
+        return self.mode                # "baseline" or any registered key
 
 
 @dataclass
@@ -64,20 +76,19 @@ class Trainer:
         self.train_step = jax.jit(
             make_train_step(self.model, cfg.opt, cfg.gas), donate_argnums=0)
         self.state: Optional[TrainState] = None
-        self._ckpt = None
-        self._pipe = None
+        self.engine: Optional[CheckpointEngine] = None
+        self._retain = None
         self.iter_times = []
         self.ckpt_stall = 0.0
-        if cfg.checkpoint and cfg.checkpoint.mode != "none":
+        if cfg.checkpoint and cfg.checkpoint.backend_name() != "none":
             self._setup_checkpointer(cfg.checkpoint)
+        # back-compat alias: older code/tests reach the checkpointer via
+        # trainer._ckpt; the engine serves the same latest_step/load API
+        self._ckpt = self.engine
 
     def _setup_checkpointer(self, pol: CheckpointPolicy):
-        if pol.mode == "baseline":
-            self._ckpt = BaselineCheckpointer(pol.directory)
-        else:
-            self._ckpt = FastPersistCheckpointer(pol.directory, pol.fp)
-        if pol.pipeline and pol.mode == "fastpersist":
-            self._pipe = PipelinedCheckpointer(self._ckpt)
+        self.engine = CheckpointEngine(CheckpointSpec(
+            directory=pol.directory, backend=pol.backend_name(), fp=pol.fp))
         self._retain = (RetentionManager(pol.directory, pol.retention)
                         if pol.retention else None)
 
@@ -88,14 +99,16 @@ class Trainer:
         return self.state
 
     def restore(self, step: Optional[int] = None) -> int:
-        """Resume from the most recent checkpoint. Returns the step."""
-        assert isinstance(self._ckpt, FastPersistCheckpointer)
-        step = step if step is not None else self._ckpt.latest_step()
+        """Resume from the most recent committed checkpoint (any
+        backend — the COMMIT marker records which one wrote it).
+        Returns the step."""
+        assert self.engine is not None, "no checkpoint engine configured"
+        step = step if step is not None else self.engine.latest_step()
         if step is None:
             return 0
         if self.state is None:
             self.init_state()
-        restored, manifest = self._ckpt.load(step, like=self.state)
+        restored, manifest = self.engine.load(step, like=self.state)
         self.state = jax.tree.map(jax.numpy.asarray, restored)
         extras = manifest.extras
         if "data" in extras:
@@ -105,12 +118,7 @@ class Trainer:
     # ------------------------------------------------------------- loop
     def _save(self, step: int):
         extras = {"step": step, "data": self.data.state()}
-        if self._pipe is not None:
-            self._pipe.submit(self.state, step, extras)
-        elif isinstance(self._ckpt, FastPersistCheckpointer):
-            self._ckpt.save(self.state, step, extras)
-        else:
-            self._ckpt.save(self.state, step)
+        self.engine.save(self.state, step, extras)
 
     def run(self, start_step: int = 0):
         if self.state is None:
@@ -120,14 +128,16 @@ class Trainer:
         for step in range(start_step, self.cfg.steps):
             t0 = time.perf_counter()
             batch = next(self.data)
-            if self._pipe is not None:
+            if self.engine is not None and self.engine.async_save:
                 # §4.3 sync point: the previous checkpoint must commit
-                # before the optimizer may update the params it snapshots.
+                # before the optimizer may update the params it snapshots
+                # (train_step donates its buffers — see pipeline docs).
                 t_w = time.perf_counter()
-                self._pipe.wait()
+                self.engine.wait()
                 self.ckpt_stall += time.perf_counter() - t_w
             self.state, metrics = self.train_step(self.state, batch)
-            if pol and pol.mode != "none" and (step + 1) % pol.every == 0:
+            if pol and self.engine is not None \
+                    and (step + 1) % pol.every == 0:
                 jax.block_until_ready(self.state.params)
                 self._save(step + 1)
                 if self._retain is not None:
@@ -136,7 +146,9 @@ class Trainer:
             if (step + 1) % self.cfg.log_every == 0:
                 print(f"step {step+1}: loss={float(metrics['loss']):.4f} "
                       f"it={np.mean(self.iter_times[-self.cfg.log_every:])*1e3:.1f}ms")
-        if self._pipe is not None:
-            self._pipe.close()
+        if self.engine is not None:
+            t_w = time.perf_counter()
+            self.engine.drain()     # commit stragglers, park the worker
+            self.ckpt_stall += time.perf_counter() - t_w
         jax.block_until_ready(self.state.params)
         return self.state, metrics

@@ -1,0 +1,427 @@
+"""Unified CheckpointEngine: backend registry, SaveHandle futures, and
+the crash-atomic commit protocol (staging dir → COMMIT marker → rename).
+
+The core guarantee under test: a writer killed at ANY instant never
+surfaces as a loadable checkpoint — ``load()`` raises on torn/uncommitted
+steps and ``latest_step()`` resolves to the last fully committed one."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import layout
+from repro.core.checkpointer import FastPersistConfig, SaveStats
+from repro.core.engine import (CheckpointBackend, CheckpointEngine,
+                               CheckpointSpec, SaveHandle,
+                               available_backends, get_backend_factory,
+                               register_backend, unregister_backend)
+from repro.core.partition import Topology
+
+BACKENDS = ["baseline", "fastpersist", "fastpersist-pipelined"]
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 3)
+    return {
+        "params": {"w1": jax.random.normal(ks[0], (32, 64), jnp.bfloat16),
+                   "w2": jax.random.normal(ks[1], (64, 16))},
+        "opt": {"m": jax.random.normal(ks[2], (32, 64))},
+        "step": jnp.int32(7),
+    }
+
+
+def _spec(tmp_path, backend, **kw):
+    return CheckpointSpec(
+        directory=str(tmp_path), backend=backend,
+        fp=FastPersistConfig(strategy="replica",
+                             topology=Topology(dp_degree=3)), **kw)
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+# ------------------------------------------------------------ round trips
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_roundtrip_every_registered_backend(tmp_path, backend):
+    state = _state()
+    with CheckpointEngine(_spec(tmp_path, backend)) as eng:
+        handle = eng.save(state, 3, extras={"step": 3, "note": backend})
+        stats = handle.result()
+        assert isinstance(stats, SaveStats)          # unified stats shape
+        assert stats.backend == backend
+        assert stats.step == 3
+        assert stats.total_bytes > 0
+        assert stats.n_writers >= 1
+        assert eng.latest_step() == 3
+        loaded, manifest = eng.load(like=state)
+        _assert_tree_equal(loaded, state)
+        assert manifest.extras["note"] == backend
+
+
+def test_builtin_backends_registered():
+    for b in BACKENDS:
+        assert b in available_backends()
+        assert get_backend_factory(b) is not None
+
+
+def test_sync_backends_return_completed_handles(tmp_path):
+    with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+        h = eng.save(_state(), 1)
+        assert h.done()
+        assert h.exception() is None
+        assert h.result().step == 1
+
+
+def test_async_handle_completes_and_wait_drains(tmp_path):
+    with CheckpointEngine(_spec(tmp_path, "fastpersist-pipelined")) as eng:
+        handles = []
+        for step in (1, 2, 3):
+            eng.wait()                       # §4.3 block-before-optimizer
+            handles.append(eng.save(_state(step), step))
+        eng.wait()
+        assert all(h.done() for h in handles)
+        assert [h.result().step for h in handles] == [1, 2, 3]
+        assert eng.stats.committed == 3
+    assert sorted(layout.committed_steps(str(eng.directory))) == [1, 2, 3]
+
+
+def test_drain_parks_worker_and_engine_stays_usable(tmp_path):
+    import threading
+    eng = CheckpointEngine(_spec(tmp_path, "fastpersist-pipelined"))
+    eng.save(_state(), 1)
+    eng.drain()
+    assert not any(t.name == "ckpt-engine-worker"
+                   for t in threading.enumerate())   # no leaked helper
+    h = eng.save(_state(), 2)          # next save restarts the worker
+    assert h.result().step == 2
+    eng.close()
+    assert eng.latest_step() == 2      # reads still work after close
+
+
+def test_async_failure_not_swallowed_by_later_save(tmp_path):
+    """A failed async save must surface on wait() even after later
+    save() calls pruned its handle from the in-flight list."""
+    calls = {"n": 0}
+
+    class FlakyBackend(CheckpointBackend):
+        async_save = True
+
+        def write_payload(self, state, step, extras, directory):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise IOError("disk gone")
+            with open(os.path.join(directory, layout.MANIFEST_FILE),
+                      "w") as f:
+                json.dump({"records": [], "total_bytes": 0, "extras": {},
+                           "treedef": None}, f)
+            return SaveStats(0, 1e-9, 0.0, [], 1)
+
+    register_backend("flaky-test", FlakyBackend, overwrite=True)
+    try:
+        eng = CheckpointEngine(CheckpointSpec(directory=str(tmp_path),
+                                              backend="flaky-test"))
+        h1 = eng.save({}, 1)
+        assert isinstance(h1.exception(timeout=5), IOError)
+        eng.save({}, 2)              # prunes h1 from the in-flight list
+        with pytest.raises(IOError, match="disk gone"):
+            eng.wait()
+        eng.wait()                   # error reported once, then clear
+        eng.close()
+    finally:
+        unregister_backend("flaky-test")
+
+
+def test_crash_between_publish_renames_recovers_old_copy(tmp_path):
+    """Worst instant of a re-save crash: old copy parked at .trash, new
+    copy still at .tmp. Startup must recover the published old copy,
+    not delete the step entirely."""
+    state = _state()
+    with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+        eng.save(state, 1)
+    final = tmp_path / layout.step_dir_name(1)
+    shutil.move(str(final), str(final) + ".trash")
+    staging = tmp_path / layout.staging_dir_name(1)
+    staging.mkdir()                              # sealed-but-unpublished
+    with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+        assert eng.latest_step() == 1            # old copy recovered
+        loaded, _ = eng.load(1, like=state)
+        _assert_tree_equal(loaded, state)
+    assert not staging.exists()
+    assert not (tmp_path / (layout.step_dir_name(1) + ".trash")).exists()
+
+
+def test_legacy_only_directory_warns(tmp_path):
+    from repro.core.checkpointer import FastPersistCheckpointer
+    fp = FastPersistCheckpointer(str(tmp_path), FastPersistConfig(
+        strategy="replica", topology=Topology(dp_degree=1)))
+    fp.save(_state(), 10)                        # legacy: no COMMIT
+    with pytest.warns(UserWarning, match="legacy"):
+        eng = CheckpointEngine(_spec(tmp_path, "fastpersist"))
+    assert eng.latest_step() is None             # still strict
+    eng.close()
+
+
+def test_resave_crash_debris_is_swept(tmp_path):
+    """A ``.trash`` dir (parked old copy of a re-saved step) is invisible
+    to readers and swept at engine start, like ``.tmp`` staging."""
+    state = _state()
+    with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+        eng.save(state, 1)
+    trash = tmp_path / (layout.step_dir_name(1) + ".trash")
+    shutil.copytree(tmp_path / layout.step_dir_name(1), trash)
+    with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+        assert not trash.exists()
+        assert eng.latest_step() == 1
+
+
+def test_cross_backend_load(tmp_path):
+    """The COMMIT marker records the writing backend, so an engine
+    configured for one backend reads another's checkpoints."""
+    state = _state()
+    with CheckpointEngine(_spec(tmp_path, "baseline")) as eng:
+        eng.save(state, 1)
+    with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+        eng.save(state, 2)
+        assert eng.steps() == [1, 2]
+        loaded, _ = eng.load(1, like=state)      # baseline-written payload
+        _assert_tree_equal(loaded, state)
+
+
+# ---------------------------------------------------------- registry API
+def test_register_custom_backend(tmp_path):
+    class NpzBackend(CheckpointBackend):
+        def write_payload(self, state, step, extras, directory):
+            flat = {k: np.asarray(v, np.float32)
+                    for k, v in enumerate_leaves(state)}
+            np.savez(os.path.join(directory, "state.npz"), **flat)
+            from repro.core.serializer import serialize
+            manifest, _ = serialize(state)
+            manifest.extras = extras or {}
+            meta = json.loads(manifest.to_json())
+            meta["layout_version"] = layout.LAYOUT_VERSION
+            with open(os.path.join(directory, layout.MANIFEST_FILE),
+                      "w") as f:
+                json.dump(meta, f)
+            return SaveStats(total_bytes=manifest.total_bytes, seconds=1e-9,
+                             serialize_seconds=0.0, per_writer=[],
+                             n_writers=1)
+
+        def read_payload(self, directory, step, like=None, verify=True):
+            from repro.core.serializer import Manifest
+            with open(os.path.join(directory, layout.MANIFEST_FILE)) as f:
+                manifest = Manifest.from_json(f.read())
+            data = np.load(os.path.join(directory, "state.npz"))
+            return dict(data), manifest
+
+    def enumerate_leaves(state):
+        leaves = jax.tree_util.tree_leaves(state)
+        return [(f"leaf{i}", l) for i, l in enumerate(leaves)]
+
+    register_backend("npz-test", NpzBackend)
+    try:
+        assert "npz-test" in available_backends()
+        with pytest.raises(ValueError):          # no silent clobbering
+            register_backend("npz-test", NpzBackend)
+        with CheckpointEngine(_spec(tmp_path, "npz-test")) as eng:
+            eng.save({"w": jnp.arange(10, dtype=jnp.float32)}, 1,
+                     extras={"k": 9})
+            assert eng.latest_step() == 1
+            loaded, mf = eng.load(1)
+            assert mf.extras["k"] == 9
+    finally:
+        unregister_backend("npz-test")
+    with pytest.raises(KeyError):
+        get_backend_factory("npz-test")
+
+
+# ----------------------------------------------------- crash atomicity
+class _DyingBackend(CheckpointBackend):
+    """Writes a partial payload then dies — a SIGKILL stand-in."""
+
+    def write_payload(self, state, step, extras, directory):
+        with open(os.path.join(directory, "shard_000.bin"), "wb") as f:
+            f.write(b"partial bytes")
+        raise RuntimeError("writer killed mid-save")
+
+    def read_payload(self, directory, step, like=None, verify=True):
+        raise AssertionError("must never be reached")
+
+
+def test_interrupted_save_never_publishes(tmp_path):
+    register_backend("dying-test", _DyingBackend, overwrite=True)
+    try:
+        state = _state()
+        with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+            eng.save(state, 1)                        # good checkpoint
+        with CheckpointEngine(CheckpointSpec(
+                directory=str(tmp_path), backend="dying-test",
+                clean_stale_staging=False)) as eng:
+            with pytest.raises(RuntimeError, match="killed"):
+                eng.save(state, 2)
+            assert eng.stats.failed == 1
+        with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+            assert eng.latest_step() == 1             # step 2 invisible
+            with pytest.raises((layout.TornCheckpointError,
+                                FileNotFoundError)):
+                eng.load(2)
+    finally:
+        unregister_backend("dying-test")
+
+
+def test_sigkill_leftover_staging_is_ignored_and_swept(tmp_path):
+    state = _state()
+    with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+        eng.save(state, 1)
+    # simulate a writer SIGKILLed between payload write and commit: a
+    # fully populated staging dir that never got COMMIT + rename
+    staging = tmp_path / layout.staging_dir_name(2)
+    shutil.copytree(tmp_path / layout.step_dir_name(1), staging)
+    os.remove(staging / layout.COMMIT_FILE)
+    with CheckpointEngine(_spec(tmp_path, "fastpersist",
+                                clean_stale_staging=False)) as eng:
+        assert eng.latest_step() == 1
+        with pytest.raises(FileNotFoundError):
+            eng.load(2)
+    # next engine start sweeps the debris
+    with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+        assert not staging.exists()
+        assert eng.latest_step() == 1
+
+
+def test_truncated_shard_is_torn(tmp_path):
+    """Truncate a shard post-commit (adversarial torn write): load()
+    raises, latest_step() falls back to the last intact checkpoint."""
+    state = _state()
+    with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+        eng.save(state, 1)
+        eng.save(state, 2)
+        shard = tmp_path / layout.step_dir_name(2) / "shard_001.bin"
+        size = os.path.getsize(shard)
+        with open(shard, "r+b") as f:
+            f.truncate(size // 2)
+        with pytest.raises(layout.TornCheckpointError, match="torn"):
+            eng.load(2, like=state)
+        assert eng.latest_step() == 1
+        loaded, _ = eng.load(like=state)          # falls back to step 1
+        _assert_tree_equal(loaded, state)
+
+
+def test_missing_commit_marker_is_uncommitted(tmp_path):
+    state = _state()
+    with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+        eng.save(state, 1)
+        eng.save(state, 2)
+        os.remove(tmp_path / layout.step_dir_name(2) / layout.COMMIT_FILE)
+        assert eng.latest_step() == 1
+        with pytest.raises(layout.TornCheckpointError, match="COMMIT"):
+            eng.load(2, like=state)
+
+
+def test_tampered_manifest_detected(tmp_path):
+    state = _state()
+    with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+        eng.save(state, 1)
+        mpath = tmp_path / layout.step_dir_name(1) / layout.MANIFEST_FILE
+        meta = json.loads(mpath.read_text())
+        meta["total_bytes"] += 1
+        mpath.write_text(json.dumps(meta))
+        with pytest.raises(layout.TornCheckpointError):
+            eng.load(1, like=state)
+        assert eng.latest_step() is None
+
+
+def test_future_layout_version_refused(tmp_path):
+    state = _state()
+    with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+        eng.save(state, 1)
+        cpath = tmp_path / layout.step_dir_name(1) / layout.COMMIT_FILE
+        marker = json.loads(cpath.read_text())
+        marker["layout_version"] = layout.LAYOUT_VERSION + 1
+        cpath.write_text(json.dumps(marker))
+        assert eng.latest_step() is None          # don't guess at formats
+        with pytest.raises(layout.TornCheckpointError):
+            eng.load(1, like=state)
+
+
+def test_latest_step_ignores_stray_entries(tmp_path):
+    """Satellite: stray directory entries must never crash discovery."""
+    state = _state()
+    with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+        eng.save(state, 4)
+        (tmp_path / "ckpt_foo").mkdir()
+        (tmp_path / "ckpt_").mkdir()
+        (tmp_path / "ckpt_00000009.tmp").mkdir()
+        (tmp_path / "notes.txt").write_text("hi")
+        assert eng.latest_step() == 4
+        assert eng.steps() == [4]
+
+
+def test_legacy_latest_step_defensive(tmp_path):
+    """The legacy FastPersistCheckpointer.latest_step no longer crashes
+    on stray entries and skips staging dirs (satellite fix)."""
+    from repro.core.checkpointer import FastPersistCheckpointer
+    fp = FastPersistCheckpointer(str(tmp_path), FastPersistConfig(
+        strategy="replica", topology=Topology(dp_degree=1)))
+    assert fp.latest_step() is None
+    fp.save(_state(), 3)
+    (tmp_path / "ckpt_foo").mkdir()
+    (tmp_path / "ckpt_00000011.tmp").mkdir()
+    (tmp_path / "ckpt_00000099").mkdir()     # dir without manifest: torn
+    assert fp.latest_step() == 3
+
+
+def test_baseline_save_accepts_extras(tmp_path):
+    """Satellite: BaselineCheckpointer.save takes extras like FastPersist."""
+    from repro.core.baseline import BaselineCheckpointer
+    bl = BaselineCheckpointer(str(tmp_path))
+    state = {"w": jnp.arange(16, dtype=jnp.float32)}
+    bl.save(state, 2, extras={"step": 2, "data": {"position": 4}})
+    loaded, manifest = bl.load(2, like=state)
+    _assert_tree_equal(loaded, state)
+    assert manifest.extras == {"step": 2, "data": {"position": 4}}
+
+
+def test_resave_same_step_replaces(tmp_path):
+    s1, s2 = _state(1), _state(2)
+    with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+        eng.save(s1, 5)
+        eng.save(s2, 5)
+        loaded, _ = eng.load(5, like=s2)
+        _assert_tree_equal(loaded, s2)
+
+
+def test_load_without_checkpoints_raises(tmp_path):
+    with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+        assert eng.latest_step() is None
+        with pytest.raises(FileNotFoundError):
+            eng.load()
+
+
+def test_manifest_has_layout_version(tmp_path):
+    with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
+        eng.save(_state(), 1)
+    meta = json.loads((tmp_path / layout.step_dir_name(1) /
+                       layout.MANIFEST_FILE).read_text())
+    assert meta["layout_version"] == layout.LAYOUT_VERSION
+    marker = json.loads((tmp_path / layout.step_dir_name(1) /
+                         layout.COMMIT_FILE).read_text())
+    assert marker["layout_version"] == layout.LAYOUT_VERSION
+    assert set(marker["files"]) >= {layout.MANIFEST_FILE}
+
+
+def test_trainer_has_no_isinstance_checkpointer_branching():
+    """Acceptance criterion, enforced structurally."""
+    import inspect
+    import repro.train.trainer as trainer_mod
+    src = inspect.getsource(trainer_mod)
+    assert "isinstance(self._ckpt" not in src
+    assert "PipelinedCheckpointer" not in src
+    assert "isinstance" not in inspect.getsource(trainer_mod.Trainer._save)

@@ -1,17 +1,16 @@
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:          # property-based cases are skipped,
+    HAVE_HYPOTHESIS = False          # example-based ones still run
 
 from repro.core.partition import (Topology, make_plan,
                                   predict_write_seconds, select_writers)
 
 
-@settings(deadline=None, max_examples=200)
-@given(total=st.integers(0, 10**9),
-       dp=st.integers(1, 128),
-       rpn=st.integers(1, 16),
-       strategy=st.sampled_from(["replica", "socket", "auto"]),
-       wpn=st.integers(1, 4))
-def test_plan_invariants(total, dp, rpn, strategy, wpn):
+def _check_plan_invariants(total, dp, rpn, strategy, wpn):
     """Paper §4.2: full coverage, disjoint extents, ≤1-byte imbalance —
     for every topology and strategy."""
     topo = Topology(dp_degree=dp, ranks_per_node=rpn)
@@ -19,6 +18,25 @@ def test_plan_invariants(total, dp, rpn, strategy, wpn):
     plan.validate()      # asserts coverage, disjointness, balance
     assert all(0 <= e.rank < dp for e in plan.extents)
     assert len(set(e.rank for e in plan.extents)) == len(plan.extents)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=200)
+    @given(total=st.integers(0, 10**9),
+           dp=st.integers(1, 128),
+           rpn=st.integers(1, 16),
+           strategy=st.sampled_from(["replica", "socket", "auto"]),
+           wpn=st.integers(1, 4))
+    def test_plan_invariants(total, dp, rpn, strategy, wpn):
+        _check_plan_invariants(total, dp, rpn, strategy, wpn)
+else:
+    @pytest.mark.parametrize("total", [0, 1, 4096, 10**6 + 7, 10**9])
+    @pytest.mark.parametrize("dp,rpn", [(1, 1), (3, 1), (8, 4), (128, 16)])
+    @pytest.mark.parametrize("strategy,wpn",
+                             [("replica", 1), ("socket", 2), ("auto", 4)])
+    def test_plan_invariants(total, dp, rpn, strategy, wpn):
+        """Example-based fallback grid when hypothesis is unavailable."""
+        _check_plan_invariants(total, dp, rpn, strategy, wpn)
 
 
 def test_replica_uses_all_ranks():
