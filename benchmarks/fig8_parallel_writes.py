@@ -17,15 +17,23 @@ import shutil
 import time
 
 
-def parallel_write(view, n_writers, directory) -> float:
+def parallel_write(view, n_writers, directory, n_volumes=1) -> float:
+    """Write the stream through a (writers × volumes) plan: each extent
+    lands in its mapped volume's directory, one flusher per destination
+    — the sharded layout's data path without the commit protocol."""
     plan = make_plan(view.total, Topology(dp_degree=n_writers,
                                           ranks_per_node=max(n_writers, 1)),
-                     "replica")
+                     "replica", n_volumes=n_volumes)
     cfg = WriterConfig(io_buffer_size=32 * 2**20)
+    vol_dirs = [os.path.join(directory, f"vol{v}")
+                for v in range(max(n_volumes, 1))]
+    for d in vol_dirs:
+        os.makedirs(d, exist_ok=True)
 
     def one(extent):
         return write_stream(
-            os.path.join(directory, f"s{extent.shard_index}.bin"),
+            os.path.join(vol_dirs[extent.volume],
+                         f"s{extent.shard_index}.bin"),
             view.slices(extent.offset, extent.length), extent.length, cfg)
 
     t0 = time.perf_counter()
@@ -50,6 +58,19 @@ def run(quick=True):
         gbps = view.total / t / 1e9
         out[w] = gbps
         emit(f"fig8/writers{w}", t, f"{gbps:.2f}GBps")
+
+    # volume striping: same writer count, shards spread over 1..4
+    # destination roots (the paper's per-node SSDs; here directories —
+    # point FASTPERSIST_BENCH_DIR at a multi-disk mount to see the
+    # hardware effect)
+    for nv in ([1, 2, 4] if quick else [1, 2, 4, 8]):
+        d = os.path.join(bench_dir(), f"f8v_{nv}")
+        os.makedirs(d, exist_ok=True)
+        t = min(parallel_write(view, 4, d, n_volumes=nv) for _ in range(2))
+        shutil.rmtree(d, ignore_errors=True)
+        gbps = view.total / t / 1e9
+        out[f"4w_{nv}v"] = gbps
+        emit(f"fig8/writers4_volumes{nv}", t, f"{gbps:.2f}GBps")
 
     # analytic multi-node projection (the paper's 8-node side)
     ck = 10 * 10**9

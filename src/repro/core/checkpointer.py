@@ -1,16 +1,21 @@
 """FastPersist checkpointer: NVMe write path × DP-parallel writers.
 
-Layout of a checkpoint directory (sharded mode, the paper's layout —
-each writer streams its byte extent to its node-local SSD):
+Layout of a checkpoint directory (sharded multi-volume mode, the
+paper's layout — each writer streams its byte extent to its own
+destination volume, DESIGN.md §5):
 
-    ckpt_00000042/
-      manifest.json      tensor metadata + extras + write plan
-      shard_000.bin      writer 0's byte extent (aligned direct writes)
-      shard_001.bin      ...
+    <primary>/ckpt_00000042/
+      manifest.json      tensor metadata + extras + write plan + global
+                         index (tensor → [shard, offset, length] spans)
+      shard_000.bin      shards whose extent maps to the primary volume
+    <volume1>/ckpt_00000042.shards-<nonce>/
+      shard_001.bin      shards striped onto other volumes
+      ...
 
 Loading (paper §4.2): each rank reads its own shard then the DP group
-allgathers — here ``load`` assembles all shards locally, and
-``gathered_state`` demonstrates the collective path for tests.
+allgathers — here ``load`` assembles all shards locally and is
+RANK-ELASTIC: the manifest's saved plan (not the loader's topology)
+drives reassembly, so K shards restore onto any reader configuration.
 """
 from __future__ import annotations
 
@@ -20,12 +25,15 @@ import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Sequence
+
+import numpy as np
 
 from repro.core import layout
 from repro.core.partition import Topology, WritePlan, make_plan
-from repro.core.serializer import (ByteStreamView, Manifest, deserialize,
-                                   serialize)
+from repro.core.serializer import (ByteStreamView, Manifest, TensorRecord,
+                                   decode_record, deserialize, serialize,
+                                   tensor_spans)
 from repro.core.writer import WriteStats, WriterConfig, write_stream
 
 
@@ -54,6 +62,9 @@ class SaveStats:
     backend: str = ""                  # set by CheckpointEngine
     step: int = -1                     # set by CheckpointEngine
     commit_seconds: float = 0.0        # COMMIT marker + atomic rename
+    #: per-shard-file descriptors {name, volume, size, crc32} — the
+    #: engine folds these into the global COMMIT marker
+    shards: List[dict] = field(default_factory=list)
 
     @property
     def gbps(self):
@@ -68,22 +79,30 @@ class FastPersistCheckpointer:
         self._plan_cache = {}
 
     # -- setup-time planning (paper: partition fixed before iteration 1) --
-    def plan_for(self, total_bytes: int) -> WritePlan:
-        key = total_bytes
+    def plan_for(self, total_bytes: int, n_volumes: int = 1) -> WritePlan:
+        key = (total_bytes, n_volumes)
         if key not in self._plan_cache:
             self._plan_cache[key] = make_plan(
                 total_bytes, self.config.topology, self.config.strategy,
-                self.config.writers_per_node)
+                self.config.writers_per_node, n_volumes=n_volumes)
         return self._plan_cache[key]
 
     def path(self, step: int) -> str:
         return os.path.join(self.directory, f"ckpt_{step:08d}")
 
+    @staticmethod
+    def _shard_file(shard_index: int) -> str:
+        return f"shard_{shard_index:03d}.bin"
+
     def save(self, state, step: int, extras: Optional[dict] = None,
-             directory: Optional[str] = None) -> SaveStats:
+             directory: Optional[str] = None,
+             volume_dirs: Optional[Sequence[str]] = None) -> SaveStats:
         """Persist ``state``. ``directory`` overrides the step directory —
         the CheckpointEngine points it at a staging dir so the commit
-        protocol (COMMIT marker + atomic rename) stays engine-owned."""
+        protocol (COMMIT marker + atomic rename) stays engine-owned.
+        ``volume_dirs`` (index-aligned with the plan's volume indices)
+        stripes shard files across destination volumes; the manifest and
+        any volume-0-resident shards stay under ``directory``."""
         t_ser = time.perf_counter()
         manifest, buffers = serialize(state)
         manifest.extras = extras or {}
@@ -95,22 +114,30 @@ class FastPersistCheckpointer:
         view = ByteStreamView(buffers)
         ser_s = time.perf_counter() - t_ser
 
-        plan = self.plan_for(view.total)
         d = directory if directory is not None else self.path(step)
-        os.makedirs(d, exist_ok=True)
+        n_volumes = (len(volume_dirs)
+                     if volume_dirs and not self.config.single_file else 1)
+        plan = self.plan_for(view.total, n_volumes)
+        dirs = (list(volume_dirs) if volume_dirs
+                and not self.config.single_file else [d])
+        for vd in {d, *dirs}:
+            os.makedirs(vd, exist_ok=True)
 
         t0 = time.perf_counter()
         # Each writer = one of the paper's DP-rank helper processes. The
         # write path is communication-free: every extent was fixed at
-        # setup. os.pwrite releases the GIL ⇒ kernel-level parallel I/O.
+        # setup. os.pwrite releases the GIL ⇒ kernel-level parallel I/O,
+        # with each destination volume driven by its own flusher.
         def run_writer(extent):
             segs = view.slices(extent.offset, extent.length)
             if self.config.single_file:
                 return write_stream(os.path.join(d, "checkpoint.bin"),
                                     segs, extent.length, self.config.writer,
                                     file_offset=extent.offset)
-            return write_stream(os.path.join(d, f"shard_{extent.shard_index:03d}.bin"),
-                                segs, extent.length, self.config.writer)
+            return write_stream(
+                os.path.join(dirs[extent.volume],
+                             self._shard_file(extent.shard_index)),
+                segs, extent.length, self.config.writer)
 
         if len(plan.extents) == 1:
             per_writer = [run_writer(plan.extents[0])]
@@ -121,20 +148,41 @@ class FastPersistCheckpointer:
 
         mpath = os.path.join(d, layout.MANIFEST_FILE)
         meta = json.loads(manifest.to_json())
-        meta["layout_version"] = layout.LAYOUT_VERSION
+        # mirror the COMMIT stamping rule: only a checkpoint whose shards
+        # actually leave the primary directory is a v2 layout — anything
+        # else stays readable by pre-sharding (v1) readers
+        d_real = os.path.realpath(d)
+        striped = any(os.path.realpath(dirs[e.volume]) != d_real
+                      for e in plan.extents)
+        meta["layout_version"] = layout.LAYOUT_VERSION if striped else 1
         extents_meta = [vars(e).copy() for e in plan.extents]
         if self.config.checksum:
             for em in extents_meta:
                 em["crc32"] = view.crc32(em["offset"], em["length"])
-        meta["plan"] = {"strategy": plan.strategy, "extents": extents_meta}
+        meta["plan"] = {"strategy": plan.strategy, "extents": extents_meta,
+                        "n_volumes": plan.n_volumes}
+        # the global index: tensor → [shard, offset-in-shard, length]
+        # spans, the key to rank-elastic and partial restore (§5)
+        meta["index"] = tensor_spans(manifest.records, plan.extents)
         with open(mpath, "w") as f:
             json.dump(meta, f)
         if self.config.fsync:
             fd = os.open(d, os.O_RDONLY)
             os.fsync(fd)
             os.close(fd)
+        shard_meta = []
+        if self.config.single_file:
+            shard_meta.append({"name": "checkpoint.bin", "volume": 0,
+                               "size": view.total})
+        else:
+            for e, em in zip(plan.extents, extents_meta):
+                sh = {"name": self._shard_file(e.shard_index),
+                      "volume": e.volume, "size": e.length}
+                if "crc32" in em:
+                    sh["crc32"] = em["crc32"]
+                shard_meta.append(sh)
         return SaveStats(view.total, wall, ser_s, per_writer,
-                         len(plan.extents))
+                         len(plan.extents), shards=shard_meta)
 
     # ------------------------------------------------------------- load
     def _read_manifest(self, step: int, directory: Optional[str] = None):
@@ -144,34 +192,56 @@ class FastPersistCheckpointer:
         manifest = Manifest(
             records=[], total_bytes=meta["total_bytes"],
             extras=meta.get("extras", {}))
-        from repro.core.serializer import TensorRecord
         manifest.records = [TensorRecord(r["name"], r["dtype"],
                                          tuple(r["shape"]), r["offset"],
                                          r["nbytes"])
                             for r in meta["records"]]
-        return manifest, meta["plan"]
+        return manifest, meta["plan"], meta.get("index")
+
+    def _shard_dir(self, directory: str, extent: dict,
+                   marker: Optional[dict],
+                   volume_roots: Optional[Sequence[str]]) -> str:
+        """Resolve the directory holding one extent's shard file. Layout
+        v1 extents carry no ``volume`` key and resolve to ``directory``
+        itself, which is exactly the legacy single-dir behaviour."""
+        return layout.resolve_shard_dir(marker, directory,
+                                        int(extent.get("volume", 0)),
+                                        volume_roots)
 
     def read_shard(self, step: int, shard_index: int, extent,
-                   directory: Optional[str] = None) -> bytes:
+                   directory: Optional[str] = None,
+                   marker: Optional[dict] = None,
+                   volume_roots: Optional[Sequence[str]] = None) -> bytes:
         """One rank's load step (before the allgather)."""
         d = directory if directory is not None else self.path(step)
         if self.config.single_file:
             with open(os.path.join(d, "checkpoint.bin"), "rb") as f:
                 f.seek(extent["offset"])
                 return f.read(extent["length"])
-        with open(os.path.join(d, f"shard_{shard_index:03d}.bin"), "rb") as f:
+        sd = self._shard_dir(d, extent, marker, volume_roots)
+        with open(os.path.join(sd, self._shard_file(shard_index)),
+                  "rb") as f:
             return f.read(extent["length"])
 
     def load(self, step: int, like=None, verify: bool = True,
-             directory: Optional[str] = None):
+             directory: Optional[str] = None,
+             marker: Optional[dict] = None,
+             volume_roots: Optional[Sequence[str]] = None):
         """Assemble the full stream (the 'allgather') and rebuild arrays.
-        Per-extent CRC32s are verified when present (production integrity
-        check — a torn/corrupted shard fails loudly, not silently)."""
+        Rank-elastic: reassembly is driven entirely by the manifest's
+        SAVED plan, so any reader topology/volume layout restores a
+        checkpoint written by any writer count. Per-extent CRC32s are
+        verified when present (production integrity check — a
+        torn/corrupted shard fails loudly, not silently)."""
         import zlib
-        manifest, plan = self._read_manifest(step, directory)
+        d = directory if directory is not None else self.path(step)
+        if marker is None:
+            marker = layout.read_commit_marker(d)
+        manifest, plan, _ = self._read_manifest(step, directory)
         stream = bytearray(manifest.total_bytes)
         for e in plan["extents"]:
-            data = self.read_shard(step, e["shard_index"], e, directory)
+            data = self.read_shard(step, e["shard_index"], e, directory,
+                                   marker=marker, volume_roots=volume_roots)
             if verify and "crc32" in e:
                 crc = zlib.crc32(data)
                 if crc != e["crc32"]:
@@ -191,6 +261,42 @@ class FastPersistCheckpointer:
                 return jax.tree_util.tree_unflatten(treedef, new), manifest
             return named, manifest
         return deserialize(manifest, stream, like=like), manifest
+
+    def load_tensor(self, step: int, name: str,
+                    directory: Optional[str] = None,
+                    marker: Optional[dict] = None,
+                    volume_roots: Optional[Sequence[str]] = None
+                    ) -> np.ndarray:
+        """Partial restore of ONE tensor via the global index: reads only
+        the [shard, offset, length] spans that hold its bytes — a tensor
+        split mid-stream across shard boundaries is reassembled from the
+        exact byte ranges, without touching the other shards' data."""
+        d = directory if directory is not None else self.path(step)
+        if marker is None:
+            marker = layout.read_commit_marker(d)
+        manifest, plan, index = self._read_manifest(step, directory)
+        if index is None or name not in index:
+            raise KeyError(f"tensor {name!r} not in the checkpoint index "
+                           f"(layout v1 checkpoints have no index — use "
+                           f"load())")
+        rec = next(r for r in manifest.records if r.name == name)
+        by_shard = {e["shard_index"]: e for e in plan["extents"]}
+        raw = bytearray()
+        for shard_index, off, length in index[name]:
+            e = by_shard[shard_index]
+            if self.config.single_file:
+                path = os.path.join(d, "checkpoint.bin")
+                off = e["offset"] + off       # file holds the full stream
+            else:
+                sd = self._shard_dir(d, e, marker, volume_roots)
+                path = os.path.join(sd, self._shard_file(shard_index))
+            with open(path, "rb") as f:
+                f.seek(off)
+                raw += f.read(length)
+        if len(raw) != rec.nbytes:
+            raise IOError(f"tensor {name!r}: index spans yielded "
+                          f"{len(raw)} bytes, expected {rec.nbytes}")
+        return decode_record(rec, bytes(raw))
 
     def latest_step(self) -> Optional[int]:
         """Most recent COMMITTED step. Defensive: staging ``.tmp`` dirs,

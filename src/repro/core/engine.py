@@ -32,7 +32,7 @@ import shutil
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import layout
 from repro.core.baseline import BaselineCheckpointer
@@ -52,6 +52,11 @@ class CheckpointSpec:
     fsync_commit: bool = True       # fsync COMMIT + parent dir on publish
     verify_on_load: bool = True
     clean_stale_staging: bool = True    # sweep crashed writers' .tmp dirs
+    #: destination volume roots for sharded payloads (the paper's
+    #: per-node SSDs; here: directory roots, e.g. one per mounted disk).
+    #: None/empty → shards live in ``directory`` (single-volume layout).
+    #: The manifest + global COMMIT always live under ``directory``.
+    volumes: Optional[Sequence[str]] = None
 
 
 # ================================================================== handle
@@ -118,16 +123,33 @@ class CheckpointBackend:
                       directory: str) -> SaveStats:
         raise NotImplementedError
 
+    def write_payload_sharded(self, state, step: int,
+                              extras: Optional[dict], directory: str,
+                              volume_dirs: List[str]) -> SaveStats:
+        """Multi-volume write hook: ``directory`` is the primary staging
+        dir (manifest + COMMIT home), ``volume_dirs[v]`` the staging dir
+        for volume ``v`` (may alias ``directory``). Backends that are
+        volume-agnostic inherit this default and keep working."""
+        return self.write_payload(state, step, extras, directory)
+
     def read_payload(self, directory: str, step: int, like=None,
                      verify: bool = True) -> Tuple[object, object]:
         raise NotImplementedError
+
+    def read_payload_sharded(self, directory: str, step: int, like=None,
+                             verify: bool = True, marker=None,
+                             volume_roots=None) -> Tuple[object, object]:
+        """Multi-volume read hook; the default ignores the shard context
+        (single-dir backends never need it)."""
+        return self.read_payload(directory, step, like=like, verify=verify)
 
     def close(self):
         pass
 
 
 class FastPersistBackend(CheckpointBackend):
-    """Paper §4: parallel aligned NVMe writers, synchronous commit."""
+    """Paper §4: parallel aligned NVMe writers, synchronous commit,
+    shards striped across the spec's volumes."""
 
     def __init__(self, spec: CheckpointSpec):
         super().__init__(spec)
@@ -136,9 +158,26 @@ class FastPersistBackend(CheckpointBackend):
     def write_payload(self, state, step, extras, directory) -> SaveStats:
         return self._inner.save(state, step, extras, directory=directory)
 
+    def write_payload_sharded(self, state, step, extras, directory,
+                              volume_dirs) -> SaveStats:
+        return self._inner.save(state, step, extras, directory=directory,
+                                volume_dirs=volume_dirs)
+
     def read_payload(self, directory, step, like=None, verify=True):
         return self._inner.load(step, like=like, verify=verify,
                                 directory=directory)
+
+    def read_payload_sharded(self, directory, step, like=None, verify=True,
+                             marker=None, volume_roots=None):
+        return self._inner.load(step, like=like, verify=verify,
+                                directory=directory, marker=marker,
+                                volume_roots=volume_roots)
+
+    def load_tensor(self, directory, step, name, marker=None,
+                    volume_roots=None):
+        return self._inner.load_tensor(step, name, directory=directory,
+                                       marker=marker,
+                                       volume_roots=volume_roots)
 
 
 class PipelinedFastPersistBackend(FastPersistBackend):
@@ -254,8 +293,10 @@ class CheckpointEngine:
     def __init__(self, spec: CheckpointSpec):
         self.spec = spec
         os.makedirs(spec.directory, exist_ok=True)
+        for root in self.volume_roots():
+            os.makedirs(root, exist_ok=True)
         if spec.clean_stale_staging:
-            layout.clean_stale_staging(spec.directory)
+            layout.clean_stale_multi(spec.directory, self.volume_roots())
         self._backend = get_backend_factory(spec.backend)(spec)
         self._read_backends: Dict[str, CheckpointBackend] = {
             spec.backend: self._backend}
@@ -274,6 +315,11 @@ class CheckpointEngine:
     @property
     def async_save(self) -> bool:
         return self._backend.async_save
+
+    def volume_roots(self) -> List[str]:
+        """Absolute destination volume roots; index == Extent.volume."""
+        vols = self.spec.volumes or [self.spec.directory]
+        return [os.path.abspath(v) for v in vols]
 
     # ---------------------------------------------------------------- save
     def save(self, state, step: int, extras: Optional[dict] = None
@@ -343,32 +389,102 @@ class CheckpointEngine:
 
     def _save_committed(self, state, step: int,
                         extras: Optional[dict]) -> SaveStats:
-        """The crash-atomic save: stage → seal (COMMIT) → publish
-        (rename). Runs on the caller or the helper thread; a death at
-        any point leaves only ignorable ``.tmp`` debris."""
+        """The crash-atomic sharded save: stage on every volume → publish
+        secondary shard dirs (fresh generation names, invisible until
+        referenced) → seal (global COMMIT) → publish the primary
+        (rename; THE commit point). Runs on the caller or the helper
+        thread; a death at any point leaves only ignorable ``.tmp``
+        debris and unreferenced shard dirs that startup sweeps."""
         root = self.spec.directory
+        roots = self.volume_roots()
+        primary_real = os.path.realpath(root)
+        nonce = os.urandom(4).hex()
         staging = os.path.join(root, layout.staging_dir_name(step))
         final = os.path.join(root, layout.step_dir_name(step))
-        if os.path.exists(staging):
-            shutil.rmtree(staging)
-        os.makedirs(staging)
+        # per-volume staging: volumes aliasing the primary stage into the
+        # primary staging dir; others get a generation-named shard dir —
+        # aliased/duplicate secondary roots share ONE generation dir, so
+        # a symlinked mount never double-publishes the same name
+        volume_staging, secondary = [], {}    # v → (staging, final)
+        gen_by_root: Dict[str, tuple] = {}    # realpath(root) → (s, f)
+        for v, vr in enumerate(roots):
+            real = os.path.realpath(vr)
+            if real == primary_real:
+                volume_staging.append(staging)
+                continue
+            if real not in gen_by_root:
+                gen_by_root[real] = (
+                    os.path.join(vr, layout.shard_staging_dir_name(step,
+                                                                   nonce)),
+                    os.path.join(vr, layout.shard_dir_name(step, nonce)))
+            s, f = gen_by_root[real]
+            secondary[v] = (s, f)
+            volume_staging.append(s)
+        all_staging = sorted({staging, *(s for s, _ in gen_by_root.values())})
+        for d in all_staging:
+            if os.path.exists(d):
+                shutil.rmtree(d)
+            os.makedirs(d)
+        published = False
         try:
-            stats = self._backend.write_payload(state, step, extras, staging)
+            stats = self._backend.write_payload_sharded(
+                state, step, extras, staging, volume_staging)
             t0 = time.perf_counter()
+            # a volume-agnostic backend (baseline, single_file) leaves
+            # its secondary staging dirs empty: drop them instead of
+            # publishing and commit-recording empty generation dirs
+            live = []
+            for s, f in gen_by_root.values():
+                if os.listdir(s):
+                    live.append((s, f))
+                else:
+                    os.rmdir(s)
             if self.spec.fsync_commit:
                 # the bytes COMMIT vouches for must be durable first —
-                # otherwise power loss can keep the marker, drop the data
-                layout.fsync_payload(staging)
-            layout.write_commit_marker(staging, step, self.spec.backend,
-                                       fsync=self.spec.fsync_commit)
+                # otherwise power loss can keep the marker, drop the
+                # data; volumes drain concurrently, one flusher per file
+                layout.fsync_payloads([staging, *(s for s, _ in live)])
+            if len(live) > 1:
+                # publish every volume's shard dir concurrently — each
+                # rename + parent fsync is an independent journal commit
+                from concurrent.futures import ThreadPoolExecutor
+                with ThreadPoolExecutor(len(live)) as ex:
+                    list(ex.map(
+                        lambda sf: layout.publish_fresh(
+                            *sf, fsync=self.spec.fsync_commit), live))
+            elif live:
+                layout.publish_fresh(*live[0], fsync=self.spec.fsync_commit)
+            live_staging = {s for s, _ in live}
+            volume_dirs = {str(v): os.path.basename(f)
+                           for v, (s, f) in sorted(secondary.items())
+                           if s in live_staging}
+            layout.write_commit_marker(
+                staging, step, self.spec.backend,
+                fsync=self.spec.fsync_commit,
+                shards=getattr(stats, "shards", None),
+                volume_roots=roots if volume_dirs else None,
+                volume_dirs=volume_dirs or None)
             layout.publish(staging, final, fsync=self.spec.fsync_commit)
+            published = True
             stats.commit_seconds = time.perf_counter() - t0
         except BaseException:
-            # graceful-failure path; a SIGKILL leaves the .tmp dir, which
-            # every reader ignores and the next engine start sweeps
+            # graceful-failure path; a SIGKILL leaves the .tmp dirs and
+            # unreferenced generation dirs, which every reader ignores
+            # and the next engine start sweeps
             shutil.rmtree(staging, ignore_errors=True)
+            for s, f in gen_by_root.values():
+                shutil.rmtree(s, ignore_errors=True)
+                if not published:
+                    shutil.rmtree(f, ignore_errors=True)
             self.stats.failed += 1
             raise
+        # the new COMMIT supersedes any previous generation of this step:
+        # older shard dirs are now unreferenced — drop them (best-effort;
+        # a crash here leaves orphans for the startup sweep)
+        for _, f in gen_by_root.values():
+            for old in layout.shard_dirs_for_step(os.path.dirname(f), step):
+                if os.path.basename(old) != os.path.basename(f):
+                    shutil.rmtree(old, ignore_errors=True)
         stats.backend = self.spec.backend
         stats.step = step
         self.stats.committed += 1
@@ -432,19 +548,28 @@ class CheckpointEngine:
             try:
                 layout.verify_commit(
                     os.path.join(self.spec.directory,
-                                 layout.step_dir_name(step)), deep=True)
+                                 layout.step_dir_name(step)), deep=True,
+                    volume_roots=self.volume_roots())
                 return step
             except layout.TornCheckpointError:
                 continue
         return None
 
     def load(self, step: Optional[int] = None, like=None,
-             verify: Optional[bool] = None):
+             verify: Optional[bool] = None, sharding=None):
         """Load a committed checkpoint (latest when ``step`` is None).
         Raises :class:`layout.TornCheckpointError` on an uncommitted or
         torn step — a half-written checkpoint is never silently loaded.
-        The COMMIT marker records which backend wrote the payload, so an
-        engine can read checkpoints written by a different backend."""
+        The COMMIT marker records which backend wrote the payload AND
+        where every shard lives, so an engine can read checkpoints
+        written by a different backend, writer count, or volume layout
+        (rank-elastic restore).
+
+        ``sharding`` places the restored arrays onto devices: a single
+        ``jax.sharding.Sharding`` (applied to every leaf) or a pytree of
+        shardings matching the state — the hook for restoring onto a
+        DIFFERENT mesh than the writer's (see ``repro.sharding.specs``).
+        """
         verify = self.spec.verify_on_load if verify is None else verify
         preverified = False
         if step is None:
@@ -458,12 +583,47 @@ class CheckpointEngine:
             raise FileNotFoundError(f"no checkpoint directory {d}")
         marker = (layout.read_commit_marker(d) if preverified else None)
         if marker is None:
-            marker = layout.verify_commit(d, deep=verify)
+            marker = layout.verify_commit(d, deep=verify,
+                                          volume_roots=self.volume_roots())
         reader = self._reader_for(marker.get("backend", self.spec.backend))
-        return reader.read_payload(d, step, like=like, verify=verify)
+        state, manifest = reader.read_payload_sharded(
+            d, step, like=like, verify=verify, marker=marker,
+            volume_roots=self.volume_roots())
+        if sharding is not None:
+            state = _apply_sharding(state, sharding)
+        return state, manifest
+
+    def load_tensor(self, name: str, step: Optional[int] = None):
+        """Partial restore of one tensor by manifest name, reading only
+        the byte spans the global index maps it to — across however many
+        shards/volumes the writer striped it onto."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no committed checkpoint under {self.spec.directory}")
+        d = os.path.join(self.spec.directory, layout.step_dir_name(step))
+        marker = layout.verify_commit(d, deep=False)
+        reader = self._reader_for(marker.get("backend", self.spec.backend))
+        if not hasattr(reader, "load_tensor"):
+            raise NotImplementedError(
+                f"backend {marker.get('backend')!r} has no partial-read "
+                f"support")
+        return reader.load_tensor(d, step, name, marker=marker,
+                                  volume_roots=self.volume_roots())
 
     def _reader_for(self, backend_name: str) -> CheckpointBackend:
         if backend_name not in self._read_backends:
             self._read_backends[backend_name] = \
                 get_backend_factory(backend_name)(self.spec)
         return self._read_backends[backend_name]
+
+
+def _apply_sharding(state, sharding):
+    """device_put the restored pytree: one Sharding for every leaf, or a
+    matching pytree of shardings (rank-elastic restore onto a new mesh)."""
+    import jax
+
+    if isinstance(sharding, jax.sharding.Sharding):
+        return jax.tree.map(lambda x: jax.device_put(x, sharding), state)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), state, sharding)

@@ -1,25 +1,32 @@
 """Checkpoint directory layout + crash-atomic commit protocol.
 
-A checkpoint is PUBLISHED, never written in place (DESIGN.md §3):
+A checkpoint is PUBLISHED, never written in place (DESIGN.md §3/§5):
 
-    ckpt_00000042.tmp/        staging — writers land every byte here
-      manifest.json
+    ckpt_00000042.tmp/        staging on the PRIMARY root — the global
+      manifest.json           index plus any primary-resident shards
       shard_000.bin ...
-    ckpt_00000042.tmp/COMMIT  marker: layout_version, manifest CRC32,
-                              expected size of every payload file
-    ckpt_00000042/            os.replace() of the staging directory —
-                              the atomic publish point
+    <volume>/ckpt_00000042.shards-<nonce>.tmp/
+      shard_001.bin ...       per-volume staging for striped shards
+    ckpt_00000042.tmp/COMMIT  global marker: layout_version, manifest
+                              CRC32, every payload file's size, and —
+                              layout v2 — every shard's (volume, dir,
+                              size, crc32) across ALL volumes
+    ckpt_00000042/            os.replace() of the primary staging dir —
+                              the single atomic publish point
 
-A crash at ANY instant therefore leaves either (a) a stale ``.tmp``
-directory that readers ignore, or (b) a fully committed checkpoint.
-There is no third state: the rename is atomic on POSIX filesystems and
-happens only after the COMMIT marker (and optionally the payload) has
-been fsynced.
+Secondary-volume shard directories are published (renamed to their
+final generation name) BEFORE the global COMMIT is written, but they
+are meaningless until a committed primary references them — readers
+only ever discover shards through the primary's COMMIT. A crash at ANY
+instant therefore leaves either (a) stale ``.tmp``/unreferenced shard
+directories that readers ignore and startup sweeps, or (b) a fully
+committed checkpoint. There is no third state.
 
 Readers use :func:`committed_steps` / :func:`verify_commit`; anything
 that fails the marker checks (missing COMMIT, checksum mismatch,
-truncated payload file, unknown future ``layout_version``) is treated
-as torn and skipped — or raised loudly on an explicit ``load``.
+truncated payload file or shard on any volume, unknown future
+``layout_version``) is treated as torn and skipped — or raised loudly
+on an explicit ``load``.
 """
 from __future__ import annotations
 
@@ -27,11 +34,15 @@ import json
 import os
 import re
 import zlib
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 #: Bump when the on-disk layout changes incompatibly. Readers refuse
 #: directories whose COMMIT declares a NEWER version (forward compat).
-LAYOUT_VERSION = 1
+#: v1 = single-directory payloads; v2 = sharded multi-volume layout
+#: (global index + per-volume shard dirs). v1 remains readable: its
+#: markers carry no ``shards``/``volume_dirs``, so every check and
+#: shard-path resolution falls back to the primary directory.
+LAYOUT_VERSION = 2
 
 COMMIT_FILE = "COMMIT"
 MANIFEST_FILE = "manifest.json"
@@ -39,6 +50,8 @@ STAGING_SUFFIX = ".tmp"
 
 _STEP_RE = re.compile(r"^ckpt_(\d+)$")
 _STAGING_RE = re.compile(r"^ckpt_(\d+)\.tmp$")
+_SHARDS_RE = re.compile(r"^ckpt_(\d+)\.shards-([0-9a-f]+)$")
+_SHARDS_DEBRIS_RE = re.compile(r"^ckpt_(\d+)\.shards-[0-9a-f]+\.(tmp|trash)$")
 
 
 class CheckpointError(IOError):
@@ -69,6 +82,60 @@ def parse_staging_step(name: str) -> Optional[int]:
     return int(m.group(1)) if m else None
 
 
+def shard_dir_name(step: int, nonce: str) -> str:
+    """Final name of a secondary volume's shard directory. The nonce
+    makes every save generation collision-free, so re-saving a step
+    never overwrites the committed generation's shard files in place —
+    old generations become unreferenced and are swept."""
+    return f"{step_dir_name(step)}.shards-{nonce}"
+
+
+def shard_staging_dir_name(step: int, nonce: str) -> str:
+    return shard_dir_name(step, nonce) + STAGING_SUFFIX
+
+
+def parse_shard_dir(name: str) -> Optional[int]:
+    """Step of a published shard directory name, else None."""
+    m = _SHARDS_RE.match(name)
+    return int(m.group(1)) if m else None
+
+
+def shard_dirs_for_step(root: str, step: int) -> List[str]:
+    """All published shard-generation dirs for ``step`` under ``root``."""
+    try:
+        names = os.listdir(root)
+    except OSError:
+        return []
+    return sorted(os.path.join(root, n) for n in names
+                  if parse_shard_dir(n) == step
+                  and os.path.isdir(os.path.join(root, n)))
+
+
+def resolve_shard_dir(marker: Optional[dict], directory: str, volume: int,
+                      volume_roots: Optional[Sequence[str]] = None) -> str:
+    """Directory holding a given volume's shard files for a committed
+    checkpoint. Layout v1 markers (and primary-resident volumes) resolve
+    to the checkpoint directory itself; v2 markers record the shard
+    directory name per volume plus the writer's volume roots. The
+    writer-recorded root wins; the caller's ``volume_roots`` is the
+    fallback when the recorded path no longer exists (relocated
+    volume)."""
+    vd = (marker or {}).get("volume_dirs") or {}
+    name = vd.get(str(volume))
+    if name is None:
+        return directory
+    roots = (marker or {}).get("volume_roots") or []
+    candidates = []
+    if volume < len(roots):
+        candidates.append(os.path.join(roots[volume], name))
+    if volume_roots is not None and volume < len(volume_roots):
+        candidates.append(os.path.join(volume_roots[volume], name))
+    for c in candidates:
+        if os.path.isdir(c):
+            return c
+    return candidates[0] if candidates else os.path.join(directory, name)
+
+
 def _fsync_path(path: str):
     fd = os.open(path, os.O_RDONLY)
     try:
@@ -95,16 +162,35 @@ def payload_files(directory: str) -> Dict[str, int]:
 
 
 def write_commit_marker(directory: str, step: int, backend: str,
-                        fsync: bool = True) -> dict:
+                        fsync: bool = True,
+                        shards: Optional[List[dict]] = None,
+                        volume_roots: Optional[Sequence[str]] = None,
+                        volume_dirs: Optional[Dict[str, str]] = None
+                        ) -> dict:
     """Seal ``directory`` (still at its staging path): checksum the
-    manifest, record every payload file's size, write COMMIT, fsync."""
+    manifest, record every payload file's size — and, for the sharded
+    layout, every shard's (volume, size, crc32) plus the per-volume
+    shard directory names — write COMMIT, fsync. This one marker is the
+    global commit record for the whole multi-volume checkpoint.
+
+    A checkpoint that references no secondary volume dirs is physically
+    a v1 layout (one directory holds everything), so it is stamped v1:
+    pre-sharding readers, which refuse markers from a NEWER version,
+    can still load it after a rollback. The extra ``shards`` key is
+    additive and ignored by v1 readers."""
     marker = {
-        "layout_version": LAYOUT_VERSION,
+        "layout_version": LAYOUT_VERSION if volume_dirs else 1,
         "step": step,
         "backend": backend,
         "manifest_crc32": manifest_crc32(directory),
         "files": payload_files(directory),
     }
+    if shards:
+        marker["shards"] = list(shards)
+    if volume_roots is not None:
+        marker["volume_roots"] = [os.path.abspath(r) for r in volume_roots]
+    if volume_dirs:
+        marker["volume_dirs"] = dict(volume_dirs)
     path = os.path.join(directory, COMMIT_FILE)
     with open(path, "w") as f:
         json.dump(marker, f)
@@ -130,13 +216,15 @@ def read_commit_marker(directory: str) -> Optional[dict]:
     return marker
 
 
-def verify_commit(directory: str, deep: bool = True) -> dict:
+def verify_commit(directory: str, deep: bool = True,
+                  volume_roots: Optional[Sequence[str]] = None) -> dict:
     """Validate a checkpoint directory against its COMMIT marker.
 
     Raises :class:`TornCheckpointError` when the marker is missing or the
     payload does not match it. ``deep`` additionally stats every payload
-    file (size) and re-checksums the manifest — cheap (no shard reads)
-    and catches truncated shards from a writer killed mid-flight.
+    file (size) — INCLUDING shards striped onto other volumes — and
+    re-checksums the manifest; cheap (no shard reads) and catches
+    truncated shards from a writer killed mid-flight.
     """
     marker = read_commit_marker(directory)
     if marker is None:
@@ -155,6 +243,20 @@ def verify_commit(directory: str, deep: bool = True) -> dict:
             raise TornCheckpointError(
                 f"{directory}: {name} is {actual} bytes, COMMIT recorded "
                 f"{size} — torn write")
+    for sh in marker.get("shards", []):
+        d = resolve_shard_dir(marker, directory, int(sh.get("volume", 0)),
+                              volume_roots)
+        p = os.path.join(d, sh["name"])
+        if not os.path.isfile(p):
+            raise TornCheckpointError(
+                f"{directory}: shard {sh['name']} missing from volume "
+                f"{sh.get('volume', 0)} ({d})")
+        actual = os.path.getsize(p)
+        if actual != sh["size"]:
+            raise TornCheckpointError(
+                f"{directory}: shard {sh['name']} on volume "
+                f"{sh.get('volume', 0)} is {actual} bytes, COMMIT "
+                f"recorded {sh['size']} — torn write")
     if "manifest_crc32" in marker:
         try:
             crc = manifest_crc32(directory)
@@ -169,12 +271,13 @@ def verify_commit(directory: str, deep: bool = True) -> dict:
 
 
 def is_committed(directory: str, deep: bool = False,
-                 legacy_ok: bool = False) -> bool:
+                 legacy_ok: bool = False,
+                 volume_roots: Optional[Sequence[str]] = None) -> bool:
     """True if ``directory`` holds a committed checkpoint. With
     ``legacy_ok``, a pre-engine directory (manifest.json but no COMMIT)
     also counts — those were published by the old non-atomic writers."""
     try:
-        verify_commit(directory, deep=deep)
+        verify_commit(directory, deep=deep, volume_roots=volume_roots)
         return True
     except TornCheckpointError:
         pass
@@ -216,6 +319,36 @@ def fsync_payload(directory: str):
             finally:
                 os.close(fd)
     _fsync_path(directory)
+
+
+def fsync_payloads(directories: Sequence[str]):
+    """fsync the payload of several staging dirs with one flusher per
+    FILE (os.fsync releases the GIL): the multi-volume analogue of the
+    paper's per-node SSD flush, where every volume drains concurrently
+    instead of serialising behind one thread."""
+    from concurrent.futures import ThreadPoolExecutor
+    files = []
+    for d in directories:
+        for name in os.listdir(d):
+            p = os.path.join(d, name)
+            if os.path.isfile(p):
+                files.append(p)
+
+    def _sync(p):
+        fd = os.open(p, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+    # directory fsyncs join the same pool: each one is a journal commit,
+    # and serialising them behind the file syncs costs tens of ms/volume
+    targets = files + list(directories)
+    if len(targets) > 1:
+        with ThreadPoolExecutor(min(len(targets), 16)) as ex:
+            list(ex.map(_sync, targets))
+    elif targets:
+        _sync(targets[0])
 
 
 def publish(staging: str, final: str, fsync: bool = True):
@@ -273,3 +406,93 @@ def clean_stale_staging(root: str) -> List[str]:
         shutil.rmtree(d, ignore_errors=True)
         removed.append(d)
     return removed
+
+
+def publish_fresh(staging: str, final: str, fsync: bool = True):
+    """Publish a secondary volume's shard staging dir. The generation
+    nonce guarantees ``final`` is a fresh name, so this is a plain
+    atomic rename — no parking dance needed."""
+    os.replace(staging, final)
+    if fsync:
+        _fsync_path(os.path.dirname(final) or ".")
+
+
+def referenced_shard_dirs(primary_root: str,
+                          volume_roots: Optional[Sequence[str]] = None
+                          ) -> set:
+    """Real paths of every secondary shard directory referenced by a
+    committed checkpoint under ``primary_root``."""
+    referenced = set()
+    for step in committed_steps(primary_root, legacy_ok=True):
+        d = os.path.join(primary_root, step_dir_name(step))
+        marker = read_commit_marker(d)
+        if marker is None:
+            continue
+        for v_str in (marker.get("volume_dirs") or {}):
+            sd = resolve_shard_dir(marker, d, int(v_str), volume_roots)
+            referenced.add(os.path.realpath(sd))
+    return referenced
+
+
+def clean_stale_multi(primary_root: str,
+                      volume_roots: Sequence[str]) -> List[str]:
+    """Multi-volume startup sweep. Call only when no save can be in
+    flight (engine startup).
+
+    1. Sweep the primary root's ``.tmp``/``.trash`` debris first —
+       including the re-save recovery rename — so every recoverable
+       COMMIT is back in place before reference counting.
+    2. Compute the set of shard directories referenced by any committed
+       step's COMMIT, then remove from every volume root all shard
+       staging debris and every UNREFERENCED published shard-generation
+       dir (orphans from a writer that died between per-volume publish
+       and the global COMMIT, or old generations of a re-saved step).
+
+    Shard dirs referenced by a committed COMMIT are never touched, so a
+    sweep can never strand a loadable step."""
+    import shutil
+    removed = list(clean_stale_staging(primary_root))
+    referenced = referenced_shard_dirs(primary_root, volume_roots)
+    seen_roots = set()
+    for root in volume_roots:
+        real_root = os.path.realpath(root)
+        if real_root in seen_roots:
+            continue
+        seen_roots.add(real_root)
+        try:
+            names = os.listdir(root)
+        except OSError:
+            continue
+        for name in sorted(names):
+            full = os.path.join(root, name)
+            if not os.path.isdir(full):
+                continue
+            if _SHARDS_DEBRIS_RE.match(name):
+                shutil.rmtree(full, ignore_errors=True)
+                removed.append(full)
+            elif _SHARDS_RE.match(name) \
+                    and os.path.realpath(full) not in referenced:
+                shutil.rmtree(full, ignore_errors=True)
+                removed.append(full)
+    return removed
+
+
+def delete_step(primary_root: str, step: int,
+                volume_roots: Optional[Sequence[str]] = None) -> None:
+    """Delete one checkpoint step across ALL volumes (GC path). The
+    primary directory goes first — that atomically un-commits the step,
+    so a crash mid-delete leaves only unreferenced shard dirs that the
+    startup sweep removes; shards of a still-committed step are never
+    deleted first (which would tear it)."""
+    import shutil
+    d = os.path.join(primary_root, step_dir_name(step))
+    marker = read_commit_marker(d)
+    shard_dirs = []
+    if marker is not None:
+        for v_str in (marker.get("volume_dirs") or {}):
+            shard_dirs.append(
+                resolve_shard_dir(marker, d, int(v_str), volume_roots))
+    shutil.rmtree(d, ignore_errors=True)
+    for sd in shard_dirs:
+        if os.path.realpath(sd) != os.path.realpath(d):
+            shutil.rmtree(sd, ignore_errors=True)

@@ -15,7 +15,8 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from functools import cached_property
+from typing import Dict, List, Optional, Sequence
 
 
 @dataclass(frozen=True)
@@ -41,6 +42,8 @@ class Extent:
     offset: int
     length: int
     shard_index: int       # position among the participating writers
+    volume: int = 0        # destination volume (index into the engine's
+    #                        volume roots — the paper's per-node SSDs)
 
 
 @dataclass(frozen=True)
@@ -48,28 +51,42 @@ class WritePlan:
     total_bytes: int
     extents: List[Extent]
     strategy: str
+    n_volumes: int = 1
 
     @property
     def writers(self) -> List[int]:
         return [e.rank for e in self.extents]
 
+    @cached_property
+    def _by_rank(self) -> Dict[int, Extent]:
+        # cached rank→extent mapping: extent_of is on the per-iteration
+        # save path, so an O(n) scan per writer is O(n²) per checkpoint
+        return {e.rank: e for e in self.extents}
+
     def extent_of(self, rank: int) -> Optional[Extent]:
-        for e in self.extents:
-            if e.rank == rank:
-                return e
-        return None
+        return self._by_rank.get(rank)
 
     def validate(self):
-        """Invariants: cover [0,total) exactly, disjoint, balance ≤ 1B."""
-        exts = sorted(self.extents, key=lambda e: e.offset)
+        """Invariants: extents sorted by offset AND shard_index, disjoint,
+        cover [0,total) exactly, balance ≤ 1B, volumes in range."""
         pos = 0
-        for e in exts:
-            assert e.offset == pos, f"gap/overlap at {pos} vs {e.offset}"
+        for i, e in enumerate(self.extents):
+            assert e.shard_index == i, \
+                f"shard_index {e.shard_index} != position {i}"
+            assert e.length >= 0, f"negative extent length {e.length}"
+            assert e.offset == pos, \
+                f"extents not sorted/disjoint: gap or overlap at byte " \
+                f"{pos} (extent {i} starts at {e.offset})"
             pos += e.length
-        assert pos == self.total_bytes, "stream not fully covered"
+            assert 0 <= e.volume < max(self.n_volumes, 1), \
+                f"extent {i} targets volume {e.volume} of {self.n_volumes}"
+        assert pos == self.total_bytes, \
+            f"stream not fully covered: {pos} != {self.total_bytes}"
         lengths = [e.length for e in self.extents]
         if lengths:
             assert max(lengths) - min(lengths) <= 1, "imbalance > 1 byte"
+        assert len({e.rank for e in self.extents}) == len(self.extents), \
+            "duplicate writer rank"
 
 
 def select_writers(topo: Topology, strategy: str = "replica",
@@ -129,17 +146,23 @@ def predict_write_seconds(topo: Topology, total_bytes: int,
 
 
 def make_plan(total_bytes: int, topo: Topology, strategy: str = "replica",
-              writers_per_node: int = 2) -> WritePlan:
-    """Byte-granularity balanced partition over the selected writers."""
+              writers_per_node: int = 2, n_volumes: int = 1) -> WritePlan:
+    """Byte-granularity balanced partition over the selected writers.
+
+    ``n_volumes`` stripes the shards round-robin across that many
+    destination volumes (directory roots standing in for the paper's
+    per-node SSDs), so concurrent writers drive distinct devices instead
+    of contending on one filesystem."""
     writers = select_writers(topo, strategy, writers_per_node, total_bytes)
     n = len(writers)
+    n_volumes = max(1, n_volumes)
     base, rem = divmod(total_bytes, n)
     extents, off = [], 0
     for i, rank in enumerate(writers):
         ln = base + (1 if i < rem else 0)
         extents.append(Extent(rank=rank, offset=off, length=ln,
-                              shard_index=i))
+                              shard_index=i, volume=i % n_volumes))
         off += ln
-    plan = WritePlan(total_bytes, extents, strategy)
+    plan = WritePlan(total_bytes, extents, strategy, n_volumes=n_volumes)
     plan.validate()
     return plan

@@ -12,11 +12,9 @@ mid-GC always leaves a loadable checkpoint.
 """
 from __future__ import annotations
 
-import os
-import shutil
 import threading
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 from repro.core import layout
 
@@ -44,21 +42,27 @@ def collectable(directory: str, policy: RetentionPolicy) -> List[int]:
     return [s for s in steps if s not in keep]
 
 
-def collect(directory: str, policy: RetentionPolicy) -> List[int]:
-    """Delete collectable checkpoints. Returns the deleted steps."""
+def collect(directory: str, policy: RetentionPolicy,
+            volume_roots: Optional[Sequence[str]] = None) -> List[int]:
+    """Delete collectable checkpoints — a step is removed across ALL
+    volumes its COMMIT references (primary dir first, so the step is
+    un-committed atomically; a crash mid-delete strands only
+    unreferenced shard dirs, which the engine's startup sweep removes).
+    Returns the deleted steps."""
     victims = collectable(directory, policy)
     for s in victims:
-        shutil.rmtree(os.path.join(directory, layout.step_dir_name(s)),
-                      ignore_errors=True)
+        layout.delete_step(directory, s, volume_roots)
     return victims
 
 
 class RetentionManager:
     """Runs GC off the critical path after each commit."""
 
-    def __init__(self, directory: str, policy: RetentionPolicy):
+    def __init__(self, directory: str, policy: RetentionPolicy,
+                 volume_roots: Optional[Sequence[str]] = None):
         self.directory = directory
         self.policy = policy
+        self.volume_roots = volume_roots
         self._lock = threading.Lock()
         self.deleted: List[int] = []
 
@@ -66,4 +70,5 @@ class RetentionManager:
         """Call after a checkpoint commits (e.g. from the pipeline helper
         or the trainer loop). Thread-safe, idempotent."""
         with self._lock:
-            self.deleted += collect(self.directory, self.policy)
+            self.deleted += collect(self.directory, self.policy,
+                                    self.volume_roots)

@@ -98,6 +98,22 @@ def serialize(state) -> Tuple[Manifest, List[np.ndarray]]:
     return Manifest(records, offset, treedef=str(treedef)), buffers
 
 
+def decode_record(rec: TensorRecord, raw) -> np.ndarray:
+    """Rebuild ONE tensor from its raw bytes: dtype decode (bf16 is
+    stored bit-cast to uint16; quantized records carry "int8|<orig>")
+    plus the reshape guard for synthetic ``#`` records (e.g. "#scale")
+    whose element count differs from the original tensor shape."""
+    dtype = rec.dtype.split("|")[0]
+    if dtype == "bfloat16":
+        import ml_dtypes
+        arr = np.frombuffer(raw, np.uint16).view(ml_dtypes.bfloat16)
+    else:
+        arr = np.frombuffer(raw, np.dtype(dtype))
+    if rec.name.find("#") < 0 or arr.size == int(np.prod(rec.shape)):
+        return arr.reshape(rec.shape)
+    return arr
+
+
 def deserialize(manifest: Manifest, data: bytes | bytearray | memoryview,
                 like=None):
     """Rebuild arrays from the checkpoint stream. If ``like`` (a pytree of
@@ -106,20 +122,36 @@ def deserialize(manifest: Manifest, data: bytes | bytearray | memoryview,
     out = {}
     mv = memoryview(data)
     for rec in manifest.records:
-        raw = mv[rec.offset:rec.offset + rec.nbytes]
-        dtype = rec.dtype.split("|")[0]   # "int8|<orig>" for quantized
-        if dtype == "bfloat16":
-            import ml_dtypes
-            arr = np.frombuffer(raw, np.uint16).view(ml_dtypes.bfloat16)
-        else:
-            arr = np.frombuffer(raw, np.dtype(dtype))
-        out[rec.name] = arr.reshape(rec.shape) if rec.name.find("#") < 0 \
-            or arr.size == int(np.prod(rec.shape)) else arr
+        out[rec.name] = decode_record(rec, mv[rec.offset:rec.offset
+                                              + rec.nbytes])
     if like is not None:
         leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
         new_leaves = [out[_path_str(p)] for p, _ in leaves]
         return jax.tree_util.tree_unflatten(treedef, new_leaves)
     return out
+
+
+def tensor_spans(records: Sequence[TensorRecord],
+                 extents) -> dict:
+    """Global index for the sharded layout (DESIGN.md §5): map every
+    tensor to the ``[shard_index, offset_in_shard, length]`` spans that
+    hold its bytes. Byte-granularity extents split tensors mid-stream,
+    so a tensor may span several shards; a rank-elastic reader uses this
+    index to fetch exactly the byte ranges it needs, from any number of
+    shards, regardless of the writer topology that produced them."""
+    exts = sorted(extents, key=lambda e: e.offset)
+    index: dict = {}
+    for rec in records:
+        spans = []
+        lo, hi = rec.offset, rec.offset + rec.nbytes
+        for e in exts:
+            e_lo, e_hi = e.offset, e.offset + e.length
+            if e_hi <= lo or e_lo >= hi:
+                continue
+            s, t = max(lo, e_lo), min(hi, e_hi)
+            spans.append([e.shard_index, s - e_lo, t - s])
+        index[rec.name] = spans
+    return index
 
 
 class ByteStreamView:

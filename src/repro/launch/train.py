@@ -43,6 +43,10 @@ def main():
                     choices=["auto", "replica", "socket"])
     ap.add_argument("--dp", type=int, default=4,
                     help="simulated DP degree for checkpoint writers")
+    ap.add_argument("--volumes", default=None,
+                    help="comma-separated shard destination volume roots "
+                         "(one per SSD/mount); shards are striped across "
+                         "them, manifest+COMMIT stay under --ckpt-dir")
     ap.add_argument("--restore", action="store_true")
     args = ap.parse_args()
 
@@ -56,6 +60,7 @@ def main():
         ckpt = CheckpointPolicy(
             directory=args.ckpt_dir, every=args.every, mode=args.ckpt_mode,
             pipeline=args.pipeline, backend=args.backend,
+            volumes=(args.volumes.split(",") if args.volumes else None),
             fp=FastPersistConfig(
                 strategy=args.writers,
                 topology=Topology(dp_degree=args.dp, ranks_per_node=4),

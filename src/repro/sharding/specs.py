@@ -173,3 +173,12 @@ def cache_specs(cache_tree, mesh: Mesh, batch_size: int):
 def to_shardings(spec_tree, mesh: Mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated_specs(tree):
+    """Fully-replicated PartitionSpecs for an arbitrary state pytree —
+    the safe default for rank-elastic checkpoint restore onto a mesh the
+    writer never saw (``CheckpointEngine.load(..., sharding=...)``);
+    swap in :func:`param_specs`/:func:`zero1_specs` leaves where the
+    target mesh should actually shard."""
+    return jax.tree.map(lambda _: P(), tree)

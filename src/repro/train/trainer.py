@@ -43,6 +43,9 @@ class CheckpointPolicy:
     #                                    overrides mode/pipeline when set
     fp: FastPersistConfig = field(default_factory=FastPersistConfig)
     retention: Optional[RetentionPolicy] = None   # None = keep everything
+    #: shard destination volume roots (one per SSD/mount); None = all
+    #: shards under ``directory`` (see CheckpointSpec.volumes)
+    volumes: Optional[list] = None
 
     def backend_name(self) -> str:
         """Map the (legacy) mode/pipeline pair onto a registry key."""
@@ -88,8 +91,12 @@ class Trainer:
 
     def _setup_checkpointer(self, pol: CheckpointPolicy):
         self.engine = CheckpointEngine(CheckpointSpec(
-            directory=pol.directory, backend=pol.backend_name(), fp=pol.fp))
-        self._retain = (RetentionManager(pol.directory, pol.retention)
+            directory=pol.directory, backend=pol.backend_name(), fp=pol.fp,
+            volumes=pol.volumes))
+        # GC must follow the same volume mapping the engine writes with,
+        # or deleting a step would strand its striped shards
+        self._retain = (RetentionManager(pol.directory, pol.retention,
+                                         self.engine.volume_roots())
                         if pol.retention else None)
 
     # ------------------------------------------------------------ state

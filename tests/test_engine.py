@@ -406,14 +406,19 @@ def test_load_without_checkpoints_raises(tmp_path):
 
 
 def test_manifest_has_layout_version(tmp_path):
+    """Version stamping is rollback-safe: a save whose shards never
+    leave the primary directory is physically a v1 layout and is
+    stamped 1 (pre-sharding readers refuse NEWER versions, so stamping
+    the current LAYOUT_VERSION would brick them after a rollback);
+    only genuinely striped checkpoints declare LAYOUT_VERSION."""
     with CheckpointEngine(_spec(tmp_path, "fastpersist")) as eng:
         eng.save(_state(), 1)
     meta = json.loads((tmp_path / layout.step_dir_name(1) /
                        layout.MANIFEST_FILE).read_text())
-    assert meta["layout_version"] == layout.LAYOUT_VERSION
+    assert meta["layout_version"] == 1
     marker = json.loads((tmp_path / layout.step_dir_name(1) /
                          layout.COMMIT_FILE).read_text())
-    assert marker["layout_version"] == layout.LAYOUT_VERSION
+    assert marker["layout_version"] == 1
     assert set(marker["files"]) >= {layout.MANIFEST_FILE}
 
 

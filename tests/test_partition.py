@@ -6,7 +6,7 @@ try:
 except ModuleNotFoundError:          # property-based cases are skipped,
     HAVE_HYPOTHESIS = False          # example-based ones still run
 
-from repro.core.partition import (Topology, make_plan,
+from repro.core.partition import (Extent, Topology, WritePlan, make_plan,
                                   predict_write_seconds, select_writers)
 
 
@@ -67,6 +67,49 @@ def test_single_rank_plan():
     plan = make_plan(12345, Topology(dp_degree=1), "replica")
     assert len(plan.extents) == 1
     assert plan.extents[0].length == 12345
+
+
+def test_extent_of_uses_cached_rank_mapping():
+    """Satellite: extent_of is O(1) via a cached rank→extent dict, and
+    agrees with a linear scan for every writer (None for non-writers)."""
+    plan = make_plan(10**6 + 3, Topology(dp_degree=64, ranks_per_node=8),
+                     "socket", writers_per_node=2)
+    assert plan._by_rank is plan._by_rank          # built once, cached
+    for rank in range(64):
+        expect = next((e for e in plan.extents if e.rank == rank), None)
+        assert plan.extent_of(rank) == expect
+
+
+@pytest.mark.parametrize("bad,msg", [
+    # gap between extents
+    ([Extent(0, 0, 10, 0), Extent(1, 11, 9, 1)], "sorted/disjoint"),
+    # overlap
+    ([Extent(0, 0, 10, 0), Extent(1, 5, 15, 1)], "sorted/disjoint"),
+    # unsorted (shard_index out of position)
+    ([Extent(0, 10, 10, 1), Extent(1, 0, 10, 0)], "shard_index"),
+    # not covering total_bytes
+    ([Extent(0, 0, 10, 0)], "not fully covered"),
+    # duplicate writer rank
+    ([Extent(0, 0, 10, 0), Extent(0, 10, 10, 1)], "duplicate"),
+    # volume out of range
+    ([Extent(0, 0, 20, 0, volume=2)], "volume"),
+])
+def test_validate_rejects_malformed_plans(bad, msg):
+    with pytest.raises(AssertionError, match=msg):
+        WritePlan(20, bad, "replica", n_volumes=1).validate()
+
+
+def test_volume_striping_balanced():
+    """Round-robin volume assignment: shard counts per volume differ by
+    at most one, and every volume is used."""
+    for dp, nv in [(4, 3), (8, 2), (5, 5), (7, 3)]:
+        plan = make_plan(10**6, Topology(dp_degree=dp), "replica",
+                         n_volumes=nv)
+        counts = {}
+        for e in plan.extents:
+            counts[e.volume] = counts.get(e.volume, 0) + 1
+        assert set(counts) == set(range(min(dp, nv)))
+        assert max(counts.values()) - min(counts.values()) <= 1
 
 
 def test_auto_beats_or_ties_fixed_strategies():

@@ -1,0 +1,419 @@
+"""Sharded multi-volume checkpoint layout (DESIGN.md §5).
+
+Covers the tentpole guarantees:
+  * rank-elastic restore — a checkpoint written by (W writers, V
+    volumes) loads bit-identically on a reader with a different
+    topology and volume configuration, including tensors split
+    mid-stream across shard boundaries;
+  * the global index (tensor → [shard, offset, length] spans) drives
+    partial single-tensor reads across volumes;
+  * crash injection on the sharded commit path: a writer killed between
+    per-volume staging/publish and the global COMMIT, or mid re-save
+    ``.trash`` swap, never costs a loadable step, and the startup sweep
+    leaves no orphaned shard directories on any volume;
+  * retention GC deletes a step across ALL volumes.
+"""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import layout
+from repro.core.checkpointer import FastPersistConfig
+from repro.core.engine import CheckpointEngine, CheckpointSpec
+from repro.core.partition import Topology
+from repro.core.retention import RetentionPolicy, collect
+from repro.core.serializer import serialize
+
+ELASTIC_CASES = [(1, 1), (4, 1), (4, 3), (8, 2)]
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 3)
+    return {
+        "big": jax.random.normal(ks[0], (257, 129)),      # splits mid-stream
+        "bf16": jax.random.normal(ks[1], (33, 17), jnp.bfloat16),
+        "opt": {"m": jax.random.normal(ks[2], (64,))},
+        "step": jnp.int32(11),
+    }
+
+
+def _spec(primary, writers, volumes, **kw):
+    return CheckpointSpec(
+        directory=str(primary),
+        backend=kw.pop("backend", "fastpersist"),
+        volumes=[str(v) for v in volumes] if volumes else None,
+        fp=FastPersistConfig(strategy="replica",
+                             topology=Topology(dp_degree=writers)), **kw)
+
+
+def _vol_dirs(tmp_path, n):
+    out = []
+    for i in range(n):
+        d = tmp_path / f"vol{i}"
+        d.mkdir(exist_ok=True)
+        out.append(d)
+    return out
+
+
+def _stream_bytes(state):
+    """Bit-exact serialized stream of a pytree (dtype-faithful)."""
+    _, buffers = serialize(state)
+    return b"".join(bytes(memoryview(b).cast("B")) for b in buffers)
+
+
+def _assert_bit_identical(a, b):
+    assert _stream_bytes(a) == _stream_bytes(b)
+
+
+def _assert_no_orphans(primary, volume_roots):
+    """After a sweep: no staging/trash debris anywhere, and every
+    published shard dir is referenced by a committed COMMIT."""
+    referenced = layout.referenced_shard_dirs(str(primary),
+                                              [str(v) for v in volume_roots])
+    for root in {str(primary), *[str(v) for v in volume_roots]}:
+        for name in os.listdir(root):
+            assert not name.endswith(".tmp"), f"{root}/{name}"
+            assert not name.endswith(".trash"), f"{root}/{name}"
+            if layout.parse_shard_dir(name) is not None:
+                full = os.path.realpath(os.path.join(root, name))
+                assert full in referenced, f"orphaned shard dir {full}"
+
+
+# ------------------------------------------------------- rank elasticity
+@pytest.mark.parametrize("writers,volumes", ELASTIC_CASES)
+def test_rank_elastic_roundtrip(tmp_path, writers, volumes):
+    """Save with (writers, volumes); load with a DIFFERENT engine whose
+    topology and volume list never matched the writer's."""
+    state = _state()
+    prim = tmp_path / "ckpt"
+    vols = _vol_dirs(tmp_path, volumes) if volumes > 1 else None
+    with CheckpointEngine(_spec(prim, writers, vols)) as eng:
+        stats = eng.save(state, 5, extras={"step": 5}).result()
+        assert stats.n_writers == writers
+        assert len(stats.shards) == writers
+        if volumes > 1:
+            assert {s["volume"] for s in stats.shards} == set(range(volumes))
+    # elastic reader: different writer count, no volume config at all
+    with CheckpointEngine(_spec(prim, 3, None)) as reader:
+        assert reader.latest_step() == 5
+        loaded, manifest = reader.load(like=state)
+        _assert_bit_identical(loaded, state)
+        assert manifest.extras["step"] == 5
+
+
+def test_tensor_split_mid_stream_across_shards(tmp_path):
+    """The big tensor's bytes must straddle shard boundaries, and still
+    restore bit-identically (both via full load and the index path)."""
+    state = _state()
+    prim = tmp_path / "ckpt"
+    vols = _vol_dirs(tmp_path, 3)
+    with CheckpointEngine(_spec(prim, 4, vols)) as eng:
+        eng.save(state, 1)
+        meta = json.loads(
+            (prim / layout.step_dir_name(1) / layout.MANIFEST_FILE)
+            .read_text())
+        spans = meta["index"]["big"]
+        assert len(spans) >= 2        # genuinely split across shards
+        assert sum(s[2] for s in spans) == \
+            np.asarray(state["big"]).nbytes
+        got = eng.load_tensor("big", step=1)
+        np.testing.assert_array_equal(got, np.asarray(state["big"]))
+        # bf16 partial read too (dtype-faithful reassembly)
+        got16 = eng.load_tensor("bf16", step=1)
+        assert got16.tobytes() == np.asarray(state["bf16"]).tobytes()
+
+
+def test_striped_checkpoint_declares_layout_v2(tmp_path):
+    """Striped checkpoints (shards off the primary) declare
+    LAYOUT_VERSION so old readers refuse them instead of mis-reading a
+    partial directory; unstriped saves stay stamped v1 (see
+    test_engine.test_manifest_has_layout_version)."""
+    state = _state()
+    prim = tmp_path / "ckpt"
+    with CheckpointEngine(_spec(prim, 4, _vol_dirs(tmp_path, 2))) as eng:
+        eng.save(state, 1)
+    d = prim / layout.step_dir_name(1)
+    meta = json.loads((d / layout.MANIFEST_FILE).read_text())
+    marker = json.loads((d / layout.COMMIT_FILE).read_text())
+    assert meta["layout_version"] == layout.LAYOUT_VERSION == 2
+    assert marker["layout_version"] == 2
+    assert marker["volume_dirs"]
+
+
+def test_volume_agnostic_backend_leaves_no_empty_generations(tmp_path):
+    """A backend that ignores volume_dirs (baseline) must not litter
+    the volumes with empty generation dirs or record them in COMMIT."""
+    state = _state()
+    prim = tmp_path / "ckpt"
+    vols = _vol_dirs(tmp_path, 2)
+    with CheckpointEngine(_spec(prim, 1, vols, backend="baseline")) as eng:
+        eng.save(state, 1)
+        for v in vols:
+            assert layout.shard_dirs_for_step(str(v), 1) == []
+        marker = json.loads((prim / layout.step_dir_name(1) /
+                             layout.COMMIT_FILE).read_text())
+        assert "volume_dirs" not in marker
+        assert marker["layout_version"] == 1     # physically v1
+        loaded, _ = eng.load(1, like=state)
+        _assert_bit_identical(loaded, state)
+
+
+def test_aliased_volume_roots_share_one_generation(tmp_path):
+    """Duplicate/symlinked volume roots must not double-publish: the
+    aliases resolve to ONE generation dir and the save succeeds."""
+    state = _state()
+    prim = tmp_path / "ckpt"
+    vol = tmp_path / "vol0"
+    vol.mkdir()
+    alias = tmp_path / "vol0-link"
+    os.symlink(vol, alias)
+    with CheckpointEngine(_spec(prim, 4, [vol, alias])) as eng:
+        eng.save(state, 1)
+        assert len(layout.shard_dirs_for_step(str(vol), 1)) == 1
+        loaded, _ = eng.load(1, like=state)
+        _assert_bit_identical(loaded, state)
+
+
+def test_load_tensor_quantized_scale_record(tmp_path):
+    """Partial reads of quantized checkpoints: synthetic '#scale'
+    records have fewer elements than their recorded (original) shape —
+    decode must apply the same reshape guard as full deserialize."""
+    state = {"w": jnp.ones((512, 16), jnp.float32)}
+    prim = tmp_path / "ckpt"
+    spec = _spec(prim, 4, _vol_dirs(tmp_path, 2))
+    spec.fp.quantize = True
+    with CheckpointEngine(spec) as eng:
+        eng.save(state, 1)
+        q = eng.load_tensor("w#q8", step=1)
+        assert q.dtype == np.int8 and q.size == 512 * 16
+        scale = eng.load_tensor("w#scale", step=1)
+        assert scale.dtype == np.float32
+        assert scale.size < 512 * 16            # per-block, not per-elem
+        loaded, _ = eng.load(1, like=state)     # full path still agrees
+        np.testing.assert_allclose(np.asarray(loaded["w"]),
+                                   np.asarray(state["w"]), rtol=1e-2)
+
+
+def test_index_covers_every_tensor(tmp_path):
+    state = _state()
+    prim = tmp_path / "ckpt"
+    with CheckpointEngine(_spec(prim, 4, _vol_dirs(tmp_path, 2))) as eng:
+        eng.save(state, 1)
+    meta = json.loads(
+        (prim / layout.step_dir_name(1) / layout.MANIFEST_FILE).read_text())
+    for rec in meta["records"]:
+        spans = meta["index"][rec["name"]]
+        assert sum(s[2] for s in spans) == rec["nbytes"]
+
+
+def test_volumes_including_primary(tmp_path):
+    """A volume list containing the primary root keeps those shards in
+    the step directory itself (no generation dir for the primary)."""
+    state = _state()
+    prim = tmp_path / "ckpt"
+    vol1 = tmp_path / "vol1"
+    with CheckpointEngine(_spec(prim, 2, [prim, vol1])) as eng:
+        eng.save(state, 1)
+        names = os.listdir(prim / layout.step_dir_name(1))
+        assert "shard_000.bin" in names       # primary-resident shard
+        assert layout.shard_dirs_for_step(str(vol1), 1)
+        loaded, _ = eng.load(1, like=state)
+        _assert_bit_identical(loaded, state)
+
+
+def test_mesh_elastic_restore(tmp_path):
+    """Restore onto a mesh the writer never saw, via sharding/specs."""
+    from jax.sharding import Mesh
+    from repro.sharding.specs import replicated_specs, to_shardings
+
+    state = _state()
+    prim = tmp_path / "ckpt"
+    with CheckpointEngine(_spec(prim, 4, _vol_dirs(tmp_path, 2))) as eng:
+        eng.save(state, 2)
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        shardings = to_shardings(replicated_specs(state), mesh)
+        loaded, _ = eng.load(2, like=state, sharding=shardings)
+        _assert_bit_identical(loaded, state)
+        leaf = jax.tree.leaves(loaded)[0]
+        assert leaf.sharding.mesh == mesh
+
+
+# ------------------------------------------------------- crash injection
+def test_crash_between_volume_publish_and_global_commit(tmp_path):
+    """Writer killed after the per-volume shard dirs published but
+    before the global COMMIT: the step is invisible, latest_step falls
+    back to the previous good step, and the sweep removes the orphans."""
+    state = _state()
+    prim = tmp_path / "ckpt"
+    vols = _vol_dirs(tmp_path, 2)
+    with CheckpointEngine(_spec(prim, 4, vols)) as eng:
+        eng.save(state, 1)
+        eng.save(_state(2), 2)
+    # reconstruct the kill instant for step 2: shard dirs are published
+    # on the volumes, but the primary never got COMMIT + rename
+    final = prim / layout.step_dir_name(2)
+    staging = prim / layout.staging_dir_name(2)
+    os.remove(final / layout.COMMIT_FILE)
+    os.replace(final, staging)
+    with CheckpointEngine(_spec(prim, 4, vols,
+                                clean_stale_staging=False)) as eng:
+        assert eng.latest_step() == 1            # never a torn step 2
+        loaded, _ = eng.load(like=state)
+        _assert_bit_identical(loaded, state)
+    with CheckpointEngine(_spec(prim, 4, vols)) as eng:  # startup sweep
+        assert eng.latest_step() == 1
+        assert not staging.exists()
+        for v in vols:
+            assert layout.shard_dirs_for_step(str(v), 2) == []
+        _assert_no_orphans(prim, vols)
+        loaded, _ = eng.load(1, like=state)
+        _assert_bit_identical(loaded, state)
+
+
+def test_crash_mid_resave_trash_swap(tmp_path):
+    """Worst instant of a re-save: the old committed primary is parked
+    at ``.trash``, the new staging is sealed but unpublished, and a new
+    shard generation sits on every volume. Startup must recover the old
+    step (whose generation dirs are still intact) and sweep the rest."""
+    state = _state()
+    prim = tmp_path / "ckpt"
+    vols = _vol_dirs(tmp_path, 2)
+    with CheckpointEngine(_spec(prim, 4, vols)) as eng:
+        eng.save(state, 1)
+    final = prim / layout.step_dir_name(1)
+    # new generation published on the volumes (the re-save got that far)
+    for v in vols:
+        gen_a = layout.shard_dirs_for_step(str(v), 1)[0]
+        shutil.copytree(gen_a, os.path.join(str(v),
+                                            layout.shard_dir_name(1, "ffff")))
+    # primary: old copy parked, new staging sealed but never renamed in
+    shutil.copytree(final, prim / layout.staging_dir_name(1))
+    os.replace(final, str(final) + ".trash")
+    with CheckpointEngine(_spec(prim, 4, vols)) as eng:
+        assert eng.latest_step() == 1            # old copy recovered
+        loaded, _ = eng.load(1, like=state)
+        _assert_bit_identical(loaded, state)
+        _assert_no_orphans(prim, vols)           # gen "ffff" swept
+    for v in vols:
+        assert len(layout.shard_dirs_for_step(str(v), 1)) == 1
+
+
+def test_resave_supersedes_old_generation(tmp_path):
+    """A successful re-save of a step leaves exactly one generation per
+    volume and loads the NEW payload."""
+    s1, s2 = _state(1), _state(2)
+    prim = tmp_path / "ckpt"
+    vols = _vol_dirs(tmp_path, 2)
+    with CheckpointEngine(_spec(prim, 4, vols)) as eng:
+        eng.save(s1, 7)
+        eng.save(s2, 7)
+        loaded, _ = eng.load(7, like=s2)
+        _assert_bit_identical(loaded, s2)
+        for v in vols:
+            assert len(layout.shard_dirs_for_step(str(v), 7)) == 1
+        _assert_no_orphans(prim, vols)
+
+
+def test_sweep_never_touches_referenced_generations(tmp_path):
+    state = _state()
+    prim = tmp_path / "ckpt"
+    vols = _vol_dirs(tmp_path, 3)
+    with CheckpointEngine(_spec(prim, 8, vols)) as eng:
+        eng.save(state, 1)
+    removed = layout.clean_stale_multi(str(prim), [str(v) for v in vols])
+    assert removed == []
+    with CheckpointEngine(_spec(prim, 8, vols)) as eng:
+        loaded, _ = eng.load(1, like=state)
+        _assert_bit_identical(loaded, state)
+
+
+def test_missing_shard_on_volume_is_torn(tmp_path):
+    """Deleting one striped shard file makes the step torn: load raises,
+    latest_step falls back."""
+    state = _state()
+    prim = tmp_path / "ckpt"
+    vols = _vol_dirs(tmp_path, 2)
+    with CheckpointEngine(_spec(prim, 4, vols)) as eng:
+        eng.save(state, 1)
+        eng.save(state, 2)
+        gen = layout.shard_dirs_for_step(str(vols[1]), 2)[0]
+        victim = os.path.join(gen, sorted(os.listdir(gen))[0])
+        os.remove(victim)
+        with pytest.raises(layout.TornCheckpointError, match="shard"):
+            eng.load(2, like=state)
+        assert eng.latest_step() == 1
+
+
+def test_truncated_striped_shard_is_torn(tmp_path):
+    state = _state()
+    prim = tmp_path / "ckpt"
+    vols = _vol_dirs(tmp_path, 2)
+    with CheckpointEngine(_spec(prim, 4, vols)) as eng:
+        eng.save(state, 1)
+        gen = layout.shard_dirs_for_step(str(vols[0]), 1)[0]
+        victim = os.path.join(gen, sorted(os.listdir(gen))[0])
+        with open(victim, "r+b") as f:
+            f.truncate(os.path.getsize(victim) // 2)
+        with pytest.raises(layout.TornCheckpointError, match="torn"):
+            eng.load(1, like=state)
+        assert eng.latest_step() is None
+
+
+# ---------------------------------------------------------- retention GC
+def test_retention_deletes_step_across_all_volumes(tmp_path):
+    state = _state()
+    prim = tmp_path / "ckpt"
+    vols = _vol_dirs(tmp_path, 2)
+    roots = [str(v) for v in vols]
+    with CheckpointEngine(_spec(prim, 4, vols)) as eng:
+        for s in (1, 2, 3, 4):
+            eng.save(state, s)
+        deleted = collect(str(prim), RetentionPolicy(keep_last=2), roots)
+        assert deleted == [1, 2]
+        for s in (1, 2):
+            assert not (prim / layout.step_dir_name(s)).exists()
+            for v in vols:
+                assert layout.shard_dirs_for_step(str(v), s) == []
+        _assert_no_orphans(prim, vols)
+        loaded, _ = eng.load(like=state)         # window intact
+        _assert_bit_identical(loaded, state)
+
+
+# --------------------------------------------------------------- legacy
+def test_layout_v1_checkpoint_still_loads(tmp_path):
+    """A layout-v1 (pre-sharding) checkpoint — single directory, marker
+    without shards/volume_dirs, plan extents without volume — loads
+    through version dispatch."""
+    state = _state()
+    prim = tmp_path / "ckpt"
+    with CheckpointEngine(_spec(prim, 2, None)) as eng:
+        eng.save(state, 1)
+    d = prim / layout.step_dir_name(1)
+    # strip the v2 fields to reconstruct the v1 on-disk format
+    meta = json.loads((d / layout.MANIFEST_FILE).read_text())
+    meta["layout_version"] = 1
+    meta.pop("index", None)
+    meta["plan"].pop("n_volumes", None)
+    for e in meta["plan"]["extents"]:
+        e.pop("volume", None)
+    (d / layout.MANIFEST_FILE).write_text(json.dumps(meta))
+    marker = json.loads((d / layout.COMMIT_FILE).read_text())
+    marker["layout_version"] = 1
+    for k in ("shards", "volume_dirs", "volume_roots"):
+        marker.pop(k, None)
+    marker["manifest_crc32"] = layout.manifest_crc32(str(d))
+    marker["files"] = layout.payload_files(str(d))
+    (d / layout.COMMIT_FILE).write_text(json.dumps(marker))
+    with CheckpointEngine(_spec(prim, 5, None)) as eng:
+        assert eng.latest_step() == 1
+        loaded, _ = eng.load(1, like=state)
+        _assert_bit_identical(loaded, state)
+        with pytest.raises(KeyError, match="index"):
+            eng.load_tensor("big", step=1)       # v1 has no global index
