@@ -1,12 +1,18 @@
 """Paper Fig. 7/13/14: single-rank FastPersist vs baseline across IO
 buffer sizes (2–128 MB), single vs double buffering, 16 MB and 512 MB
-checkpoints. Reports speedup over the baseline writer."""
+checkpoints. Reports speedup over the baseline writer.
+
+Extended sweeps: submission queue depth (deep NVMe queues through the
+async backend, §4.1) and serialize-arena reuse (first vs steady-state
+save staging cost)."""
 import os
 import time
 
 from benchmarks.common import (bench_dir, cleanup, drop_file, emit,
                                synth_bytes)
-from repro.core.serializer import ByteStreamView
+from repro.core import aio
+from repro.core.arena import SerializeArena
+from repro.core.serializer import ByteStreamView, serialize
 from repro.core.writer import WriterConfig, write_stream
 
 
@@ -51,6 +57,46 @@ def run(quick=True):
                 results[(ck_mb, mode, buf_mb)] = sp
                 emit(f"fig7/{mode}_{ck_mb}MB_buf{buf_mb}MB", t,
                      f"{sp:.2f}x_vs_baseline")
+
+    # --- queue-depth sweep: in-flight writes via the async backend ----
+    ck_mb = ckpt_sizes[-1]
+    data = synth_bytes(ck_mb, seed=ck_mb)
+    view = ByteStreamView([data])
+    backend = aio.resolve_backend("auto")
+    for qd in ([1, 2, 8] if quick else [1, 2, 4, 8, 16]):
+        cfg = WriterConfig(io_buffer_size=8 * 2**20, queue_depth=qd)
+        path = os.path.join(bench_dir(), "f7qd.bin")
+        ts = []
+        for _ in range(3):
+            stats = write_stream(path, view.slices(0, view.total),
+                                 view.total, cfg)
+            ts.append(stats.seconds)
+            drop_file(path)
+        t = min(ts)
+        results[(ck_mb, f"qd{qd}", backend)] = view.total / t / 1e9
+        emit(f"fig7/qd{qd}_{backend}_{ck_mb}MB", t,
+             f"{view.total/t/1e9:.2f}GBps")
+
+    # --- arena-reuse sweep: first save allocates, steady state fills --
+    import numpy as np
+    state = {"w": np.arange(ck_mb * 2**20 // 8, dtype=np.float32),
+             "m": np.ones(ck_mb * 2**20 // 8, np.float32)}
+    arena = SerializeArena()
+    t0 = time.perf_counter()
+    serialize(state, arena=arena)
+    t_first = time.perf_counter() - t0
+    t_steady = []
+    for _ in range(3):
+        state["w"] = state["w"] + 1.0
+        t0 = time.perf_counter()
+        serialize(state, arena=arena)
+        t_steady.append(time.perf_counter() - t0)
+    t_s = min(t_steady)
+    results[(ck_mb, "arena", "reuse")] = t_first / max(t_s, 1e-12)
+    emit(f"fig7/arena_first_{ck_mb}MB", t_first,
+         f"alloc+copy_{arena.n_alloc}allocs")
+    emit(f"fig7/arena_steady_{ck_mb}MB", t_s,
+         f"{t_first/max(t_s,1e-12):.2f}x_vs_first_{arena.n_reuse}reuses")
     return results
 
 

@@ -81,6 +81,13 @@ def run(quick=True):
             t = predict_write_seconds(topo, ck, ws)
             emit(f"fig8/model_{nodes}node_{strat}", t,
                  f"{ck/t/1e9:.1f}GBps_model")
+
+    # persist for make_tables (EXPERIMENTS.md §Checkpoint write path)
+    import json
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/fig8.json", "w") as f:
+        json.dump({str(k): round(v, 3) for k, v in out.items()}, f,
+                  indent=2)
     return out
 
 

@@ -1,5 +1,8 @@
 """Render the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
-experiments/dryrun/*.json. Usage:
+experiments/dryrun/*.json, plus the §Checkpoint-write-path table from
+experiments/perf_writer.json and experiments/fig8.json when present
+(produced by ``benchmarks.perf_writer`` / ``benchmarks.fig8_parallel_
+writes``). Usage:
 
     PYTHONPATH=src python -m benchmarks.make_tables > experiments/roofline.md
 """
@@ -8,6 +11,8 @@ import json
 import os
 
 DRYRUN_DIR = "experiments/dryrun"
+PERF_WRITER_JSON = "experiments/perf_writer.json"
+FIG8_JSON = "experiments/fig8.json"
 
 
 def fmt(x, digits=3):
@@ -100,5 +105,43 @@ def _arch_type(arch):
     return get_config(arch).arch_type
 
 
+def ckpt_write_tables():
+    """§Checkpoint write path: measured writer-parallelism / volume-
+    striping rows (fig8) and the perf hillclimb iterations (perf_writer,
+    incl. the multi-volume stripe and arena/crc/queue-depth results)."""
+    have_fig8 = os.path.exists(FIG8_JSON)
+    have_pw = os.path.exists(PERF_WRITER_JSON)
+    if not (have_fig8 or have_pw):
+        return
+
+    print("\n### Checkpoint write path (measured on this host)\n")
+    if have_fig8:
+        with open(FIG8_JSON) as f:
+            fig8 = json.load(f)
+        writers = {k: v for k, v in fig8.items() if k.isdigit()}
+        volumes = {k: v for k, v in fig8.items() if k.endswith("v")}
+        if writers:
+            print("| fig8 writers | GB/s |")
+            print("|---|---|")
+            for k in sorted(writers, key=int):
+                print(f"| {k} | {fmt(writers[k])} |")
+            print()
+        if volumes:
+            print("| fig8 config (4 writers × volumes) | GB/s |")
+            print("|---|---|")
+            for k in sorted(volumes):
+                print(f"| writers4_volumes{k[3:-1]} | {fmt(volumes[k])} |")
+            print()
+    if have_pw:
+        with open(PERF_WRITER_JSON) as f:
+            rows = json.load(f)
+        print("| perf_writer iteration | GB/s | verdict | hypothesis |")
+        print("|---|---|---|---|")
+        for r in rows:
+            print(f"| {r['iteration']} | {fmt(r['gbps'])} | "
+                  f"{r['verdict']} | {r['hypothesis']} |")
+
+
 if __name__ == "__main__":
     main()
+    ckpt_write_tables()

@@ -15,6 +15,7 @@ import numpy as np
 import shutil
 
 from benchmarks.common import bench_dir, cleanup, synth_bytes
+from repro.core import aio
 from repro.core.serializer import ByteStreamView
 from repro.core.writer import WriterConfig, write_stream
 
@@ -92,7 +93,7 @@ def run(quick=True, mb=384):
     def record(name, hypothesis, gbps, verdict):
         log.append({"iteration": name, "hypothesis": hypothesis,
                     "gbps": round(gbps, 3), "verdict": verdict})
-        print(f"perf_writer/{name},{view.total/gbps/1e9*1e6:.1f},"
+        print(f"perf_writer/{name},{view.total/max(gbps, 1e-9)/1e9*1e6:.1f},"
               f"{gbps:.2f}GBps_{verdict}")
 
     # iteration 0: paper-faithful defaults (32MB buffer, double, direct)
@@ -148,6 +149,76 @@ def run(quick=True, mb=384):
     record("it5_multi_volume_stripe",
            f"4 writers x 2 volumes [{mounts}] aggregate distinct stores "
            f"> 4 x 1 ({single_vol:.2f} GBps base)", multi_vol, v)
+
+    # H6: async-submission backends (io_uring > libaio > pwrite) with
+    #     queue depth > 1 exercise deep NVMe queues — on real NVMe the
+    #     deeper queue wins; on page-cache-backed stores it is ~neutral.
+    #     Every available backend is swept so the fastest is measured,
+    #     not assumed.
+    for backend in aio.BACKENDS:
+        if not aio.backend_available(backend):
+            record(f"it6_{backend}", "backend unavailable on this kernel",
+                   0.0, "skipped")
+            continue
+        for qd in (1, 4, 16):
+            g = timed_write(view, WriterConfig(backend=backend,
+                                               queue_depth=qd,
+                                               io_buffer_size=8 * 2**20))
+            v = "confirmed" if g > base * 0.9 else "refuted"
+            record(f"it6_{backend}_qd{qd}",
+                   f"{backend} qd={qd} sustains the §4.1 path", g, v)
+
+    # H7: the staging arena makes steady-state serialization cheaper
+    #     than the first save (no host-buffer reallocation) — the
+    #     DataStates-LLM lazy-pinned-buffer effect. Measured through the
+    #     REAL save path; also proves (load+verify) that the fill-phase
+    #     crc round-trips without any post-write sweep.
+    from repro.core.checkpointer import (FastPersistCheckpointer,
+                                         FastPersistConfig)
+    import numpy as _np
+    d7 = os.path.join(bench_dir(), "perf_arena")
+    ck = FastPersistCheckpointer(d7, FastPersistConfig(
+        strategy="replica", writer=WriterConfig()))
+    n = int(mb * 2**20 // 8)
+    state = {"w": _np.arange(n, dtype=_np.float32),
+             "m": _np.ones(n, _np.float32)}
+    s_first = ck.save(state, 0)
+    state["w"] = state["w"] * 1.5          # param update, same shapes
+    s_steady = ck.save(state, 1)
+    _restored, _ = ck.load(1, verify=True)  # crc-verified round-trip
+    ok = (s_steady.arena_reused and not s_first.arena_reused
+          and s_steady.serialize_seconds < s_first.serialize_seconds
+          and _np.array_equal(_restored["w"], state["w"]))
+    speedup = s_first.serialize_seconds / max(s_steady.serialize_seconds,
+                                              1e-12)
+    record("it7_arena_steady_state",
+           f"arena reuse: serialize {s_first.serialize_seconds*1e3:.1f}ms"
+           f"->{s_steady.serialize_seconds*1e3:.1f}ms "
+           f"({speedup:.2f}x), crc-verified load ok",
+           view.total / max(s_steady.serialize_seconds, 1e-12) / 1e9,
+           "confirmed" if ok else "refuted")
+    shutil.rmtree(d7, ignore_errors=True)
+
+    # H8: folding CRC into the fill phase (accumulated over LLC-resident
+    #     4MB staging buffers, hot from the copy) costs less than the
+    #     old second full sweep over the cold stream after the write.
+    crc_cfg = WriterConfig(checksum=True, io_buffer_size=4 * 2**20)
+    t_fold, t_sweep = float("inf"), float("inf")
+    for _ in range(3):
+        st_crc = write_stream(os.path.join(bench_dir(), "crc.bin"),
+                              view.slices(0, view.total), view.total,
+                              crc_cfg)
+        t_fold = min(t_fold, st_crc.crc_seconds)
+        os.remove(os.path.join(bench_dir(), "crc.bin"))
+        t0 = time.perf_counter()
+        sweep_crc = view.crc32()
+        t_sweep = min(t_sweep, time.perf_counter() - t0)
+        assert st_crc.crc32 == sweep_crc, "fill-phase crc != sweep crc"
+    v = "confirmed" if t_fold < t_sweep else "refuted"
+    record("it8_single_pass_crc",
+           f"fill-phase crc {t_fold*1e3:.1f}ms < "
+           f"post-write sweep {t_sweep*1e3:.1f}ms",
+           view.total / max(t_fold, 1e-12) / 1e9, v)
 
     # pick the best config found
     configs = {

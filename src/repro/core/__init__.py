@@ -1,4 +1,6 @@
 from repro.core import layout
+from repro.core.aio import backend_available, resolve_backend
+from repro.core.arena import SerializeArena
 from repro.core.baseline import BaselineCheckpointer, BaselineStats
 from repro.core.checkpointer import (FastPersistCheckpointer,
                                      FastPersistConfig, SaveStats)
@@ -10,7 +12,7 @@ from repro.core.layout import (LAYOUT_VERSION, CheckpointError,
 from repro.core.overlap import (IterationModel, checkpoint_seconds,
                                 effective_overhead, estimate_iteration,
                                 recovery_overhead_gpu_seconds,
-                                required_bandwidth)
+                                required_bandwidth, staging_seconds)
 from repro.core.partition import (Extent, Topology, WritePlan, make_plan,
                                   predict_write_seconds, select_writers)
 from repro.core.pipeline import PipelinedCheckpointer, PipelineStats

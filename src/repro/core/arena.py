@@ -1,0 +1,158 @@
+"""Persistent staging arena for checkpoint serialization (paper §4.1/§4.3,
+DataStates-LLM's lazy reusable pinned buffers).
+
+The naive serialize path re-allocates a fresh host copy of every tensor
+on every ``save()`` — per-leaf ``np.ascontiguousarray`` churn that the
+paper's pinned double-buffered staging eliminates. A
+:class:`SerializeArena` owns ONE page-aligned host buffer sized to the
+checkpoint stream and keyed by the state's structure
+(treedef × dtypes × shapes):
+
+  * the FIRST save lays out the stream and allocates the buffer;
+  * STEADY-STATE saves copy device→arena in place — zero Python-side
+    allocation, one memcpy per leaf, stable buffer identity (so the
+    writer's O_DIRECT staging reads from page-aligned memory every
+    time);
+  * a shape/structure change (or :meth:`invalidate`, e.g. after buffer
+    donation hands the arrays' storage back to XLA) re-lays-out, and
+    re-allocates ONLY if the new stream is larger than the capacity.
+
+Lifetime rule (DESIGN.md §6): an arena must not be refilled while a
+previous save is still reading it. The engine's single helper thread
+and ``PipelinedCheckpointer``'s one-worker queue serialize saves, so
+overlapped (async) checkpointing reuses one arena safely; concurrent
+``save()`` calls on one checkpointer need one arena each.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.serializer import (Manifest, TensorRecord, _path_str,
+                                   portable_view, store_dtype)
+from repro.core.writer import aligned_buffer
+
+PAGE = 4096
+
+
+def _host_array(leaf) -> np.ndarray:
+    """Device→host view of one leaf in the shared on-stream layout
+    (serializer.portable_view), ndim >= 1. No copy unless the source is
+    non-contiguous or lives on an accelerator."""
+    return np.atleast_1d(portable_view(np.asarray(leaf)))
+
+
+class SerializeArena:
+    """Reusable page-aligned host staging buffer for one checkpoint
+    stream. See module docstring for the lifecycle."""
+
+    def __init__(self, alignment: int = PAGE):
+        self.alignment = alignment
+        self._key: Optional[tuple] = None
+        self._raw: Optional[np.ndarray] = None   # oversized backing store
+        self._mv: Optional[memoryview] = None    # aligned capacity window
+        self._records: Optional[list] = None     # cached TensorRecords
+        self._buffers: Optional[List[np.ndarray]] = None  # per-record views
+        self._treedef_str: Optional[str] = None
+        self._total = 0
+        self.capacity = 0
+        # --- observability (SaveStats / benchmarks read these) ---
+        self.n_alloc = 0        # backing-buffer allocations
+        self.n_layout = 0       # stream layouts (key misses)
+        self.n_reuse = 0        # steady-state fills into cached layout
+        self.last_reused = False
+
+    # ------------------------------------------------------------ state
+    def invalidate(self):
+        """Drop the cached layout (NOT the backing memory). Call when the
+        cached views may alias freed storage — e.g. after the train step
+        donated the state's buffers back to XLA."""
+        self._key = None
+        self._records = None
+        self._buffers = None
+
+    def _ensure_capacity(self, total: int):
+        if self._raw is None or total > self.capacity:
+            size = max(total, 1)
+            self._mv = aligned_buffer(size, self.alignment)
+            self._raw = self._mv.obj         # backing ndarray (identity)
+            self.capacity = size
+            self.n_alloc += 1
+
+    # ----------------------------------------------------------- layout
+    @staticmethod
+    def _signature(leaves, treedef) -> tuple:
+        sig = []
+        for _path, leaf in leaves:
+            dt = str(leaf.dtype) if hasattr(leaf, "dtype") else \
+                str(np.asarray(leaf).dtype)
+            sig.append((dt, tuple(np.shape(leaf))))
+        return (treedef, tuple(sig))
+
+    def _layout(self, leaves, treedef, key):
+        """Key miss: compute records/offsets from METADATA only (no
+        device transfer), grow the buffer if needed, carve per-record
+        views."""
+        records, metas = [], []
+        offset = 0
+        for path, leaf in leaves:
+            name = _path_str(path)
+            orig_dtype = str(leaf.dtype) if hasattr(leaf, "dtype") \
+                else str(np.asarray(leaf).dtype)
+            shape = tuple(np.shape(leaf))
+            sdt = store_dtype(orig_dtype)
+            count = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            nbytes = count * sdt.itemsize
+            records.append(TensorRecord(name, orig_dtype, shape, offset,
+                                        nbytes))
+            metas.append((offset, count, sdt, shape))
+            offset += nbytes
+        self._ensure_capacity(offset)
+        buffers = []
+        for off, count, sdt, shape in metas:
+            view = np.frombuffer(self._mv, dtype=sdt, count=count,
+                                 offset=off)
+            buffers.append(view.reshape(shape) if shape else view)
+        self._key = key
+        self._records = records
+        self._buffers = buffers
+        self._treedef_str = str(treedef)
+        self._total = offset
+        self.n_layout += 1
+
+    # -------------------------------------------------------- serialize
+    def serialize(self, leaves, treedef):
+        """Fill the arena from ``leaves`` and return
+        ``(Manifest, buffers)`` with the serializer's exact contract:
+        ``buffers[i]`` holds record *i*'s bytes (views into the arena)."""
+        key = self._signature(leaves, treedef)
+        if key != self._key or self._buffers is None:
+            self._layout(leaves, treedef, key)
+            self.last_reused = False
+        else:
+            self.n_reuse += 1
+            self.last_reused = True
+        for (_path, leaf), dst in zip(leaves, self._buffers):
+            if dst.size == 0:
+                continue
+            np.copyto(dst, _host_array(leaf).reshape(dst.shape),
+                      casting="no")
+        manifest = Manifest(self._records, self._total,
+                            treedef=self._treedef_str)
+        return manifest, list(self._buffers)
+
+    # ------------------------------------------------------------ intro
+    @property
+    def nbytes(self) -> int:
+        return self.capacity if self._raw is not None else 0
+
+    def buffer_id(self) -> Optional[int]:
+        """Identity of the backing allocation (stable across steady-state
+        saves; benchmarks/tests assert reuse with this)."""
+        return id(self._raw) if self._raw is not None else None
+
+    def __repr__(self):
+        return (f"SerializeArena(capacity={self.capacity}, "
+                f"alloc={self.n_alloc}, layout={self.n_layout}, "
+                f"reuse={self.n_reuse})")

@@ -19,6 +19,7 @@ from dataclasses import dataclass
 from typing import Optional
 
 from repro.core import layout
+from repro.core.arena import SerializeArena
 from repro.core.serializer import Manifest, deserialize, serialize
 
 PAYLOAD_FILE = "checkpoint.pt"
@@ -28,6 +29,7 @@ PAYLOAD_FILE = "checkpoint.pt"
 class BaselineStats:
     bytes_written: int
     seconds: float
+    arena_reused: bool = False
 
     @property
     def gbps(self):
@@ -44,17 +46,23 @@ class BaselineCheckpointer:
     ``checkpoint.pt`` + ``manifest.json`` into the given (staging) dir.
     """
 
-    def __init__(self, directory: str, buffer_size: int = 64 * 1024):
+    def __init__(self, directory: str, buffer_size: int = 64 * 1024,
+                 use_arena: bool = True):
         self.directory = directory
         self.buffer_size = buffer_size
         os.makedirs(directory, exist_ok=True)
+        # even the baseline benefits from the persistent staging arena
+        # (serialize-time allocation churn is orthogonal to the write
+        # strategy being emulated)
+        self._arena = SerializeArena() if use_arena else None
 
     def path(self, step: int) -> str:
         return os.path.join(self.directory, f"ckpt_{step:08d}.pt")
 
     def save(self, state, step: int, extras: Optional[dict] = None,
              directory: Optional[str] = None) -> BaselineStats:
-        manifest, buffers = serialize(state)
+        manifest, buffers = serialize(state, arena=self._arena)
+        arena_reused = bool(self._arena and self._arena.last_reused)
         manifest.extras = extras or {}
         if directory is not None:
             os.makedirs(directory, exist_ok=True)
@@ -84,7 +92,8 @@ class BaselineCheckpointer:
             with open(os.path.join(directory, layout.MANIFEST_FILE),
                       "w") as f:
                 json.dump(meta, f)
-        return BaselineStats(total, time.perf_counter() - t0)
+        return BaselineStats(total, time.perf_counter() - t0,
+                             arena_reused=arena_reused)
 
     def load(self, step: int, like=None, directory: Optional[str] = None):
         path = (os.path.join(directory, PAYLOAD_FILE)

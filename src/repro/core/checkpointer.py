@@ -24,12 +24,13 @@ import os
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro.core import layout
+from repro.core.arena import SerializeArena
 from repro.core.partition import Topology, WritePlan, make_plan
 from repro.core.serializer import (ByteStreamView, Manifest, TensorRecord,
                                    decode_record, deserialize, serialize,
@@ -46,7 +47,14 @@ class FastPersistConfig:
     single_file: bool = False          # one file + pwrite at offsets
     fsync: bool = False
     checksum: bool = True              # CRC32 per extent, verified on load
+    #: per-extent CRCs accumulate during the writers' fill phase
+    #: (writer.py single-pass integrity) — no second sweep over the
+    #: stream happens in save().
     quantize: bool = False             # int8 per-block (beyond-paper, lossy)
+    #: reuse one page-aligned host staging arena across saves (zero
+    #: allocation steady-state; see repro.core.arena). Turn off to get
+    #: the old allocate-per-save serialize.
+    arena: bool = True
 
 
 @dataclass
@@ -65,6 +73,10 @@ class SaveStats:
     #: per-shard-file descriptors {name, volume, size, crc32} — the
     #: engine folds these into the global COMMIT marker
     shards: List[dict] = field(default_factory=list)
+    #: True when serialization refilled a cached staging arena in place
+    #: (steady-state zero-allocation save); False on first save, shape
+    #: change, or with the arena disabled
+    arena_reused: bool = False
 
     @property
     def gbps(self):
@@ -77,6 +89,12 @@ class FastPersistCheckpointer:
         self.config = config or FastPersistConfig()
         os.makedirs(directory, exist_ok=True)
         self._plan_cache = {}
+        # persistent staging arena: reused across save() calls AND across
+        # overlapped (pipelined) saves — the engine/pipeline helper
+        # thread serializes saves, so the arena is never refilled while
+        # a previous save still reads it. Not safe for CONCURRENT save()
+        # calls on one instance (use one checkpointer per caller).
+        self._arena = SerializeArena() if self.config.arena else None
 
     # -- setup-time planning (paper: partition fixed before iteration 1) --
     def plan_for(self, total_bytes: int, n_volumes: int = 1) -> WritePlan:
@@ -104,7 +122,8 @@ class FastPersistCheckpointer:
         stripes shard files across destination volumes; the manifest and
         any volume-0-resident shards stay under ``directory``."""
         t_ser = time.perf_counter()
-        manifest, buffers = serialize(state)
+        manifest, buffers = serialize(state, arena=self._arena)
+        arena_reused = bool(self._arena and self._arena.last_reused)
         manifest.extras = extras or {}
         if self.config.quantize:
             from repro.core.quant import quantize_stream
@@ -126,18 +145,23 @@ class FastPersistCheckpointer:
         t0 = time.perf_counter()
         # Each writer = one of the paper's DP-rank helper processes. The
         # write path is communication-free: every extent was fixed at
-        # setup. os.pwrite releases the GIL ⇒ kernel-level parallel I/O,
-        # with each destination volume driven by its own flusher.
+        # setup; per-extent CRC32 accumulates inside each writer's fill
+        # phase (single-pass integrity), so the stream is traversed
+        # exactly once end to end.
+        wcfg = self.config.writer
+        if wcfg.checksum != self.config.checksum:
+            wcfg = replace(wcfg, checksum=self.config.checksum)
+
         def run_writer(extent):
             segs = view.slices(extent.offset, extent.length)
             if self.config.single_file:
                 return write_stream(os.path.join(d, "checkpoint.bin"),
-                                    segs, extent.length, self.config.writer,
+                                    segs, extent.length, wcfg,
                                     file_offset=extent.offset)
             return write_stream(
                 os.path.join(dirs[extent.volume],
                              self._shard_file(extent.shard_index)),
-                segs, extent.length, self.config.writer)
+                segs, extent.length, wcfg)
 
         if len(plan.extents) == 1:
             per_writer = [run_writer(plan.extents[0])]
@@ -157,8 +181,10 @@ class FastPersistCheckpointer:
         meta["layout_version"] = layout.LAYOUT_VERSION if striped else 1
         extents_meta = [vars(e).copy() for e in plan.extents]
         if self.config.checksum:
-            for em in extents_meta:
-                em["crc32"] = view.crc32(em["offset"], em["length"])
+            # fill-phase CRCs from the writers — NOT a second sweep
+            for em, ws in zip(extents_meta, per_writer):
+                if ws.crc32 is not None:
+                    em["crc32"] = ws.crc32
         meta["plan"] = {"strategy": plan.strategy, "extents": extents_meta,
                         "n_volumes": plan.n_volumes}
         # the global index: tensor → [shard, offset-in-shard, length]
@@ -182,7 +208,8 @@ class FastPersistCheckpointer:
                     sh["crc32"] = em["crc32"]
                 shard_meta.append(sh)
         return SaveStats(view.total, wall, ser_s, per_writer,
-                         len(plan.extents), shards=shard_meta)
+                         len(plan.extents), shards=shard_meta,
+                         arena_reused=arena_reused)
 
     # ------------------------------------------------------------- load
     def _read_manifest(self, step: int, directory: Optional[str] = None):

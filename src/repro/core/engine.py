@@ -202,7 +202,8 @@ class BaselineBackend(CheckpointBackend):
         return SaveStats(total_bytes=bs.bytes_written, seconds=bs.seconds,
                          serialize_seconds=max(
                              time.perf_counter() - t0 - bs.seconds, 0.0),
-                         per_writer=[], n_writers=1)
+                         per_writer=[], n_writers=1,
+                         arena_reused=bs.arena_reused)
 
     def read_payload(self, directory, step, like=None, verify=True):
         return self._inner.load(step, like=like, directory=directory)
@@ -284,6 +285,8 @@ class EngineStats:
     stall_seconds: float = 0.0        # caller time blocked in wait()
     write_seconds: float = 0.0        # sum of per-save persist wall time
     bytes_written: int = 0
+    arena_reuses: int = 0             # saves that refilled a cached arena
+    #                                   in place (zero-alloc steady state)
 
 
 class CheckpointEngine:
@@ -490,6 +493,8 @@ class CheckpointEngine:
         self.stats.committed += 1
         self.stats.write_seconds += stats.seconds
         self.stats.bytes_written += stats.total_bytes
+        if getattr(stats, "arena_reused", False):
+            self.stats.arena_reuses += 1
         return stats
 
     # ---------------------------------------------------------------- sync

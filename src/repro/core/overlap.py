@@ -66,15 +66,31 @@ def recovery_overhead_gpu_seconds(n_interval: int, m_gpus: int,
     return n_interval / 2 * m_gpus * t_iter
 
 
+def staging_seconds(ckpt_bytes: int, topo: Topology,
+                    steady_state: bool = True) -> float:
+    """Device→host serialize time (§4.3 'read GPU tensors into pinned
+    CPU memory'). The FIRST save through a ``SerializeArena`` pays
+    allocation + page-fault + copy (~2× the copy alone); steady-state
+    saves refill the arena in place and pay the copy only — the
+    DataStates-LLM lazy-pinned-buffer effect the arena reproduces."""
+    copy = ckpt_bytes / (topo.rank_stage_gbps * 1e9)
+    return copy if steady_state else 2.0 * copy
+
+
 def effective_overhead(it: IterationModel, ckpt_seconds: float,
-                       pipelined: bool) -> float:
+                       pipelined: bool, serialize_s: float = 0.0) -> float:
     """Per-iteration slowdown fraction due to checkpointing every step.
 
     Pipelined: the write overlaps fwd+bwd of the next iteration; only the
     excess beyond the overlap window stalls the next optimizer step.
-    Unpipelined: the full write sits on the critical path."""
+    Unpipelined: the full write sits on the critical path.
+
+    ``serialize_s`` (device→arena staging, see :func:`staging_seconds`)
+    always sits on the critical path: with donation on, the snapshot
+    must complete before the next optimizer step reuses the buffers —
+    pipelining hides the WRITE, never the staging copy."""
     if pipelined:
-        stall = max(0.0, ckpt_seconds - it.fb)
+        stall = serialize_s + max(0.0, ckpt_seconds - it.fb)
     else:
-        stall = ckpt_seconds
+        stall = serialize_s + ckpt_seconds
     return stall / it.total

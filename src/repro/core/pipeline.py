@@ -21,6 +21,13 @@ the train step donates its argument buffers (donate_argnums), in which
 case XLA reuses them in place exactly like the paper's in-place CUDA
 optimizer. The block-before-optimizer synchronization is therefore load-
 bearing here too whenever donation is on.
+
+Arena note (DESIGN.md §6): an inner checkpointer that owns a
+``SerializeArena`` reuses it across OVERLAPPED saves safely, because
+this wrapper's single helper thread executes queued saves strictly in
+order — save *i+1*'s serialize (which refills the arena in place) can
+only start after save *i* finished reading it. ``PipelineStats`` counts
+the steady-state reuses.
 """
 from __future__ import annotations
 
@@ -37,6 +44,8 @@ class PipelineStats:
     committed: int = 0
     stall_seconds: float = 0.0       # main-thread time blocked in wait()
     write_seconds: float = 0.0       # helper time actually persisting
+    arena_reuses: int = 0            # overlapped saves that refilled the
+    #                                  inner checkpointer's arena in place
     save_stats: List[Any] = field(default_factory=list)
 
 
@@ -67,6 +76,8 @@ class PipelinedCheckpointer:
                 s = self.inner.save(state, step, extras) \
                     if extras is not None else self.inner.save(state, step)
                 self.stats.save_stats.append(s)
+                if getattr(s, "arena_reused", False):
+                    self.stats.arena_reuses += 1
             except BaseException as e:       # surfaced on next wait()
                 self._err = e
             self.stats.write_seconds += time.perf_counter() - t0

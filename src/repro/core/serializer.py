@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import json
 import zlib
+from bisect import bisect_right
 from dataclasses import dataclass, field
 from typing import Any, Iterator, List, Optional, Sequence, Tuple
 
@@ -71,19 +72,43 @@ class Manifest:
                    d.get("treedef"))
 
 
+def portable_view(arr: np.ndarray) -> np.ndarray:
+    """THE on-stream byte-layout rule: bf16 is bit-cast to uint16 for a
+    portable layout. Shared by the allocate-per-save path below and the
+    arena path (repro.core.arena) — the two must stay byte-identical."""
+    if arr.dtype == np.dtype("V2") or str(arr.dtype) == "bfloat16":
+        return arr.view(np.uint16)
+    return arr
+
+
+def store_dtype(dtype_str: str) -> np.dtype:
+    """On-stream numpy dtype for a manifest dtype string (the
+    dtype-string form of :func:`portable_view`)."""
+    if dtype_str == "bfloat16":
+        return np.dtype(np.uint16)
+    return np.dtype(dtype_str)
+
+
 def _to_numpy(leaf) -> np.ndarray:
     """Device→host transfer ('read GPU tensors into pinned CPU memory',
-    §4.3). bf16 is bit-cast to uint16 for a portable byte layout."""
+    §4.3)."""
     arr = np.asarray(leaf) if not hasattr(leaf, "addressable_data") \
         else np.asarray(leaf)
-    if arr.dtype == np.dtype("V2") or str(arr.dtype) == "bfloat16":
-        arr = arr.view(np.uint16)
-    return np.ascontiguousarray(arr)
+    return np.ascontiguousarray(portable_view(arr))
 
 
-def serialize(state) -> Tuple[Manifest, List[np.ndarray]]:
-    """Flatten a checkpoint state into (manifest, ordered host buffers)."""
+def serialize(state, arena=None) -> Tuple[Manifest, List[np.ndarray]]:
+    """Flatten a checkpoint state into (manifest, ordered host buffers).
+
+    With ``arena`` (a :class:`repro.core.arena.SerializeArena`), buffers
+    are views into the arena's persistent page-aligned staging memory:
+    the first save allocates, steady-state saves copy device→arena in
+    place with zero Python-side allocation (DESIGN.md §6). Without it,
+    the original allocate-per-save path runs (one fresh host copy per
+    leaf)."""
     leaves, treedef = jax.tree_util.tree_flatten_with_path(state)
+    if arena is not None:
+        return arena.serialize(leaves, treedef)
     records, buffers = [], []
     offset = 0
     for path, leaf in leaves:
@@ -138,18 +163,26 @@ def tensor_spans(records: Sequence[TensorRecord],
     hold its bytes. Byte-granularity extents split tensors mid-stream,
     so a tensor may span several shards; a rank-elastic reader uses this
     index to fetch exactly the byte ranges it needs, from any number of
-    shards, regardless of the writer topology that produced them."""
+    shards, regardless of the writer topology that produced them.
+
+    O(R log E + S) where S is the emitted span count: extents are
+    disjoint and sorted by offset, so their END offsets are monotonic —
+    bisect to the first extent that can overlap a record, then walk
+    forward until the extents start past it."""
     exts = sorted(extents, key=lambda e: e.offset)
+    ends = [e.offset + e.length for e in exts]
     index: dict = {}
     for rec in records:
         spans = []
         lo, hi = rec.offset, rec.offset + rec.nbytes
-        for e in exts:
-            e_lo, e_hi = e.offset, e.offset + e.length
-            if e_hi <= lo or e_lo >= hi:
-                continue
-            s, t = max(lo, e_lo), min(hi, e_hi)
-            spans.append([e.shard_index, s - e_lo, t - s])
+        # first extent with end > lo; everything before cannot overlap
+        i = bisect_right(ends, lo)
+        while i < len(exts) and exts[i].offset < hi:
+            e = exts[i]
+            if e.offset + e.length > lo:
+                s, t = max(lo, e.offset), min(hi, e.offset + e.length)
+                spans.append([e.shard_index, s - e.offset, t - s])
+            i += 1
         index[rec.name] = spans
     return index
 
@@ -177,8 +210,18 @@ class ByteStreamView:
             start = base + hi
             i += 1
 
-    def read(self, start: int, length: int) -> bytes:
-        return b"".join(bytes(s) for s in self.slices(start, length))
+    def read(self, start: int, length: int) -> memoryview:
+        """Materialize [start, start+length) into ONE preallocated
+        buffer (no per-segment bytes() copies, no join). The returned
+        memoryview compares equal to the corresponding bytes and feeds
+        any buffer-protocol consumer; wrap in bytes() if an immutable
+        copy is required."""
+        out = bytearray(length)
+        pos = 0
+        for s in self.slices(start, length):
+            out[pos:pos + s.nbytes] = s
+            pos += s.nbytes
+        return memoryview(out)
 
     def crc32(self, start: int = 0, length: Optional[int] = None) -> int:
         length = self.total - start if length is None else length

@@ -1,12 +1,17 @@
 """NVMe-optimized write engine (paper §4.1).
 
 Implements the paper's single-rank write path, adapted to this host (see
-DESIGN.md §2):
+DESIGN.md §2, §6):
 
   * **direct I/O** — ``O_DIRECT`` file descriptors with sector-aligned
-    staging buffers (libaio/io_uring mechanism class). Falls back to
-    buffered I/O transparently where O_DIRECT is unsupported (tmpfs),
-    preserving identical semantics.
+    staging buffers. Falls back to buffered I/O transparently where
+    O_DIRECT is unsupported (tmpfs), preserving identical semantics.
+  * **async submission** — staging buffers are handed to an
+    :mod:`repro.core.aio` submitter (io_uring > libaio > pwrite-threads,
+    capability-probed) with ``queue_depth`` writes in flight, so deep
+    NVMe queues are actually exercised. ``queue_depth + 1`` staging
+    buffers keep the fill of chunk *i+1* overlapping the flush of
+    chunks *i, i-1, …* (the paper's double buffering, generalized).
   * **prefix/suffix alignment split** — the largest aligned prefix goes
     through the direct path; the <alignment-sized suffix is appended with
     a buffered descriptor into the SAME file: no padding, no format break.
@@ -14,18 +19,25 @@ DESIGN.md §2):
     size are staged into the IO buffer and flushed only at alignment
     boundaries, preserving byte order exactly (bytes of one tensor may
     span writes; one write may span tensors).
-  * **double buffering** — two staging buffers overlap the
-    "device→pinned" copy of chunk i+1 with the "pinned→SSD" write of
-    chunk i (paper Fig. 5b). Single-buffer mode serializes the two.
+  * **single-pass integrity** — CRC32 accumulates over each staging
+    buffer as it is filled (the bytes are LLC-hot from the copy), so the
+    checkpoint stream is traversed exactly once on the write path; no
+    caller needs a second full sweep (Check-N-Run folds checks into the
+    write path the same way).
+
+Single-buffer mode (``double_buffer=False``) is genuinely synchronous —
+one staging buffer, each flush completes before the next fill starts —
+so fig7's 1-buffer datapoint measures the absence of overlap.
 """
 from __future__ import annotations
 
-import ctypes
 import os
-import threading
 import time
+import zlib
 from dataclasses import dataclass
-from typing import Iterable, Iterator, Optional
+from typing import Iterable, Optional
+
+from repro.core import aio
 
 DEFAULT_ALIGN = 4096
 
@@ -55,9 +67,18 @@ def open_direct(path: str, align: int) -> tuple[int, bool]:
 @dataclass
 class WriterConfig:
     io_buffer_size: int = 32 * 1024 * 1024
-    double_buffer: bool = True
+    double_buffer: bool = True       # async flush + queue_depth in flight
     use_direct: bool = True
     alignment: int = DEFAULT_ALIGN
+    #: submission backend: "auto" | "io_uring" | "libaio" | "pwrite".
+    #: $FASTPERSIST_IO_BACKEND overrides; unavailable backends fall back
+    #: to pwrite (see repro.core.aio).
+    backend: str = "auto"
+    #: in-flight writes per stream; staging memory is
+    #: (queue_depth + 1) * io_buffer_size when double_buffer is on.
+    queue_depth: int = 2
+    #: accumulate CRC32 during the fill phase (WriteStats.crc32)
+    checksum: bool = True
 
 
 @dataclass
@@ -65,73 +86,17 @@ class WriteStats:
     bytes_written: int = 0
     seconds: float = 0.0
     fill_seconds: float = 0.0      # device→staging copies
-    flush_seconds: float = 0.0     # staging→disk writes
+    flush_seconds: float = 0.0     # staging→disk (pwrite time, or time
+    #                                blocked on async completions)
+    crc_seconds: float = 0.0       # fill-phase CRC accumulation
     n_writes: int = 0
     direct: bool = False
+    backend: str = "pwrite"        # resolved submission backend
+    crc32: Optional[int] = None    # stream CRC32 (None if checksum off)
 
     @property
     def gbps(self) -> float:
         return self.bytes_written / max(self.seconds, 1e-12) / 1e9
-
-
-class _Flusher:
-    """Helper that performs pwrite() of filled staging buffers, so the
-    producer can refill the other buffer concurrently (double buffering).
-    os.pwrite releases the GIL, so a thread gives true overlap."""
-
-    def __init__(self, fd: int):
-        self.fd = fd
-        self._job = None
-        self._err = None
-        self._lock = threading.Condition()
-        self._stop = False
-        self.flush_seconds = 0.0
-        self.n_writes = 0
-        self._t = threading.Thread(target=self._run, daemon=True)
-        self._t.start()
-
-    def _run(self):
-        while True:
-            with self._lock:
-                while self._job is None and not self._stop:
-                    self._lock.wait()
-                if self._stop and self._job is None:
-                    return
-                buf, off = self._job
-            t0 = time.perf_counter()
-            try:
-                written = 0
-                while written < len(buf):
-                    written += os.pwrite(self.fd, buf[written:], off + written)
-            except OSError as e:       # pragma: no cover
-                self._err = e
-            self.flush_seconds += time.perf_counter() - t0
-            self.n_writes += 1
-            with self._lock:
-                self._job = None
-                self._lock.notify_all()
-
-    def submit(self, buf: memoryview, offset: int):
-        self.wait()
-        if self._err:
-            raise self._err
-        with self._lock:
-            self._job = (buf, offset)
-            self._lock.notify_all()
-
-    def wait(self):
-        with self._lock:
-            while self._job is not None:
-                self._lock.wait()
-        if self._err:
-            raise self._err
-
-    def close(self):
-        self.wait()
-        with self._lock:
-            self._stop = True
-            self._lock.notify_all()
-        self._t.join()
 
 
 def write_stream(path: str, segments: Iterable[memoryview], total: int,
@@ -152,9 +117,15 @@ def write_stream(path: str, segments: Iterable[memoryview], total: int,
     prefix = (total // align) * align if is_direct else total
     suffix = total - prefix
 
-    nbuf = 2 if cfg.double_buffer else 1
+    backend = aio.resolve_backend(cfg.backend)
+    stats.backend = backend
+    depth = max(1, cfg.queue_depth) if cfg.double_buffer else 1
+    nbuf = depth + 1 if cfg.double_buffer else 1
     bufs = [aligned_buffer(cfg.io_buffer_size, align) for _ in range(nbuf)]
-    flusher = _Flusher(fd)
+    flusher = aio.make_submitter(backend, fd, depth,
+                                 inline=not cfg.double_buffer)
+    tickets: list = [None] * nbuf
+    crc: Optional[int] = 0 if cfg.checksum else None
 
     t0 = time.perf_counter()
     seg_iter = iter(segments)
@@ -164,6 +135,10 @@ def write_stream(path: str, segments: Iterable[memoryview], total: int,
     try:
         while written < prefix:
             buf = bufs[bi]
+            # buffer recycling: its previous write must have landed
+            if tickets[bi] is not None:
+                flusher.wait(tickets[bi])
+                tickets[bi] = None
             target = min(cfg.io_buffer_size, prefix - written)
             # ---- fill phase: device→staging copy (coalescing queue) ----
             tf = time.perf_counter()
@@ -181,38 +156,52 @@ def write_stream(path: str, segments: Iterable[memoryview], total: int,
             stats.fill_seconds += time.perf_counter() - tf
             if filled == 0:        # segments exhausted (total overstated)
                 break
-            # ---- flush phase: staging→disk (async if double buffered) --
-            if cfg.double_buffer:
-                flusher.submit(buf[:filled], file_offset + written)
-            else:
-                flusher.submit(buf[:filled], file_offset + written)
-                flusher.wait()
+            if crc is not None:    # single-pass integrity: bytes are hot
+                tc = time.perf_counter()
+                crc = zlib.crc32(buf[:filled], crc)
+                stats.crc_seconds += time.perf_counter() - tc
+            # ---- flush phase: staging→disk, queue_depth in flight ------
+            tickets[bi] = flusher.submit(buf[:filled], file_offset + written)
+            if not cfg.double_buffer:       # synchronous single-buffer
+                flusher.wait(tickets[bi])
+                tickets[bi] = None
             written += filled
             bi = (bi + 1) % nbuf
-        flusher.wait()
+        flusher.drain()
     finally:
         flusher.close()
         os.close(fd)
+    stats.n_writes = flusher.n_writes
+    stats.flush_seconds = flusher.flush_seconds
 
     if suffix:
         # buffered append of the unaligned tail into the SAME file
+        tf = time.perf_counter()
         tail = bytearray()
         if pending is not None:
             tail += bytes(pending)
         for s in seg_iter:
             tail += bytes(s)
         tail = bytes(tail)[:suffix] if len(tail) > suffix else bytes(tail)
+        stats.fill_seconds += time.perf_counter() - tf
+        if crc is not None and tail:
+            tc = time.perf_counter()
+            crc = zlib.crc32(tail, crc)
+            stats.crc_seconds += time.perf_counter() - tc
         fd2 = os.open(path, os.O_WRONLY)
+        tw = time.perf_counter()
         try:
             w = 0
             while w < len(tail):
                 w += os.pwrite(fd2, tail[w:], file_offset + prefix + w)
         finally:
             os.close(fd2)
+        stats.flush_seconds += time.perf_counter() - tw
+        if tail:
+            stats.n_writes += 1
         written += len(tail)
 
     stats.bytes_written = written
     stats.seconds = time.perf_counter() - t0
-    stats.n_writes = flusher.n_writes
-    stats.flush_seconds = flusher.flush_seconds
+    stats.crc32 = crc
     return stats

@@ -47,6 +47,18 @@ def main():
                     help="comma-separated shard destination volume roots "
                          "(one per SSD/mount); shards are striped across "
                          "them, manifest+COMMIT stay under --ckpt-dir")
+    ap.add_argument("--io-backend", default="auto",
+                    choices=["auto", "io_uring", "libaio", "pwrite"],
+                    help="write-submission backend (capability-probed; "
+                         "unavailable backends fall back to pwrite; "
+                         "$FASTPERSIST_IO_BACKEND overrides)")
+    ap.add_argument("--queue-depth", type=int, default=2,
+                    help="in-flight writes per writer stream; staging "
+                         "memory is (depth+1) x io buffer per writer")
+    ap.add_argument("--no-arena", dest="arena", action="store_false",
+                    default=True,
+                    help="disable the persistent serialize arena "
+                         "(allocate fresh host buffers every save)")
     ap.add_argument("--restore", action="store_true")
     args = ap.parse_args()
 
@@ -64,7 +76,9 @@ def main():
             fp=FastPersistConfig(
                 strategy=args.writers,
                 topology=Topology(dp_degree=args.dp, ranks_per_node=4),
-                writer=WriterConfig()))
+                arena=args.arena,
+                writer=WriterConfig(backend=args.io_backend,
+                                    queue_depth=args.queue_depth)))
 
     tr = Trainer(TrainerConfig(
         model=cfg, steps=args.steps, global_batch=args.batch,

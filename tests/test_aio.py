@@ -1,0 +1,229 @@
+"""Async-submission write-path tests: backend matrix (skip-if-
+unavailable), queue depths, alignment edges, fill-phase CRC integrity,
+and backend selection."""
+import os
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import aio
+from repro.core.serializer import ByteStreamView
+from repro.core.writer import WriterConfig, write_stream
+
+BACKENDS = [pytest.param(
+    name,
+    marks=pytest.mark.skipif(not aio.backend_available(name),
+                             reason=f"{name} unavailable on this kernel"))
+    for name in aio.BACKENDS]
+
+
+def _ref_view(total, seed=0):
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 255, size=total, dtype=np.uint8)
+    return data.tobytes(), ByteStreamView([data])
+
+
+# ------------------------------------------------------------ submitters
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("depth", [1, 2, 8])
+def test_submitter_roundtrip(tmp_path, backend, depth):
+    """Raw submitter contract: out-of-order completion-safe, bit-exact."""
+    ref, _ = _ref_view(256 * 1024, seed=depth)
+    path = str(tmp_path / "s.bin")
+    fd = os.open(path, os.O_WRONLY | os.O_CREAT, 0o644)
+    sub = aio.make_submitter(backend, fd, depth)
+    try:
+        chunk = 16 * 1024
+        tickets = []
+        for off in range(0, len(ref), chunk):
+            buf = memoryview(bytearray(ref[off:off + chunk]))
+            tickets.append((sub.submit(buf, off), buf))
+        for t, _buf in tickets:
+            sub.wait(t)
+        sub.drain()
+    finally:
+        sub.close()
+        os.close(fd)
+    with open(path, "rb") as f:
+        assert f.read() == ref
+    assert sub.n_writes == len(tickets)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_write_stream_backend_matrix(tmp_path, backend, monkeypatch):
+    """Every available backend produces identical files + CRCs through
+    the full §4.1 path, at alignment edges:
+      * total < alignment (suffix-only write)
+      * total an exact alignment multiple
+      * segment > io_buffer_size (one tensor spans many flushes)
+    """
+    monkeypatch.delenv("FASTPERSIST_IO_BACKEND", raising=False)
+    for total in (0, 1, 511, 4096, 4096 * 3, 123_457, 1_048_576 + 13):
+        ref, view = _ref_view(total, seed=total % 91)
+        path = str(tmp_path / f"{backend}_{total}.bin")
+        cfg = WriterConfig(io_buffer_size=64 * 1024, backend=backend,
+                           queue_depth=4)
+        stats = write_stream(path, view.slices(0, total), total, cfg)
+        with open(path, "rb") as f:
+            assert f.read() == ref
+        assert stats.bytes_written == total
+        assert stats.crc32 == zlib.crc32(ref)
+        assert stats.backend == backend
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_segment_larger_than_io_buffer(tmp_path, backend, monkeypatch):
+    """A single segment far bigger than the staging buffer is split
+    across many in-flight writes without reordering bytes."""
+    monkeypatch.delenv("FASTPERSIST_IO_BACKEND", raising=False)
+    ref, view = _ref_view(1_000_003, seed=7)
+    path = str(tmp_path / "big.bin")
+    cfg = WriterConfig(io_buffer_size=32 * 1024, backend=backend,
+                       queue_depth=8)
+    stats = write_stream(path, view.slices(0, view.total), view.total, cfg)
+    with open(path, "rb") as f:
+        assert f.read() == ref
+    assert stats.crc32 == zlib.crc32(ref)
+    assert stats.n_writes >= view.total // (32 * 1024)
+
+
+def test_single_buffer_is_synchronous(tmp_path, monkeypatch):
+    """double_buffer=False: one staging buffer, submit-then-wait — the
+    fig7 1-buffer datapoint measures no overlap, and the accounting
+    reflects every write including the unaligned tail."""
+    monkeypatch.delenv("FASTPERSIST_IO_BACKEND", raising=False)
+    ref, view = _ref_view(123_457, seed=3)
+    path = str(tmp_path / "sync.bin")
+    cfg = WriterConfig(io_buffer_size=16 * 1024, double_buffer=False,
+                       backend="pwrite")
+    stats = write_stream(path, view.slices(0, view.total), view.total, cfg)
+    with open(path, "rb") as f:
+        assert f.read() == ref
+    expect = -(-view.total // (16 * 1024))      # ceil: incl. tail write
+    assert stats.n_writes in (expect, expect + 1)
+    assert stats.flush_seconds > 0.0
+
+
+def test_checksum_off(tmp_path):
+    ref, view = _ref_view(10_000)
+    stats = write_stream(str(tmp_path / "n.bin"),
+                         view.slices(0, view.total), view.total,
+                         WriterConfig(checksum=False))
+    assert stats.crc32 is None
+    assert stats.crc_seconds == 0.0
+
+
+# ------------------------------------------------------------- selection
+def test_env_forces_backend(tmp_path, monkeypatch):
+    monkeypatch.setenv("FASTPERSIST_IO_BACKEND", "pwrite")
+    assert aio.resolve_backend("auto") == "pwrite"
+    assert aio.resolve_backend("libaio") == "pwrite"
+    ref, view = _ref_view(50_000)
+    stats = write_stream(str(tmp_path / "env.bin"),
+                         view.slices(0, view.total), view.total,
+                         WriterConfig(backend="auto"))
+    assert stats.backend == "pwrite"
+    with open(str(tmp_path / "env.bin"), "rb") as f:
+        assert f.read() == ref
+
+
+def test_unknown_backend_rejected(monkeypatch):
+    # env override wins over ANY configured name, so clear it first
+    monkeypatch.delenv("FASTPERSIST_IO_BACKEND", raising=False)
+    with pytest.raises(ValueError):
+        aio.resolve_backend("dma-over-carrier-pigeon")
+    with pytest.raises(ValueError):
+        aio.backend_available("not-a-backend")
+
+
+def test_unavailable_backend_falls_back(monkeypatch):
+    """An explicitly requested but unprobe-able backend degrades to
+    pwrite with a warning — tmpfs/CI transparency."""
+    monkeypatch.delenv("FASTPERSIST_IO_BACKEND", raising=False)
+    monkeypatch.setitem(aio._probe_cache, "io_uring", False)
+    aio._warned.discard("io_uring")
+    with pytest.warns(UserWarning, match="falling back"):
+        assert aio.resolve_backend("io_uring") == "pwrite"
+
+
+def test_auto_prefers_async(monkeypatch):
+    monkeypatch.delenv("FASTPERSIST_IO_BACKEND", raising=False)
+    monkeypatch.setitem(aio._probe_cache, "io_uring", False)
+    monkeypatch.setitem(aio._probe_cache, "libaio", True)
+    # auto picks the best AVAILABLE backend; never errors
+    assert aio.resolve_backend("auto") in ("libaio",)
+    monkeypatch.setitem(aio._probe_cache, "libaio", False)
+    assert aio.resolve_backend("auto") == "pwrite"
+
+
+# ------------------------------------------------ error-path semantics
+class _FakeQueue(aio._KernelQueueSubmitter):
+    """Synthetic kernel queue: scripted completion batches, no I/O."""
+
+    def __init__(self, batches):
+        super().__init__(fd=-1, queue_depth=4)
+        self._batches = list(batches)
+
+    def submit(self, nbytes, offset):
+        slot = self._acquire_slot()
+        self._seq += 1
+        self._inflight[self._seq] = (slot, None, None, nbytes, offset)
+        return self._seq
+
+    def _reap_events(self, min_nr):
+        return self._batches.pop(0) if self._batches else []
+
+
+def test_failed_write_mid_batch_does_not_hang_drain():
+    """A batch [failure, success] must be FULLY consumed before the
+    error is raised — otherwise the consumed-but-unprocessed success
+    stays in _inflight and drain()/close() blocks forever."""
+    q = _FakeQueue([])
+    t1 = q.submit(100, 0)
+    t2 = q.submit(100, 100)
+    q._batches = [[(t1, -28), (t2, 100)]]       # ENOSPC then success
+    with pytest.raises(aio.SubmitError):
+        q.wait(t1)
+    assert not q._inflight                       # batch fully consumed
+    assert len(q._free) == 4                     # both slots recycled
+    q.drain()                                    # terminates immediately
+    assert q.n_writes == 1                       # only the success
+
+
+def test_wait_on_failed_ticket_raises_not_spins():
+    q = _FakeQueue([])
+    t1 = q.submit(10, 0)
+    q._batches = [[(t1, -5)]]
+    with pytest.raises(aio.SubmitError):
+        q.wait(t1)
+    # ticket resolved with error: a second wait must raise, not loop
+    with pytest.raises(aio.SubmitError, match="failed earlier"):
+        q.wait(t1)
+
+
+# ----------------------------------------------------- end-to-end crc
+def test_fill_phase_crc_detects_corruption(tmp_path):
+    """The per-extent CRC recorded by save() comes from the writers'
+    fill phase (no post-write sweep) and still fails loudly on a
+    corrupted shard."""
+    from repro.core.checkpointer import (FastPersistCheckpointer,
+                                         FastPersistConfig)
+    from repro.core.partition import Topology
+
+    ck = FastPersistCheckpointer(
+        str(tmp_path), FastPersistConfig(topology=Topology(dp_degree=2),
+                                         strategy="replica"))
+    state = {"w": np.arange(40_000, dtype=np.float32)}
+    ck.save(state, 0)
+    out, _ = ck.load(0, verify=True)
+    np.testing.assert_array_equal(out["w"], state["w"])
+    shard = os.path.join(ck.path(0), "shard_001.bin")
+    with open(shard, "r+b") as f:
+        f.seek(100)
+        b = f.read(1)
+        f.seek(100)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(IOError, match="corruption"):
+        ck.load(0, verify=True)
+    ck.load(0, verify=False)      # verification is what catches it

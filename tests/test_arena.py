@@ -1,0 +1,185 @@
+"""SerializeArena tests: steady-state reuse (stable buffer identity,
+correct bytes after a param update), shape-change regrow, fallback
+equivalence, and the arena-backed save path end to end."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.arena import SerializeArena
+from repro.core.serializer import ByteStreamView, serialize
+
+
+def _state(scale=1.0):
+    return {
+        "a": jnp.arange(1000, dtype=jnp.float32).reshape(10, 100) * scale,
+        "b": {"c": jnp.ones((7, 3), jnp.bfloat16),
+              "d": jnp.array([1, 2, 3], jnp.int32)},
+        "e": jnp.float32(3.5),
+    }
+
+
+def _stream_bytes(buffers):
+    return b"".join(bytes(memoryview(b).cast("B")) for b in buffers)
+
+
+def test_arena_matches_fallback_exactly():
+    """Arena serialization is byte- and manifest-identical to the
+    allocate-per-save path."""
+    m0, b0 = serialize(_state())
+    arena = SerializeArena()
+    m1, b1 = serialize(_state(), arena=arena)
+    assert _stream_bytes(b0) == _stream_bytes(b1)
+    assert m0.total_bytes == m1.total_bytes
+    assert [vars(r) for r in m0.records] == [vars(r) for r in m1.records]
+
+
+def test_steady_state_reuse_same_buffer_new_bytes():
+    """Second save with the same structure refills the SAME backing
+    allocation in place, and the bytes track the param update."""
+    arena = SerializeArena()
+    m1, b1 = serialize(_state(1.0), arena=arena)
+    ident = arena.buffer_id()
+    assert not arena.last_reused and arena.n_alloc == 1
+    first = _stream_bytes(b1)
+    m2, b2 = serialize(_state(2.0), arena=arena)
+    assert arena.last_reused and arena.n_reuse == 1
+    assert arena.buffer_id() == ident          # no reallocation
+    assert arena.n_alloc == 1
+    second = _stream_bytes(b2)
+    assert first != second
+    assert second == _stream_bytes(serialize(_state(2.0))[1])
+    # record views are the same objects across steady-state saves
+    assert all(x is y for x, y in zip(b1, b2))
+
+
+def test_shape_change_regrows():
+    arena = SerializeArena()
+    serialize({"w": np.zeros(10, np.float32)}, arena=arena)
+    small_cap = arena.capacity
+    m, b = serialize({"w": np.zeros(1000, np.float32)}, arena=arena)
+    assert not arena.last_reused
+    assert arena.capacity >= 4000 > small_cap
+    assert m.total_bytes == 4000
+    # shrinking reuses capacity without reallocating
+    allocs = arena.n_alloc
+    m2, _ = serialize({"w": np.zeros(50, np.float32)}, arena=arena)
+    assert arena.n_alloc == allocs
+    assert m2.total_bytes == 200
+
+
+def test_structure_change_invalidates():
+    arena = SerializeArena()
+    serialize({"w": np.zeros(10, np.float32)}, arena=arena)
+    m, _ = serialize({"w": np.zeros(10, np.float32),
+                      "v": np.zeros(10, np.float32)}, arena=arena)
+    assert not arena.last_reused
+    assert len(m.records) == 2
+
+
+def test_dtype_change_invalidates():
+    arena = SerializeArena()
+    serialize({"w": np.zeros(16, np.float32)}, arena=arena)
+    m, b = serialize({"w": np.zeros(16, np.int8)}, arena=arena)
+    assert not arena.last_reused
+    assert m.records[0].nbytes == 16
+
+
+def test_invalidate_forces_relayout():
+    arena = SerializeArena()
+    serialize(_state(), arena=arena)
+    arena.invalidate()
+    serialize(_state(), arena=arena)
+    assert not arena.last_reused
+    assert arena.n_layout == 2
+
+
+def test_alignment_of_backing_buffer():
+    arena = SerializeArena(alignment=4096)
+    _, buffers = serialize({"w": np.arange(5000, dtype=np.float32)},
+                           arena=arena)
+    addr = np.frombuffer(arena._mv, np.uint8).ctypes.data
+    assert addr % 4096 == 0
+
+
+def test_noncontiguous_and_bf16_leaves():
+    base = np.arange(64, dtype=np.float32).reshape(8, 8)
+    state = {"t": base.T,                       # non-contiguous view
+             "b": jnp.ones((5,), jnp.bfloat16)}
+    arena = SerializeArena()
+    m, b = serialize(state, arena=arena)
+    ref_m, ref_b = serialize(state)
+    assert _stream_bytes(b) == _stream_bytes(ref_b)
+    assert [r.dtype for r in m.records] == [r.dtype for r in ref_m.records]
+
+
+def test_view_over_arena_and_crc():
+    import zlib
+    arena = SerializeArena()
+    _, buffers = serialize(_state(), arena=arena)
+    view = ByteStreamView(buffers)
+    ref = _stream_bytes(buffers)
+    assert view.read(0, view.total) == ref
+    assert view.crc32() == zlib.crc32(ref)
+
+
+def test_checkpointer_arena_roundtrip(tmp_path):
+    """Repeated saves through FastPersistCheckpointer reuse the arena
+    (stats say so) and every generation round-trips bit-exact."""
+    from repro.core.checkpointer import (FastPersistCheckpointer,
+                                         FastPersistConfig)
+    from repro.core.partition import Topology
+
+    ck = FastPersistCheckpointer(
+        str(tmp_path), FastPersistConfig(topology=Topology(dp_degree=2),
+                                         strategy="replica"))
+    s0 = ck.save(_state(1.0), 0)
+    s1 = ck.save(_state(3.0), 1)
+    assert not s0.arena_reused and s1.arena_reused
+    out0, _ = ck.load(0, like=_state())
+    out1, _ = ck.load(1, like=_state())
+    np.testing.assert_array_equal(np.asarray(out0["a"]),
+                                  np.asarray(_state(1.0)["a"]))
+    np.testing.assert_array_equal(np.asarray(out1["a"]),
+                                  np.asarray(_state(3.0)["a"]))
+
+
+def test_checkpointer_arena_disabled(tmp_path):
+    from repro.core.checkpointer import (FastPersistCheckpointer,
+                                         FastPersistConfig)
+
+    ck = FastPersistCheckpointer(str(tmp_path),
+                                 FastPersistConfig(arena=False))
+    s0 = ck.save(_state(), 0)
+    s1 = ck.save(_state(), 1)
+    assert not s0.arena_reused and not s1.arena_reused
+
+
+def test_engine_pipelined_arena_reuse(tmp_path):
+    """Overlapped (async) saves through the engine reuse one arena —
+    the single helper thread serializes them (DESIGN.md §6)."""
+    from repro.core.engine import CheckpointEngine, CheckpointSpec
+
+    with CheckpointEngine(CheckpointSpec(
+            directory=str(tmp_path),
+            backend="fastpersist-pipelined")) as eng:
+        for i in range(3):
+            eng.save(_state(float(i + 1)), i)
+        eng.wait()
+        assert eng.stats.arena_reuses == 2
+        out, _ = eng.load(step=2, like=_state())
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(_state(3.0)["a"]))
+
+
+def test_quantized_save_with_arena(tmp_path):
+    from repro.core.checkpointer import (FastPersistCheckpointer,
+                                         FastPersistConfig)
+
+    ck = FastPersistCheckpointer(
+        str(tmp_path), FastPersistConfig(quantize=True))
+    state = {"w": np.linspace(-1, 1, 8192).astype(np.float32)}
+    ck.save(state, 0)
+    s1 = ck.save(state, 1)
+    assert s1.arena_reused
+    out, _ = ck.load(1)
+    np.testing.assert_allclose(out["w"], state["w"], atol=1e-2)

@@ -105,3 +105,67 @@ def test_bytestream_crc_consistency():
     view = ByteStreamView(bufs)
     ref = b"".join(b.tobytes() for b in bufs)
     assert view.crc32() == zlib.crc32(ref)
+
+
+def test_read_is_buffer_friendly():
+    """read() materializes into ONE preallocated buffer; the result is
+    memoryview-compatible (bytes-equal, zero-copy wrappable)."""
+    bufs = [np.arange(100, dtype=np.uint8), np.ones(55, np.uint8)]
+    view = ByteStreamView(bufs)
+    ref = b"".join(b.tobytes() for b in bufs)
+    out = view.read(3, 120)
+    assert out == ref[3:123]
+    assert memoryview(out).nbytes == 120
+    assert bytes(out) == ref[3:123]
+
+
+def _brute_force_spans(records, extents):
+    """The original O(records × extents) scan, kept as the reference."""
+    exts = sorted(extents, key=lambda e: e.offset)
+    index = {}
+    for rec in records:
+        spans = []
+        lo, hi = rec.offset, rec.offset + rec.nbytes
+        for e in exts:
+            e_lo, e_hi = e.offset, e.offset + e.length
+            if e_hi <= lo or e_lo >= hi:
+                continue
+            s, t = max(lo, e_lo), min(hi, e_hi)
+            spans.append([e.shard_index, s - e_lo, t - s])
+        index[rec.name] = spans
+    return index
+
+
+def test_tensor_spans_matches_brute_force():
+    """The bisect walk must agree with the exhaustive scan on random
+    layouts, including zero-length tensors and single-byte extents."""
+    from repro.core.partition import Topology, make_plan
+    from repro.core.serializer import TensorRecord, tensor_spans
+
+    rng = np.random.default_rng(42)
+    for trial in range(20):
+        n_rec = int(rng.integers(1, 12))
+        sizes = [int(rng.integers(0, 5000)) for _ in range(n_rec)]
+        records, off = [], 0
+        for i, n in enumerate(sizes):
+            records.append(TensorRecord(f"t{i}", "uint8", (n,), off, n))
+            off += n
+        total = max(off, 1)
+        n_writers = int(rng.integers(1, 9))
+        plan = make_plan(total, Topology(dp_degree=n_writers,
+                                         ranks_per_node=n_writers),
+                         "replica")
+        assert tensor_spans(records, plan.extents) == \
+            _brute_force_spans(records, plan.extents)
+
+
+def test_tensor_spans_span_lengths_cover_records():
+    from repro.core.partition import Topology, make_plan
+    from repro.core.serializer import tensor_spans
+
+    manifest, _ = serialize(_state())
+    plan = make_plan(manifest.total_bytes,
+                     Topology(dp_degree=3, ranks_per_node=3), "replica")
+    index = tensor_spans(manifest.records, plan.extents)
+    for rec in manifest.records:
+        assert sum(s[2] for s in index[rec.name]) == rec.nbytes

@@ -78,6 +78,35 @@ def test_open_direct_flags(tmp_path):
     assert isinstance(is_direct, bool)
 
 
+def test_stats_crc_and_accounting(tmp_path):
+    """WriteStats carries the fill-phase CRC and counts EVERY write —
+    including the unaligned buffered tail."""
+    import zlib
+    ref, view = _segments(123_457)
+    stats = write_stream(str(tmp_path / "acct.bin"),
+                         view.slices(0, view.total), view.total,
+                         WriterConfig(io_buffer_size=32 * 1024))
+    assert stats.crc32 == zlib.crc32(ref)
+    assert stats.backend in ("pwrite", "libaio", "io_uring")
+    # 123457 = 3 full 32K buffers + remainder; every flush counted
+    min_writes = view.total // (32 * 1024)
+    assert stats.n_writes >= min_writes
+    if stats.direct:      # tail went through the buffered suffix write
+        assert stats.bytes_written == view.total
+
+
+@pytest.mark.parametrize("qd", [1, 2, 8])
+def test_queue_depth_roundtrip(tmp_path, qd):
+    ref, view = _segments(300_001, seed=qd)
+    path = str(tmp_path / f"qd{qd}.bin")
+    stats = write_stream(path, view.slices(0, view.total), view.total,
+                         WriterConfig(io_buffer_size=16 * 1024,
+                                      queue_depth=qd))
+    with open(path, "rb") as f:
+        assert f.read() == ref
+    assert stats.bytes_written == view.total
+
+
 def _check_write_stream(tmp, total, bufsz, double):
     ref, view = _segments(total, seed=total % 97)
     path = str(tmp / "p.bin")
