@@ -1,0 +1,118 @@
+"""Parallel restore sweep (the restore-side twin of fig8): readers ×
+io-backend × queue-depth against one sharded checkpoint, vs the legacy
+single-reader ``engine.load()``.
+
+The paper's §4.2 restore is load-then-allgather: every DP rank reads
+only its owned spans, in parallel, through the async read backends.
+Recovery latency bounds fault-tolerance MTTR (Check-N-Run treats
+restore speed as a first-class metric), so this figure answers the
+question the write-side figures leave open: once checkpoints are cheap
+to WRITE every iteration, how fast can training come BACK from one?
+
+Rows are persisted to ``experiments/fig10.json`` and folded into the
+EXPERIMENTS tables by ``benchmarks.make_tables``.
+"""
+import json
+import os
+import shutil
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_dir, cleanup, emit, synth_bytes
+from repro.core import aio
+from repro.core.checkpointer import FastPersistConfig
+from repro.core.engine import CheckpointEngine, CheckpointSpec
+from repro.core.partition import Topology
+from repro.core.writer import WriterConfig
+
+
+def run(quick=True, mb=256, smoke=False):
+    """Build one (writers × volumes) checkpoint, then sweep restore
+    configurations over it. ``smoke=True`` shrinks the sweep to a
+    2-reader round-trip check (the CI leg)."""
+    writers = 4 if quick else 8
+    d = os.path.join(bench_dir(), "f10")
+    prim = os.path.join(d, "prim")
+    vols = [os.path.join(d, "vol0"), os.path.join(d, "vol1")]
+    state = {"blob": synth_bytes(mb, seed=10),
+             "head": np.arange(977, dtype=np.float32)}   # crosses shards
+    total = int(mb * 2**20) + 977 * 4
+    out = {}
+    spec = CheckpointSpec(
+        directory=prim, backend="fastpersist", volumes=vols,
+        fp=FastPersistConfig(strategy="replica",
+                             topology=Topology(dp_degree=writers)))
+    with CheckpointEngine(spec) as eng:
+        eng.save(state, 0).result()
+
+        def timed_load(iters=2, **kw):
+            best = float("inf")
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                restored, _ = eng.load(0, **kw)
+                best = min(best, time.perf_counter() - t0)
+            return best, restored
+
+        if smoke:
+            _, restored = timed_load(iters=1, parallel=2)
+            ok = (np.array_equal(np.asarray(restored["blob"]),
+                                 state["blob"])
+                  and np.array_equal(np.asarray(restored["head"]),
+                                     state["head"]))
+            out["roundtrip_ok"] = bool(ok)
+            emit("fig10/smoke_2readers", 0.0, "ok" if ok else "MISMATCH")
+            shutil.rmtree(d, ignore_errors=True)
+            return out
+
+        t_single, _ = timed_load()
+        out["single_reader"] = round(total / t_single / 1e9, 3)
+        emit("fig10/single_reader", t_single,
+             f"{out['single_reader']:.2f}GBps")
+
+        readers = [1, 2, 4] if quick else [1, 2, 4, 8]
+        qds = [2, 8] if quick else [1, 4, 16]
+        backends = [b for b in aio.BACKENDS if aio.backend_available(b)]
+        base_writer = spec.fp.writer
+        try:
+            for backend in backends:
+                for qd in qds:
+                    # the reader reuses the WriterConfig tuning surface
+                    spec.fp.writer = WriterConfig(backend=backend,
+                                                  queue_depth=qd,
+                                                  io_buffer_size=8 * 2**20)
+                    for r in readers:
+                        t, restored = timed_load(parallel=r)
+                        key = f"r{r}_{backend}_qd{qd}"
+                        out[key] = round(total / t / 1e9, 3)
+                        emit(f"fig10/{key}", t, f"{out[key]:.2f}GBps")
+        finally:
+            spec.fp.writer = base_writer
+
+        # the acceptance check: ≥4 parallel readers beat the legacy
+        # single-reader load on the same checkpoint
+        best4 = max((v for k, v in out.items()
+                     if k.startswith("r4_") or k.startswith("r8_")),
+                    default=0.0)
+        out["speedup_4readers_vs_single"] = round(
+            best4 / max(out["single_reader"], 1e-9), 2)
+        emit("fig10/speedup_4readers_vs_single", 0.0,
+             f"{out['speedup_4readers_vs_single']:.2f}x")
+
+        # paranoia: the fastest config round-trips bit-identically
+        _, restored = timed_load(iters=1, parallel=4)
+        out["roundtrip_ok"] = bool(
+            np.array_equal(np.asarray(restored["blob"]), state["blob"])
+            and np.array_equal(np.asarray(restored["head"]),
+                               state["head"]))
+    shutil.rmtree(d, ignore_errors=True)
+
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/fig10.json", "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    run()
+    cleanup()

@@ -1,8 +1,9 @@
 """Render the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
 experiments/dryrun/*.json, plus the §Checkpoint-write-path table from
-experiments/perf_writer.json and experiments/fig8.json when present
+experiments/perf_writer.json and experiments/fig8.json and the
+§Checkpoint-restore-path table from experiments/fig10.json when present
 (produced by ``benchmarks.perf_writer`` / ``benchmarks.fig8_parallel_
-writes``). Usage:
+writes`` / ``benchmarks.fig10_parallel_restore``). Usage:
 
     PYTHONPATH=src python -m benchmarks.make_tables > experiments/roofline.md
 """
@@ -13,6 +14,7 @@ import os
 DRYRUN_DIR = "experiments/dryrun"
 PERF_WRITER_JSON = "experiments/perf_writer.json"
 FIG8_JSON = "experiments/fig8.json"
+FIG10_JSON = "experiments/fig10.json"
 
 
 def fmt(x, digits=3):
@@ -142,6 +144,32 @@ def ckpt_write_tables():
                   f"{r['verdict']} | {r['hypothesis']} |")
 
 
+def ckpt_restore_table():
+    """§Checkpoint restore path: fig10 readers × backend × queue-depth
+    rows vs the legacy single-reader load (parallel-restore pipeline,
+    DESIGN.md §7)."""
+    if not os.path.exists(FIG10_JSON):
+        return
+    with open(FIG10_JSON) as f:
+        fig10 = json.load(f)
+    print("\n### Checkpoint restore path (measured on this host)\n")
+    single = fig10.get("single_reader")
+    if single is not None:
+        print(f"Legacy single-reader `engine.load()`: {fmt(single)} GB/s; "
+              f"best ≥4-reader parallel restore: "
+              f"{fmt(fig10.get('speedup_4readers_vs_single', 0))}x "
+              f"faster.\n")
+    sweep = {k: v for k, v in fig10.items() if k.startswith("r")
+             and not k.startswith("roundtrip")}
+    if sweep:
+        print("| fig10 readers × backend × qd | GB/s | vs single |")
+        print("|---|---|---|")
+        for k in sorted(sweep):
+            rel = sweep[k] / single if single else 0
+            print(f"| {k} | {fmt(sweep[k])} | {rel:.2f}x |")
+
+
 if __name__ == "__main__":
     main()
     ckpt_write_tables()
+    ckpt_restore_table()

@@ -1,14 +1,25 @@
-"""Async I/O submission backends for the NVMe write path (paper §4.1).
+"""Async I/O submission backends for the NVMe read/write paths (paper
+§4.1 writes, §4.2 load-then-allgather reads).
 
 The paper's write engine submits pinned staging buffers to the SSD with
-libaio so multiple writes are in flight per writer (deep NVMe queues).
-This module provides that submission layer behind one small interface:
+libaio so multiple writes are in flight per writer (deep NVMe queues);
+the restore path submits reads the same way so a reader rank keeps
+``queue_depth`` span reads in flight. This module provides that
+submission layer behind one small interface:
 
     sub = make_submitter(backend, fd, queue_depth)
-    ticket = sub.submit(buf, offset)    # non-blocking (queue permitting)
-    sub.wait(ticket)                    # block until THAT write landed
-    sub.drain()                         # block until everything landed
+    ticket = sub.submit(buf, offset)       # write (queue permitting)
+    ticket = sub.submit_read(buf, offset)  # read INTO buf, same queue
+    sub.wait(ticket)                       # block until THAT op landed
+    sub.drain()                            # block until everything landed
     sub.close()
+
+Reads and writes share one op abstraction per backend (the opcode is a
+per-ticket field, not a copy-pasted submitter): identical slot/ticket
+bookkeeping, queue-depth limits, and error-drain semantics. A short
+async READ is completed synchronously like a short write — except that
+hitting EOF mid-span is an error (a span read past the end of a shard
+means a torn file, never a retry).
 
 Three implementations, in preference order:
 
@@ -26,10 +37,11 @@ Three implementations, in preference order:
     available; the transparent fallback for tmpfs/CI/old kernels.
 
 Capability probing is a real end-to-end self-test (write a pattern
-through the candidate backend at queue depth 2, read it back, verify),
-run once per process and cached — a kernel that exposes the syscalls
-but mangles the ABI degrades to ``pwrite`` instead of corrupting
-checkpoints. Selection: ``$FASTPERSIST_IO_BACKEND`` overrides the
+through the candidate backend at queue depth 2, then read it back
+THROUGH THE SAME BACKEND's read ops, verify both directions), run once
+per process and cached — a kernel that exposes the syscalls but mangles
+the ABI degrades to ``pwrite`` instead of corrupting checkpoints, and a
+backend whose reads are broken is unavailable for restores too. Selection: ``$FASTPERSIST_IO_BACKEND`` overrides the
 configured name; ``"auto"`` picks the first available of
 io_uring > libaio > pwrite.
 """
@@ -88,9 +100,9 @@ class SubmitError(OSError):
 
 # ============================================================== pwrite
 class PwriteSubmitter:
-    """Thread-pool pwrite backend: ``queue_depth`` concurrent writes
-    (os.pwrite releases the GIL → kernel-level parallelism). With
-    ``inline=True`` submit() performs the write in the calling thread —
+    """Thread-pool pwrite/pread backend: ``queue_depth`` concurrent ops
+    (os.pwrite/os.preadv release the GIL → kernel-level parallelism).
+    With ``inline=True`` submit() performs the op in the calling thread —
     the genuinely synchronous single-buffer mode."""
 
     name = "pwrite"
@@ -105,23 +117,41 @@ class PwriteSubmitter:
         self._lock = threading.Lock()
         self.flush_seconds = 0.0
         self.n_writes = 0
+        self.n_reads = 0
 
-    def _write(self, buf: memoryview, offset: int):
+    def _rw(self, buf: memoryview, offset: int, read: bool):
         t0 = time.perf_counter()
-        written = 0
-        while written < len(buf):
-            written += os.pwrite(self.fd, buf[written:], offset + written)
+        done = 0
+        while done < len(buf):
+            if read:
+                n = os.preadv(self.fd, [buf[done:]], offset + done)
+                if n == 0:
+                    raise SubmitError(
+                        0, f"short read: EOF at offset {offset + done} "
+                           f"({done}/{len(buf)} bytes)")
+            else:
+                n = os.pwrite(self.fd, buf[done:], offset + done)
+            done += n
         with self._lock:
             self.flush_seconds += time.perf_counter() - t0
-            self.n_writes += 1
+            if read:
+                self.n_reads += 1
+            else:
+                self.n_writes += 1
 
-    def submit(self, buf: memoryview, offset: int):
+    def _submit_op(self, buf: memoryview, offset: int, read: bool):
         if self._inline:
-            self._write(buf, offset)
+            self._rw(buf, offset, read)
             return None
-        fut = self._pool.submit(self._write, buf, offset)
+        fut = self._pool.submit(self._rw, buf, offset, read)
         self._outstanding.append(fut)
         return fut
+
+    def submit(self, buf: memoryview, offset: int):
+        return self._submit_op(buf, offset, read=False)
+
+    def submit_read(self, buf: memoryview, offset: int):
+        return self._submit_op(buf, offset, read=True)
 
     def wait(self, ticket):
         if ticket is not None:
@@ -145,20 +175,23 @@ class PwriteSubmitter:
 # ============================================= kernel-queue submitters
 class _KernelQueueSubmitter:
     """Slot/ticket bookkeeping and completion semantics shared by the
-    libaio and io_uring submitters. Subclasses implement ``_reap_events
-    (min_nr) -> [(ticket, res)]`` (consume ALL currently available
-    events) and ``submit``/``close``."""
+    libaio and io_uring submitters, for BOTH directions: the op (read
+    or write) is a per-ticket field, so subclasses implement one
+    ``_submit_op(buf, offset, read)`` plus ``_reap_events(min_nr) ->
+    [(ticket, res)]`` (consume ALL currently available events) and
+    ``close``."""
 
     def __init__(self, fd: int, queue_depth: int):
         self.fd = fd
         self._depth = max(1, queue_depth)
         self._free = list(range(self._depth))
         self._inflight: Dict[int, tuple] = {}  # ticket → (slot, buf, pin,
-        #                                          nbytes, offset)
+        #                                          nbytes, offset, read)
         self._done: set = set()
         self._seq = 0
         self.flush_seconds = 0.0
         self.n_writes = 0
+        self.n_reads = 0
 
     def _acquire_slot(self) -> int:
         if not self._free:
@@ -167,6 +200,26 @@ class _KernelQueueSubmitter:
             self.flush_seconds += time.perf_counter() - t0
         return self._free.pop()
 
+    def _track(self, ticket: int, slot: int, buf, pin, nbytes: int,
+               offset: int, read: bool = False):
+        self._inflight[ticket] = (slot, buf, pin, nbytes, offset, read)
+
+    def _finish_tail(self, buf, nbytes: int, offset: int, done: int,
+                     read: bool):
+        """Complete a short async op synchronously — identical
+        bytes-on-disk/in-buffer semantics, just slower. A READ that hits
+        EOF mid-span is an error (torn shard), never a busy-loop."""
+        while done < nbytes:
+            if read:
+                n = os.preadv(self.fd, [buf[done:]], offset + done)
+                if n == 0:
+                    raise SubmitError(
+                        0, f"short read: EOF at offset {offset + done} "
+                           f"({done}/{nbytes} bytes)")
+            else:
+                n = os.pwrite(self.fd, buf[done:], offset + done)
+            done += n
+
     def _reap(self, min_nr: int):
         """Consume a completion batch. The WHOLE batch is processed —
         slots freed, tickets resolved — before any error is raised;
@@ -174,29 +227,37 @@ class _KernelQueueSubmitter:
         ``_inflight`` and turn a disk error into a drain() hang."""
         errors: List[BaseException] = []
         for ticket, res in self._reap_events(min_nr):
-            slot, buf, _pin, nbytes, offset = self._inflight.pop(ticket)
+            slot, buf, _pin, nbytes, offset, read = \
+                self._inflight.pop(ticket)
             self._free.append(slot)
             if res < 0:
                 errors.append(SubmitError(-res, os.strerror(-res)))
                 continue
             if res < nbytes:
-                # short async write: finish the tail synchronously —
-                # identical bytes-on-disk semantics, just slower
                 try:
-                    done = res
-                    while done < nbytes:
-                        done += os.pwrite(self.fd, buf[done:],
-                                          offset + done)
+                    self._finish_tail(buf, nbytes, offset, res, read)
                 except OSError as e:
                     errors.append(e)
                     continue
             self._done.add(ticket)
-            self.n_writes += 1
+            if read:
+                self.n_reads += 1
+            else:
+                self.n_writes += 1
         if errors:
             raise errors[0]
 
     def _reap_events(self, min_nr: int):
         raise NotImplementedError
+
+    def _submit_op(self, buf: memoryview, offset: int, read: bool):
+        raise NotImplementedError
+
+    def submit(self, buf: memoryview, offset: int):
+        return self._submit_op(buf, offset, read=False)
+
+    def submit_read(self, buf: memoryview, offset: int):
+        return self._submit_op(buf, offset, read=True)
 
     def wait(self, ticket):
         t0 = time.perf_counter()
@@ -240,13 +301,15 @@ class _IoEvent(ctypes.Structure):
                 ("res2", ctypes.c_int64)]
 
 
+_IOCB_CMD_PREAD = 0
 _IOCB_CMD_PWRITE = 1
 
 
 class LibaioSubmitter(_KernelQueueSubmitter):
     """Kernel AIO (io_submit/io_getevents) driven through raw syscalls.
     One iocb slot per queue-depth unit; completions are reaped lazily
-    when the queue is full or a caller waits."""
+    when the queue is full or a caller waits. Reads and writes share
+    the context — only the iocb opcode differs."""
 
     name = "libaio"
 
@@ -262,7 +325,7 @@ class LibaioSubmitter(_KernelQueueSubmitter):
         self._iocbs = (_Iocb * self._depth)()
         self._events = (_IoEvent * self._depth)()
 
-    def submit(self, buf: memoryview, offset: int):
+    def _submit_op(self, buf: memoryview, offset: int, read: bool):
         slot = self._acquire_slot()
         self._seq += 1
         ticket = self._seq
@@ -270,7 +333,7 @@ class LibaioSubmitter(_KernelQueueSubmitter):
         cb = self._iocbs[slot]
         ctypes.memset(ctypes.byref(cb), 0, ctypes.sizeof(cb))
         cb.aio_data = ticket
-        cb.aio_lio_opcode = _IOCB_CMD_PWRITE
+        cb.aio_lio_opcode = _IOCB_CMD_PREAD if read else _IOCB_CMD_PWRITE
         cb.aio_fildes = self.fd
         cb.aio_buf = addr
         cb.aio_nbytes = len(buf)
@@ -282,7 +345,7 @@ class LibaioSubmitter(_KernelQueueSubmitter):
             self._free.append(slot)
             raise SubmitError(ctypes.get_errno(),
                               f"io_submit returned {r}")
-        self._inflight[ticket] = (slot, buf, pin, len(buf), offset)
+        self._track(ticket, slot, buf, pin, len(buf), offset, read)
         return ticket
 
     def _reap_events(self, min_nr: int):
@@ -339,7 +402,8 @@ class _Iovec(ctypes.Structure):
     _fields_ = [("iov_base", ctypes.c_void_p), ("iov_len", ctypes.c_size_t)]
 
 
-_IORING_OP_WRITEV = 2            # supported since the first io_uring kernel
+_IORING_OP_READV = 1             # supported since the first io_uring kernel
+_IORING_OP_WRITEV = 2
 _IORING_ENTER_GETEVENTS = 1
 _IORING_FEAT_SINGLE_MMAP = 1
 _IORING_OFF_SQ_RING = 0
@@ -423,7 +487,7 @@ class IoUringSubmitter(_KernelQueueSubmitter):
             raise SubmitError(ctypes.get_errno(), "io_uring_enter failed")
         return int(r)
 
-    def submit(self, buf: memoryview, offset: int):
+    def _submit_op(self, buf: memoryview, offset: int, read: bool):
         slot = self._acquire_slot()
         self._seq += 1
         ticket = self._seq
@@ -433,8 +497,9 @@ class IoUringSubmitter(_KernelQueueSubmitter):
         idx = self._sq_tail & self._sq_mask
         # sqe: opcode u8, flags u8, ioprio u16, fd s32, off u64, addr u64,
         #      len u32, rw_flags u32, user_data u64, pad[24]
+        opcode = _IORING_OP_READV if read else _IORING_OP_WRITEV
         struct.pack_into("<BBHiQQIIQ", self._sqes_mm, idx * _SQE_SIZE,
-                         _IORING_OP_WRITEV, 0, 0, self.fd, offset,
+                         opcode, 0, 0, self.fd, offset,
                          ctypes.addressof(self._iov[slot]), 1, 0, ticket)
         self._sqes_mm[idx * _SQE_SIZE + 40:(idx + 1) * _SQE_SIZE] = \
             b"\x00" * 24
@@ -445,7 +510,7 @@ class IoUringSubmitter(_KernelQueueSubmitter):
         if submitted != 1:
             self._free.append(slot)
             raise SubmitError(0, f"io_uring_enter submitted {submitted}")
-        self._inflight[ticket] = (slot, buf, pin, len(buf), offset)
+        self._track(ticket, slot, buf, pin, len(buf), offset, read)
         return ticket
 
     def _reap_events(self, min_nr: int):
@@ -490,9 +555,11 @@ _warned: set = set()
 
 
 def _probe(name: str) -> bool:
-    """End-to-end self-test: push two known chunks through the backend
-    at queue depth 2 and verify the file contents. Any failure —
-    missing syscalls, ABI mismatch, seccomp — means 'unavailable'."""
+    """End-to-end self-test in BOTH directions: push two known chunks
+    through the backend at queue depth 2, verify the file contents,
+    then read them back through the backend's read ops and verify
+    again. Any failure — missing syscalls, ABI mismatch, seccomp —
+    means 'unavailable' (for saves and restores alike)."""
     path = None
     fd = -1
     try:
@@ -514,7 +581,24 @@ def _probe(name: str) -> bool:
         fd = -1
         with open(path, "rb") as f:
             data = f.read()
-        return data == b"\xa5" * 4096 + b"\x5a" * 512
+        if data != b"\xa5" * 4096 + b"\x5a" * 512:
+            return False
+        # read direction: same ops, same queue, into fresh buffers
+        fd = os.open(path, os.O_RDONLY)
+        ra = memoryview(bytearray(4096))
+        rb = memoryview(bytearray(512))
+        sub = _FACTORIES[name](fd, 2)
+        try:
+            t1 = sub.submit_read(ra, 0)
+            t2 = sub.submit_read(rb, 4096)
+            sub.wait(t1)
+            sub.wait(t2)
+            sub.drain()
+        finally:
+            sub.close()
+        os.close(fd)
+        fd = -1
+        return bytes(ra) == b"\xa5" * 4096 and bytes(rb) == b"\x5a" * 512
     except Exception:
         return False
     finally:

@@ -17,11 +17,22 @@ checkpoint stream and keyed by the state's structure
     donation hands the arrays' storage back to XLA) re-lays-out, and
     re-allocates ONLY if the new stream is larger than the capacity.
 
-Lifetime rule (DESIGN.md §6): an arena must not be refilled while a
+The arena also stages RESTORES (DESIGN.md §7): :meth:`read_buffer`
+hands out a second reusable page-aligned buffer that the parallel
+restore path reads shard spans into, and ``deserialize`` then carves
+zero-copy numpy views out of it — a steady-state load allocates
+nothing. The read staging is a SEPARATE backing allocation from the
+serialize staging, so an overlapped async save can never scribble over
+a load in progress (or vice versa).
+
+Lifetime rules (DESIGN.md §6/§7): an arena must not be refilled while a
 previous save is still reading it. The engine's single helper thread
 and ``PipelinedCheckpointer``'s one-worker queue serialize saves, so
 overlapped (async) checkpointing reuses one arena safely; concurrent
-``save()`` calls on one checkpointer need one arena each.
+``save()`` calls on one checkpointer need one arena each. Arrays
+deserialized from :meth:`read_buffer` are views into it — valid until
+the NEXT load on the same arena; copy them (``jnp.array`` /
+``np.array``) to retain past that.
 """
 from __future__ import annotations
 
@@ -57,11 +68,18 @@ class SerializeArena:
         self._treedef_str: Optional[str] = None
         self._total = 0
         self.capacity = 0
+        # read-staging twin (restore path; separate backing, see
+        # module docstring)
+        self._read_raw: Optional[np.ndarray] = None
+        self._read_mv: Optional[memoryview] = None
+        self.read_capacity = 0
         # --- observability (SaveStats / benchmarks read these) ---
         self.n_alloc = 0        # backing-buffer allocations
         self.n_layout = 0       # stream layouts (key misses)
         self.n_reuse = 0        # steady-state fills into cached layout
         self.last_reused = False
+        self.n_read_alloc = 0   # read-staging allocations
+        self.n_read_reuse = 0   # loads served from the cached buffer
 
     # ------------------------------------------------------------ state
     def invalidate(self):
@@ -79,6 +97,30 @@ class SerializeArena:
             self._raw = self._mv.obj         # backing ndarray (identity)
             self.capacity = size
             self.n_alloc += 1
+
+    # ------------------------------------------------------ read staging
+    def read_buffer(self, nbytes: int) -> memoryview:
+        """Reusable page-aligned READ-staging window of ``nbytes``
+        (restore path): the first load allocates, steady-state loads
+        reuse; contents are undefined until the caller fills them.
+        Separate backing from the serialize staging — refilling one
+        never corrupts the other. Lifetime rule: views carved out of
+        this buffer (zero-copy ``deserialize``) are valid until the
+        next ``read_buffer`` call that grows it OR the next load that
+        refills it."""
+        if self._read_raw is None or nbytes > self.read_capacity:
+            size = max(nbytes, 1)
+            self._read_mv = aligned_buffer(size, self.alignment)
+            self._read_raw = self._read_mv.obj
+            self.read_capacity = size
+            self.n_read_alloc += 1
+        else:
+            self.n_read_reuse += 1
+        return self._read_mv[:nbytes]
+
+    def read_buffer_id(self) -> Optional[int]:
+        """Identity of the read-staging allocation (tests assert reuse)."""
+        return id(self._read_raw) if self._read_raw is not None else None
 
     # ----------------------------------------------------------- layout
     @staticmethod

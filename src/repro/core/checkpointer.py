@@ -13,9 +13,20 @@ destination volume, DESIGN.md §5):
       ...
 
 Loading (paper §4.2): each rank reads its own shard then the DP group
-allgathers — here ``load`` assembles all shards locally and is
-RANK-ELASTIC: the manifest's saved plan (not the loader's topology)
-drives reassembly, so K shards restore onto any reader configuration.
+allgathers. ``load`` is RANK-ELASTIC either way: the manifest's saved
+plan (not the loader's topology) drives reassembly, so K shards restore
+onto any reader configuration. Two restore modes:
+
+  * ``load(step)`` — the legacy single-reader path: shards are read
+    whole, sequentially, into a fresh bytearray;
+  * ``load(step, read_plan=N)`` — the parallel pipeline: N reader
+    workers each read ONLY their owned ``[shard, offset, length]``
+    spans (``partition.make_read_plan``) through the async read
+    backends into one shared page-aligned arena buffer — the single-
+    host stand-in for the paper's allgather is that shared buffer —
+    with per-span CRCs folded hot and combined into shard CRCs for
+    verification (no second sweep). ``read_owned``/``allgather_owned``
+    expose the per-rank half for genuinely distributed restores.
 """
 from __future__ import annotations
 
@@ -23,15 +34,20 @@ import json
 import os
 import threading
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field, replace
-from typing import List, Optional, Sequence
+from itertools import groupby
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core import layout
 from repro.core.arena import SerializeArena
-from repro.core.partition import Topology, WritePlan, make_plan
+from repro.core.partition import (ReadPlan, ReadSpan, Topology, WritePlan,
+                                  make_plan, make_read_plan, probe_volumes,
+                                  select_writers)
+from repro.core.reader import combine_span_crcs, read_stream
 from repro.core.serializer import (ByteStreamView, Manifest, TensorRecord,
                                    decode_record, deserialize, serialize,
                                    tensor_spans)
@@ -97,12 +113,20 @@ class FastPersistCheckpointer:
         self._arena = SerializeArena() if self.config.arena else None
 
     # -- setup-time planning (paper: partition fixed before iteration 1) --
-    def plan_for(self, total_bytes: int, n_volumes: int = 1) -> WritePlan:
-        key = (total_bytes, n_volumes)
+    def plan_for(self, total_bytes: int, n_volumes: int = 1,
+                 healthy_volumes: Optional[Tuple[int, ...]] = None
+                 ) -> WritePlan:
+        """Cached write plan. ``healthy_volumes`` (surviving volume
+        indices from a per-save health probe) keys the cache too, so a
+        volume dropping out mid-training re-plans instead of serving
+        the stale stripe."""
+        key = (total_bytes, n_volumes, healthy_volumes)
         if key not in self._plan_cache:
             self._plan_cache[key] = make_plan(
                 total_bytes, self.config.topology, self.config.strategy,
-                self.config.writers_per_node, n_volumes=n_volumes)
+                self.config.writers_per_node, n_volumes=n_volumes,
+                healthy_volumes=(list(healthy_volumes)
+                                 if healthy_volumes is not None else None))
         return self._plan_cache[key]
 
     def path(self, step: int) -> str:
@@ -136,10 +160,34 @@ class FastPersistCheckpointer:
         d = directory if directory is not None else self.path(step)
         n_volumes = (len(volume_dirs)
                      if volume_dirs and not self.config.single_file else 1)
-        plan = self.plan_for(view.total, n_volumes)
         dirs = (list(volume_dirs) if volume_dirs
                 and not self.config.single_file else [d])
-        for vd in {d, *dirs}:
+        # plan-time volume health (ROADMAP): probe every destination —
+        # writable + enough free space for its share — and stripe only
+        # across the survivors; a totally-dead volume set degrades to
+        # the primary directory instead of failing the save
+        probe_degraded: Tuple[int, ...] = ()
+        if n_volumes > 1:
+            n_writers = len(select_writers(
+                self.config.topology, self.config.strategy,
+                self.config.writers_per_node, view.total))
+            healthy, deg = probe_volumes(dirs, view.total, create=True,
+                                         n_shards=n_writers)
+            probe_degraded = tuple(deg)
+            if not healthy:
+                warnings.warn(
+                    f"every checkpoint volume failed the health probe "
+                    f"({dirs}); falling back to the primary directory "
+                    f"{d}", stacklevel=2)
+                dirs, n_volumes = [d], 1
+                plan = self.plan_for(view.total, 1)
+            else:
+                plan = self.plan_for(view.total, n_volumes,
+                                     healthy_volumes=tuple(healthy))
+        else:
+            plan = self.plan_for(view.total, n_volumes)
+        used_dirs = {d, *(dirs[e.volume] for e in plan.extents)}
+        for vd in used_dirs:
             os.makedirs(vd, exist_ok=True)
 
         t0 = time.perf_counter()
@@ -187,6 +235,12 @@ class FastPersistCheckpointer:
                     em["crc32"] = ws.crc32
         meta["plan"] = {"strategy": plan.strategy, "extents": extents_meta,
                         "n_volumes": plan.n_volumes}
+        degraded = tuple(sorted({*plan.degraded, *probe_degraded}))
+        if degraded:
+            # audit trail: which volumes the health probe dropped (the
+            # COMMIT's per-shard volume records already make restore
+            # work without this — it is for operators and tests)
+            meta["plan"]["degraded"] = list(degraded)
         # the global index: tensor → [shard, offset-in-shard, length]
         # spans, the key to rank-elastic and partial restore (§5)
         meta["index"] = tensor_spans(manifest.records, plan.extents)
@@ -250,32 +304,10 @@ class FastPersistCheckpointer:
                   "rb") as f:
             return f.read(extent["length"])
 
-    def load(self, step: int, like=None, verify: bool = True,
-             directory: Optional[str] = None,
-             marker: Optional[dict] = None,
-             volume_roots: Optional[Sequence[str]] = None):
-        """Assemble the full stream (the 'allgather') and rebuild arrays.
-        Rank-elastic: reassembly is driven entirely by the manifest's
-        SAVED plan, so any reader topology/volume layout restores a
-        checkpoint written by any writer count. Per-extent CRC32s are
-        verified when present (production integrity check — a
-        torn/corrupted shard fails loudly, not silently)."""
-        import zlib
-        d = directory if directory is not None else self.path(step)
-        if marker is None:
-            marker = layout.read_commit_marker(d)
-        manifest, plan, _ = self._read_manifest(step, directory)
-        stream = bytearray(manifest.total_bytes)
-        for e in plan["extents"]:
-            data = self.read_shard(step, e["shard_index"], e, directory,
-                                   marker=marker, volume_roots=volume_roots)
-            if verify and "crc32" in e:
-                crc = zlib.crc32(data)
-                if crc != e["crc32"]:
-                    raise IOError(
-                        f"checkpoint corruption: shard {e['shard_index']} "
-                        f"crc {crc:#x} != manifest {e['crc32']:#x}")
-            stream[e["offset"]:e["offset"] + e["length"]] = data
+    def _materialize(self, manifest: Manifest, stream, like):
+        """Shared tail of every load path: (de)quantize + rebuild arrays
+        from an assembled stream. With a memoryview stream the arrays
+        are zero-copy views into it (arena lifetime rule, DESIGN.md §7)."""
         if manifest.extras.get("quantized"):
             from repro.core.quant import dequantize_named
             named = deserialize(manifest, stream)
@@ -289,6 +321,208 @@ class FastPersistCheckpointer:
             return named, manifest
         return deserialize(manifest, stream, like=like), manifest
 
+    def load(self, step: int, like=None, verify: bool = True,
+             directory: Optional[str] = None,
+             marker: Optional[dict] = None,
+             volume_roots: Optional[Sequence[str]] = None,
+             read_plan: Union[None, int, str, ReadPlan] = None):
+        """Assemble the full stream (the 'allgather') and rebuild arrays.
+        Rank-elastic: reassembly is driven entirely by the manifest's
+        SAVED plan, so any reader topology/volume layout restores a
+        checkpoint written by any writer count. Per-extent CRC32s are
+        verified when present (production integrity check — a
+        torn/corrupted shard fails loudly, not silently).
+
+        ``read_plan`` selects the PARALLEL restore pipeline: an int (or
+        ``"auto"``) builds a balanced byte-stripe
+        :class:`~repro.core.partition.ReadPlan` over that many local
+        reader workers; an explicit plan (e.g. ownership-based) is used
+        as-is. Each worker reads only its owned spans through the async
+        read backends into one shared page-aligned arena buffer."""
+        import zlib
+        d = directory if directory is not None else self.path(step)
+        if marker is None:
+            marker = layout.read_commit_marker(d)
+        manifest, plan, index = self._read_manifest(step, directory)
+        if read_plan is not None:
+            return self._load_parallel(manifest, plan, index, read_plan,
+                                       like, verify, d, marker,
+                                       volume_roots)
+        stream = bytearray(manifest.total_bytes)
+        for e in plan["extents"]:
+            data = self.read_shard(step, e["shard_index"], e, directory,
+                                   marker=marker, volume_roots=volume_roots)
+            if verify and "crc32" in e:
+                crc = zlib.crc32(data)
+                if crc != e["crc32"]:
+                    raise IOError(
+                        f"checkpoint corruption: shard {e['shard_index']} "
+                        f"crc {crc:#x} != manifest {e['crc32']:#x}")
+            stream[e["offset"]:e["offset"] + e["length"]] = data
+        return self._materialize(manifest, stream, like)
+
+    # ------------------------------------------- parallel restore (§4.2)
+    def _resolve_read_plan(self, read_plan, plan: dict,
+                           index: Optional[dict]) -> ReadPlan:
+        if isinstance(read_plan, ReadPlan):
+            return read_plan
+        if read_plan == "auto":
+            n = min(8, os.cpu_count() or 1, max(2, len(plan["extents"])))
+        else:
+            n = max(1, int(read_plan))
+        return make_read_plan(plan, index, n)
+
+    def _span_file(self, d: str, extent: dict, marker, volume_roots,
+                   spans: List[ReadSpan]
+                   ) -> Tuple[str, List[Tuple[int, int, int]]]:
+        """(path, [(file_offset, dest_offset≡stream_offset, length)])
+        for one shard's spans; single-file checkpoints offset into the
+        one stream-ordered file."""
+        if self.config.single_file:
+            path = os.path.join(d, "checkpoint.bin")
+            base = int(extent["offset"])
+        else:
+            sd = self._shard_dir(d, extent, marker, volume_roots)
+            path = os.path.join(sd,
+                                self._shard_file(int(extent["shard_index"])))
+            base = 0
+        return path, [(base + s.shard_offset, s.stream_offset, s.length)
+                      for s in spans]
+
+    def _read_rank_spans(self, rank: int, rp: ReadPlan, by_shard: Dict,
+                         dest: memoryview, d: str, marker, volume_roots,
+                         rcfg: WriterConfig, collected: Dict,
+                         lock: threading.Lock):
+        """One reader worker: stream this rank's spans — grouped per
+        shard file, ``queue_depth`` reads in flight — into the shared
+        destination buffer, folding per-span CRCs while the bytes are
+        hot."""
+        spans = rp.spans_of(rank)
+        for shard_index, group in groupby(spans,
+                                          key=lambda s: s.shard_index):
+            group = list(group)
+            e = by_shard[shard_index]
+            path, triples = self._span_file(d, e, marker, volume_roots,
+                                            group)
+            st = read_stream(path, triples, dest, rcfg)
+            if st.span_crcs is not None:
+                with lock:
+                    collected.setdefault(shard_index, []).extend(
+                        (s.shard_offset, s.length, c)
+                        for s, c in zip(group, st.span_crcs))
+
+    def _verify_span_crcs(self, extents: Sequence[dict], collected: Dict):
+        """Combine each shard's span CRCs (``reader.crc32_combine`` —
+        no re-read) and compare against the manifest. Shards whose
+        collected spans do not tile the whole shard (owned-only reads)
+        are skipped: a partial read cannot be checked against a
+        whole-shard CRC."""
+        for e in extents:
+            if "crc32" not in e:
+                continue
+            parts = collected.get(int(e["shard_index"]))
+            if not parts:
+                continue
+            combined = combine_span_crcs(parts, int(e["length"]))
+            if combined is None:        # partial coverage: unverifiable
+                continue
+            if combined != e["crc32"]:
+                raise IOError(
+                    f"checkpoint corruption: shard {e['shard_index']} "
+                    f"combined span crc {combined:#x} != manifest "
+                    f"{e['crc32']:#x} (parallel restore path)")
+
+    def _load_parallel(self, manifest: Manifest, plan: dict,
+                       index: Optional[dict], read_plan, like, verify,
+                       d: str, marker, volume_roots):
+        """N local reader workers → one shared arena buffer (the
+        single-host stand-in for the paper's allgather: every rank's
+        spans land at their stream offsets, so assembly IS
+        concatenation), combined-CRC verification, zero-copy
+        deserialize."""
+        rp = self._resolve_read_plan(read_plan, plan, index)
+        total = manifest.total_bytes
+        dest = (self._arena.read_buffer(total) if self._arena is not None
+                else memoryview(bytearray(total)))
+        rcfg = self.config.writer
+        if rcfg.checksum != bool(verify):
+            rcfg = replace(rcfg, checksum=bool(verify))
+        by_shard = {int(e["shard_index"]): e for e in plan["extents"]}
+        collected: Dict[int, list] = {}
+        lock = threading.Lock()
+        readers = [r for r in rp.readers if rp.spans_of(r)]
+        if len(readers) <= 1:
+            for r in readers:
+                self._read_rank_spans(r, rp, by_shard, dest, d, marker,
+                                      volume_roots, rcfg, collected, lock)
+        else:
+            with ThreadPoolExecutor(len(readers),
+                                    thread_name_prefix="fp-read") as ex:
+                list(ex.map(
+                    lambda r: self._read_rank_spans(
+                        r, rp, by_shard, dest, d, marker, volume_roots,
+                        rcfg, collected, lock), readers))
+        if verify:
+            self._verify_span_crcs(plan["extents"], collected)
+        return self._materialize(manifest, dest, like)
+
+    def read_owned(self, step: int, rank: int, n_readers: int,
+                   ownership: Union[None, str, dict] = None,
+                   verify: bool = True,
+                   directory: Optional[str] = None,
+                   marker: Optional[dict] = None,
+                   volume_roots: Optional[Sequence[str]] = None,
+                   read_plan: Optional[ReadPlan] = None) -> "OwnedRead":
+        """ONE rank's half of the distributed restore: read only the
+        spans this rank owns (``ownership=None`` → balanced stripe;
+        ``"zero1"`` → the ZeRO-1 projection from
+        ``repro.sharding.specs``; a dict → explicit per-tensor
+        ownership) into a packed buffer. The returned
+        :class:`OwnedRead` exposes the spans for the allgather
+        (:func:`allgather_owned` is the single-host stand-in). Shards
+        fully covered by this rank's spans are CRC-verified; partially
+        covered shards cannot be (whole-shard CRCs)."""
+        d = directory if directory is not None else self.path(step)
+        if marker is None:
+            marker = layout.read_commit_marker(d)
+        manifest, plan, index = self._read_manifest(step, directory)
+        if read_plan is None:
+            if ownership == "zero1":
+                from repro.sharding.specs import zero1_ownership
+                ownership = zero1_ownership(manifest.records, n_readers)
+            read_plan = make_read_plan(plan, index, n_readers, ownership)
+        spans = read_plan.spans_of(rank)
+        owned = sum(s.length for s in spans)
+        # a PRIVATE buffer, not the arena: the single-host allgather
+        # needs every rank's OwnedRead alive at once, and on a real DP
+        # group each rank is its own process anyway
+        dest = memoryview(bytearray(owned))
+        rcfg = self.config.writer
+        if rcfg.checksum != bool(verify):
+            rcfg = replace(rcfg, checksum=bool(verify))
+        by_shard = {int(e["shard_index"]): e for e in plan["extents"]}
+        collected: Dict[int, list] = {}
+        pos = 0
+        for shard_index, group in groupby(spans,
+                                          key=lambda s: s.shard_index):
+            group = list(group)
+            e = by_shard[shard_index]
+            path, triples = self._span_file(d, e, marker, volume_roots,
+                                            group)
+            packed = []
+            for (file_off, _stream_off, length) in triples:
+                packed.append((file_off, pos, length))
+                pos += length
+            st = read_stream(path, packed, dest, rcfg)
+            if st.span_crcs is not None:
+                collected.setdefault(shard_index, []).extend(
+                    (s.shard_offset, s.length, c)
+                    for s, c in zip(group, st.span_crcs))
+        if verify:
+            self._verify_span_crcs(plan["extents"], collected)
+        return OwnedRead(rank=rank, step=step, manifest=manifest,
+                         spans=list(spans), buffer=dest[:owned])
+
     def load_tensor(self, step: int, name: str,
                     directory: Optional[str] = None,
                     marker: Optional[dict] = None,
@@ -297,7 +531,10 @@ class FastPersistCheckpointer:
         """Partial restore of ONE tensor via the global index: reads only
         the [shard, offset, length] spans that hold its bytes — a tensor
         split mid-stream across shard boundaries is reassembled from the
-        exact byte ranges, without touching the other shards' data."""
+        exact byte ranges, without touching the other shards' data.
+        Spans land in ONE preallocated buffer through the same async
+        span reader as the parallel restore path (no bytearray-append
+        churn, no per-span copies)."""
         d = directory if directory is not None else self.path(step)
         if marker is None:
             marker = layout.read_commit_marker(d)
@@ -308,7 +545,10 @@ class FastPersistCheckpointer:
                            f"load())")
         rec = next(r for r in manifest.records if r.name == name)
         by_shard = {e["shard_index"]: e for e in plan["extents"]}
-        raw = bytearray()
+        raw = memoryview(bytearray(rec.nbytes))
+        rcfg = replace(self.config.writer, checksum=False)
+        per_path: List[Tuple[str, Tuple[int, int, int]]] = []
+        pos = 0
         for shard_index, off, length in index[name]:
             e = by_shard[shard_index]
             if self.config.single_file:
@@ -317,13 +557,14 @@ class FastPersistCheckpointer:
             else:
                 sd = self._shard_dir(d, e, marker, volume_roots)
                 path = os.path.join(sd, self._shard_file(shard_index))
-            with open(path, "rb") as f:
-                f.seek(off)
-                raw += f.read(length)
-        if len(raw) != rec.nbytes:
-            raise IOError(f"tensor {name!r}: index spans yielded "
-                          f"{len(raw)} bytes, expected {rec.nbytes}")
-        return decode_record(rec, bytes(raw))
+            per_path.append((path, (off, pos, length)))
+            pos += length
+        if pos != rec.nbytes:
+            raise IOError(f"tensor {name!r}: index spans cover {pos} "
+                          f"bytes, expected {rec.nbytes}")
+        for path, group in groupby(per_path, key=lambda t: t[0]):
+            read_stream(path, [t[1] for t in group], raw, rcfg)
+        return decode_record(rec, raw)
 
     def latest_step(self) -> Optional[int]:
         """Most recent COMMITTED step. Defensive: staging ``.tmp`` dirs,
@@ -331,3 +572,72 @@ class FastPersistCheckpointer:
         rather than crashing the restore path."""
         steps = layout.committed_steps(self.directory, legacy_ok=True)
         return steps[-1] if steps else None
+
+
+# ====================================================== owned-span reads
+@dataclass
+class OwnedRead:
+    """One reader rank's slice of a checkpoint — the bytes a DP rank
+    loads BEFORE the paper's allgather. ``buffer`` packs the rank's
+    spans contiguously in stream order; ``spans`` records where each
+    piece belongs in the full stream. The buffer is private to this
+    read (every rank's OwnedRead must be alive at once for the
+    single-host allgather), unlike the shared-arena full parallel
+    load."""
+    rank: int
+    step: int
+    manifest: Manifest
+    spans: List[ReadSpan]          # stream order
+    buffer: memoryview             # packed owned bytes
+
+    @property
+    def nbytes(self) -> int:
+        return sum(s.length for s in self.spans)
+
+    def chunks(self) -> Iterator[Tuple[int, memoryview]]:
+        """(stream_offset, bytes) pieces — the rank's allgather payload."""
+        off = 0
+        for s in self.spans:
+            yield s.stream_offset, self.buffer[off:off + s.length]
+            off += s.length
+
+    def tensor_fragments(self) -> Dict[str, List[Tuple[int, memoryview]]]:
+        """{tensor name: [(tensor-relative byte offset, bytes), ...]}
+        for every record this rank holds bytes of — e.g. rank *r*'s
+        ZeRO-1 row block, ready to ``decode_record`` after a local
+        concatenation."""
+        out: Dict[str, List[Tuple[int, memoryview]]] = {}
+        recs = sorted(self.manifest.records, key=lambda r: r.offset)
+        starts = [r.offset for r in recs]
+        from bisect import bisect_right
+        for stream_off, mv in self.chunks():
+            i = max(0, bisect_right(starts, stream_off) - 1)
+            while i < len(recs) and recs[i].offset < stream_off + len(mv):
+                r = recs[i]
+                lo = max(stream_off, r.offset)
+                hi = min(stream_off + len(mv), r.offset + r.nbytes)
+                if hi > lo:
+                    out.setdefault(r.name, []).append(
+                        (lo - r.offset,
+                         mv[lo - stream_off:hi - stream_off]))
+                i += 1
+        return out
+
+
+def allgather_owned(reads: Sequence[OwnedRead]) -> memoryview:
+    """Single-host stand-in for the paper's §4.2 allgather: concatenate
+    every rank's owned spans back into the full checkpoint stream (on a
+    real DP group this is one collective over the same payloads).
+    Raises if the union of spans does not cover the stream exactly."""
+    assert reads, "allgather of nothing"
+    total = reads[0].manifest.total_bytes
+    out = memoryview(bytearray(total))
+    covered = 0
+    for rd in reads:
+        for stream_off, mv in rd.chunks():
+            out[stream_off:stream_off + len(mv)] = mv
+            covered += len(mv)
+    if covered != total:
+        raise IOError(f"owned reads cover {covered} of {total} bytes — "
+                      f"ranks missing from the allgather")
+    return out

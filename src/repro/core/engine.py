@@ -38,6 +38,7 @@ from repro.core import layout
 from repro.core.baseline import BaselineCheckpointer
 from repro.core.checkpointer import (FastPersistCheckpointer,
                                      FastPersistConfig, SaveStats)
+from repro.core.partition import probe_volumes
 
 
 # ===================================================================== spec
@@ -138,10 +139,18 @@ class CheckpointBackend:
 
     def read_payload_sharded(self, directory: str, step: int, like=None,
                              verify: bool = True, marker=None,
-                             volume_roots=None) -> Tuple[object, object]:
+                             volume_roots=None,
+                             parallel=None) -> Tuple[object, object]:
         """Multi-volume read hook; the default ignores the shard context
-        (single-dir backends never need it)."""
+        and the parallel-restore request (single-dir backends never need
+        either)."""
         return self.read_payload(directory, step, like=like, verify=verify)
+
+    def invalidate_arena(self):
+        """Drop any cached serialize-arena layout (buffer-donation hook:
+        the trainer calls this when the state's buffers were reclaimed
+        or replaced, instead of relying on the structure key alone).
+        Default: nothing cached, nothing to drop."""
 
     def close(self):
         pass
@@ -168,16 +177,30 @@ class FastPersistBackend(CheckpointBackend):
                                 directory=directory)
 
     def read_payload_sharded(self, directory, step, like=None, verify=True,
-                             marker=None, volume_roots=None):
+                             marker=None, volume_roots=None,
+                             parallel=None):
         return self._inner.load(step, like=like, verify=verify,
                                 directory=directory, marker=marker,
-                                volume_roots=volume_roots)
+                                volume_roots=volume_roots,
+                                read_plan=parallel)
+
+    def read_owned(self, directory, step, rank, n_readers, ownership=None,
+                   verify=True, marker=None, volume_roots=None):
+        return self._inner.read_owned(step, rank, n_readers,
+                                      ownership=ownership, verify=verify,
+                                      directory=directory, marker=marker,
+                                      volume_roots=volume_roots)
 
     def load_tensor(self, directory, step, name, marker=None,
                     volume_roots=None):
         return self._inner.load_tensor(step, name, directory=directory,
                                        marker=marker,
                                        volume_roots=volume_roots)
+
+    def invalidate_arena(self):
+        arena = getattr(self._inner, "_arena", None)
+        if arena is not None:
+            arena.invalidate()
 
 
 class PipelinedFastPersistBackend(FastPersistBackend):
@@ -207,6 +230,11 @@ class BaselineBackend(CheckpointBackend):
 
     def read_payload(self, directory, step, like=None, verify=True):
         return self._inner.load(step, like=like, directory=directory)
+
+    def invalidate_arena(self):
+        arena = getattr(self._inner, "_arena", None)
+        if arena is not None:
+            arena.invalidate()
 
 
 _REGISTRY: Dict[str, Callable[[CheckpointSpec], CheckpointBackend]] = {}
@@ -297,7 +325,16 @@ class CheckpointEngine:
         self.spec = spec
         os.makedirs(spec.directory, exist_ok=True)
         for root in self.volume_roots():
-            os.makedirs(root, exist_ok=True)
+            try:
+                os.makedirs(root, exist_ok=True)
+            except OSError as e:
+                # a dead volume must not kill the engine: the per-save
+                # health probe (partition.probe_volumes) will stripe
+                # around it and record it as degraded
+                import warnings
+                warnings.warn(f"checkpoint volume root {root} is "
+                              f"unavailable ({e}); saves will stripe "
+                              f"around it", stacklevel=2)
         if spec.clean_stale_staging:
             layout.clean_stale_multi(spec.directory, self.volume_roots())
         self._backend = get_backend_factory(spec.backend)(spec)
@@ -408,12 +445,24 @@ class CheckpointEngine:
         # primary staging dir; others get a generation-named shard dir —
         # aliased/duplicate secondary roots share ONE generation dir, so
         # a symlinked mount never double-publishes the same name
+        # volume health: a root that is gone/unwritable gets no staging
+        # dir — the checkpointer's plan-time probe then stripes around
+        # it (its staging path cannot be created) and the manifest
+        # records the degraded set
+        _, dead = probe_volumes(roots)
+        dead = set(dead)
         volume_staging, secondary = [], {}    # v → (staging, final)
         gen_by_root: Dict[str, tuple] = {}    # realpath(root) → (s, f)
         for v, vr in enumerate(roots):
             real = os.path.realpath(vr)
             if real == primary_real:
                 volume_staging.append(staging)
+                continue
+            if v in dead:
+                # hand the uncreatable path down: the probe below reads
+                # it as degraded; never publish/sweep on a dead root
+                volume_staging.append(os.path.join(
+                    vr, layout.shard_staging_dir_name(step, nonce)))
                 continue
             if real not in gen_by_root:
                 gen_by_root[real] = (
@@ -561,7 +610,10 @@ class CheckpointEngine:
         return None
 
     def load(self, step: Optional[int] = None, like=None,
-             verify: Optional[bool] = None, sharding=None):
+             verify: Optional[bool] = None, sharding=None,
+             parallel=None, owned_only: bool = False,
+             reader_rank: int = 0, n_readers: Optional[int] = None,
+             ownership=None):
         """Load a committed checkpoint (latest when ``step`` is None).
         Raises :class:`layout.TornCheckpointError` on an uncommitted or
         torn step — a half-written checkpoint is never silently loaded.
@@ -574,7 +626,24 @@ class CheckpointEngine:
         ``jax.sharding.Sharding`` (applied to every leaf) or a pytree of
         shardings matching the state — the hook for restoring onto a
         DIFFERENT mesh than the writer's (see ``repro.sharding.specs``).
-        """
+
+        ``parallel`` switches to the parallel restore pipeline (paper
+        §4.2 load-then-allgather, single-host form): an int (or
+        ``"auto"``) drives that many local reader workers, each reading
+        only its owned spans through the async read backends into one
+        shared arena buffer. NOTE the arena lifetime rule (DESIGN.md
+        §7): arrays from a parallel load are views into the engine's
+        read arena, valid until the next load — copy (``jnp.array``)
+        to retain. Backends without span support ignore ``parallel``.
+
+        ``owned_only=True`` returns this rank's
+        :class:`~repro.core.checkpointer.OwnedRead` instead of the full
+        state — the per-rank half of a genuinely distributed restore
+        (``reader_rank`` / ``n_readers`` / ``ownership`` as in
+        ``load_owned``)."""
+        if owned_only:
+            return self.load_owned(reader_rank, n_readers, step=step,
+                                   ownership=ownership, verify=verify)
         verify = self.spec.verify_on_load if verify is None else verify
         preverified = False
         if step is None:
@@ -591,12 +660,59 @@ class CheckpointEngine:
             marker = layout.verify_commit(d, deep=verify,
                                           volume_roots=self.volume_roots())
         reader = self._reader_for(marker.get("backend", self.spec.backend))
+        # only pass the parallel kwarg when actually requested: out-of-
+        # tree backends registered against the pre-restore-pipeline
+        # signature must keep working for plain loads
+        kw = {} if parallel is None else {"parallel": parallel}
         state, manifest = reader.read_payload_sharded(
             d, step, like=like, verify=verify, marker=marker,
-            volume_roots=self.volume_roots())
+            volume_roots=self.volume_roots(), **kw)
         if sharding is not None:
             state = _apply_sharding(state, sharding)
         return state, manifest
+
+    def load_owned(self, reader_rank: int, n_readers: Optional[int] = None,
+                   step: Optional[int] = None, ownership=None,
+                   verify: Optional[bool] = None):
+        """One DP rank's half of the distributed parallel restore: read
+        ONLY the spans ``reader_rank`` owns (``ownership=None`` →
+        balanced byte stripe; ``"zero1"`` → the ZeRO-1 projection from
+        ``repro.sharding.specs.zero1_ownership``; a dict → explicit).
+        ``n_readers`` defaults to the configured DP degree. Returns an
+        :class:`~repro.core.checkpointer.OwnedRead`; on a real DP group
+        each rank runs this, then one allgather
+        (``checkpointer.allgather_owned`` is the single-host stand-in)
+        rebuilds the stream."""
+        verify = self.spec.verify_on_load if verify is None else verify
+        if n_readers is None:
+            n_readers = max(1, self.spec.fp.topology.dp_degree)
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no committed checkpoint under {self.spec.directory}")
+        d = os.path.join(self.spec.directory, layout.step_dir_name(step))
+        marker = layout.verify_commit(d, deep=verify,
+                                      volume_roots=self.volume_roots())
+        reader = self._reader_for(marker.get("backend", self.spec.backend))
+        if not hasattr(reader, "read_owned"):
+            raise NotImplementedError(
+                f"backend {marker.get('backend')!r} has no owned-span "
+                f"read support")
+        return reader.read_owned(d, step, reader_rank, n_readers,
+                                 ownership=ownership, verify=verify,
+                                 marker=marker,
+                                 volume_roots=self.volume_roots())
+
+    def invalidate_arena(self):
+        """Buffer-donation hook (ROADMAP): drop the serialize arena's
+        cached layout when the trainer's ``donate_argnums`` reclaimed
+        the state's buffers or the state object was replaced (restore),
+        instead of relying on the structure key alone."""
+        self._backend.invalidate_arena()
+        for b in self._read_backends.values():
+            if b is not self._backend:
+                b.invalidate_arena()
 
     def load_tensor(self, name: str, step: Optional[int] = None):
         """Partial restore of one tensor by manifest name, reading only

@@ -60,7 +60,16 @@ def main():
                     help="disable the persistent serialize arena "
                          "(allocate fresh host buffers every save)")
     ap.add_argument("--restore", action="store_true")
+    ap.add_argument("--restore-readers", default="auto",
+                    help="parallel-restore reader workers: 'auto' sizes "
+                         "to the saved shard count, an integer forces "
+                         "that many, 'none' keeps the legacy "
+                         "single-reader load")
     args = ap.parse_args()
+    restore_readers = (None if args.restore_readers == "none"
+                       else args.restore_readers if
+                       args.restore_readers == "auto"
+                       else int(args.restore_readers))
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -73,6 +82,7 @@ def main():
             directory=args.ckpt_dir, every=args.every, mode=args.ckpt_mode,
             pipeline=args.pipeline, backend=args.backend,
             volumes=(args.volumes.split(",") if args.volumes else None),
+            restore_readers=restore_readers,
             fp=FastPersistConfig(
                 strategy=args.writers,
                 topology=Topology(dp_degree=args.dp, ranks_per_node=4),

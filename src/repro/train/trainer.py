@@ -46,6 +46,10 @@ class CheckpointPolicy:
     #: shard destination volume roots (one per SSD/mount); None = all
     #: shards under ``directory`` (see CheckpointSpec.volumes)
     volumes: Optional[list] = None
+    #: parallel-restore reader workers for ``Trainer.restore()``:
+    #: "auto" sizes to the saved shard count (capped by CPUs), an int
+    #: forces that many, None keeps the legacy single-reader load
+    restore_readers: Optional[object] = "auto"
 
     def backend_name(self) -> str:
         """Map the (legacy) mode/pipeline pair onto a registry key."""
@@ -103,20 +107,37 @@ class Trainer:
     def init_state(self, rng=None):
         rng = rng if rng is not None else jax.random.PRNGKey(self.cfg.seed)
         self.state = init_train_state(self.model, rng)
+        if self.engine is not None:
+            # fresh state object: same explicit arena-invalidation rule
+            # as restore() (buffers the arena's cached layout was built
+            # against may have been donated back to XLA already)
+            self.engine.invalidate_arena()
         return self.state
 
     def restore(self, step: Optional[int] = None) -> int:
         """Resume from the most recent committed checkpoint (any
-        backend — the COMMIT marker records which one wrote it).
-        Returns the step."""
+        backend — the COMMIT marker records which one wrote it), through
+        the PARALLEL restore pipeline (paper §4.2: N reader workers,
+        owned spans, async read backends — ``restore_readers`` in the
+        policy). Returns the step."""
         assert self.engine is not None, "no checkpoint engine configured"
         step = step if step is not None else self.engine.latest_step()
         if step is None:
             return 0
         if self.state is None:
             self.init_state()
-        restored, manifest = self.engine.load(step, like=self.state)
-        self.state = jax.tree.map(jax.numpy.asarray, restored)
+        readers = (self.cfg.checkpoint.restore_readers
+                   if self.cfg.checkpoint else None)
+        restored, manifest = self.engine.load(step, like=self.state,
+                                              parallel=readers)
+        # jnp.array COPIES: a parallel load returns views into the
+        # engine's read arena, which the next load would refill —
+        # the trainer's state must own its buffers (DESIGN.md §7)
+        self.state = jax.tree.map(jax.numpy.array, restored)
+        # donation hook: the state object was just replaced wholesale —
+        # invalidate the serialize arena's cached layout explicitly
+        # rather than trusting the structure key to notice
+        self.engine.invalidate_arena()
         extras = manifest.extras
         if "data" in extras:
             self.data = TokenStream.from_state(self.data.cfg, extras["data"])

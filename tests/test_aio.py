@@ -168,7 +168,7 @@ class _FakeQueue(aio._KernelQueueSubmitter):
     def submit(self, nbytes, offset):
         slot = self._acquire_slot()
         self._seq += 1
-        self._inflight[self._seq] = (slot, None, None, nbytes, offset)
+        self._track(self._seq, slot, None, None, nbytes, offset)
         return self._seq
 
     def _reap_events(self, min_nr):
