@@ -15,6 +15,7 @@ DRYRUN_DIR = "experiments/dryrun"
 PERF_WRITER_JSON = "experiments/perf_writer.json"
 FIG8_JSON = "experiments/fig8.json"
 FIG10_JSON = "experiments/fig10.json"
+FIG13_JSON = "experiments/fig13.json"
 
 
 def fmt(x, digits=3):
@@ -169,7 +170,26 @@ def ckpt_restore_table():
             print(f"| {k} | {fmt(sweep[k])} | {rel:.2f}x |")
 
 
+def ckpt_tiered_table():
+    """§Tiered durability: fig13 upload-overlap rows (object tier
+    behind local NVMe, DESIGN.md §8)."""
+    if not os.path.exists(FIG13_JSON):
+        return
+    with open(FIG13_JSON) as f:
+        fig13 = json.load(f)
+    print("\n### Tiered durability: upload overlap "
+          "(measured on this host)\n")
+    print("| fig13 metric | value |")
+    print("|---|---|")
+    for k in ("iter_local_ms", "iter_tiered_ms", "overhead_pct",
+              "overlap_pct", "upload_bytes", "hydrate_s",
+              "roundtrip_ok", "verdict"):
+        if k in fig13:
+            print(f"| {k} | {fig13[k]} |")
+
+
 if __name__ == "__main__":
     main()
     ckpt_write_tables()
     ckpt_restore_table()
+    ckpt_tiered_table()

@@ -18,5 +18,8 @@ from repro.core.partition import (Extent, Topology, WritePlan, make_plan,
 from repro.core.pipeline import PipelinedCheckpointer, PipelineStats
 from repro.core.serializer import (ByteStreamView, Manifest, TensorRecord,
                                    deserialize, serialize)
+from repro.core.upload import (LocalObjectStore, ObjectStore, UploadManager,
+                               UploadStats, hydrate, make_store,
+                               register_store_scheme, remote_steps)
 from repro.core.writer import WriteStats, WriterConfig, aligned_buffer, \
     write_stream

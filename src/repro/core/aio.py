@@ -1,5 +1,7 @@
 """Async I/O submission backends for the NVMe read/write paths (paper
-§4.1 writes, §4.2 load-then-allgather reads).
+§4.1 writes, §4.2 load-then-allgather reads; DESIGN.md §6 — the
+submission layer under ``writer.write_stream`` and
+``reader.read_stream``).
 
 The paper's write engine submits pinned staging buffers to the SSD with
 libaio so multiple writes are in flight per writer (deep NVMe queues);

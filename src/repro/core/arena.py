@@ -1,5 +1,6 @@
-"""Persistent staging arena for checkpoint serialization (paper §4.1/§4.3,
-DataStates-LLM's lazy reusable pinned buffers).
+"""Persistent staging arena for checkpoint serialization (paper
+§4.1/§4.3, DataStates-LLM's lazy reusable pinned buffers; DESIGN.md §6,
+plus the §7 read-staging rules).
 
 The naive serialize path re-allocates a fresh host copy of every tensor
 on every ``save()`` — per-leaf ``np.ascontiguousarray`` churn that the

@@ -23,6 +23,13 @@ three concerns the old classes fused —
     ``COMMIT`` marker seals the directory, and an atomic rename publishes
     it (see :mod:`repro.core.layout`). A writer killed at any instant
     never produces a loadable-looking torn checkpoint.
+
+Tiered durability (DESIGN.md §8): the ``fastpersist-tiered[-pipelined]``
+backends stream each committed generation to an object store AFTER the
+local rename (``CheckpointSpec.upload_store``); ``SaveHandle.wait()``
+is then the local durability point and ``SaveHandle.wait_uploaded()``
+the remote one, and ``engine.load(tier="remote")`` restores through the
+store when the local tier is missing or corrupted.
 """
 from __future__ import annotations
 
@@ -58,13 +65,28 @@ class CheckpointSpec:
     #: None/empty → shards live in ``directory`` (single-volume layout).
     #: The manifest + global COMMIT always live under ``directory``.
     volumes: Optional[Sequence[str]] = None
+    #: second durability tier (DESIGN.md §8): object-store spec for the
+    #: ``fastpersist-tiered`` backends — a path / ``file://`` URL (the
+    #: mock bucket), a registered ``scheme://`` URL, or an
+    #: :class:`repro.core.upload.ObjectStore` instance. Also enables
+    #: ``engine.load(tier="remote")`` hydration for any backend.
+    upload_store: Optional[object] = None
+    #: per-object upload retry budget for the tiered backends
+    upload_max_retries: int = 2
 
 
 # ================================================================== handle
 class SaveHandle:
     """Future for one checkpoint save. Sync backends hand back handles
     that are already done; async backends complete them from the helper
-    thread. ``wait``/``result`` re-raise the save's exception."""
+    thread. ``wait``/``result`` re-raise the save's exception.
+
+    Tiered backends (DESIGN.md §8) additionally carry the save's upload
+    future: ``wait()`` is the LOCAL durability point (crash-atomic
+    commit on NVMe), :meth:`wait_uploaded` the REMOTE one (COMMIT
+    object in the store). For backends without an upload tier,
+    ``wait_uploaded`` degrades to ``wait`` and returns None.
+    """
 
     def __init__(self, step: int, backend: str):
         self.step = step
@@ -72,6 +94,7 @@ class SaveHandle:
         self._done = threading.Event()
         self._stats: Optional[SaveStats] = None
         self._exc: Optional[BaseException] = None
+        self._upload = None          # UploadTicket, attached pre-finish
 
     @classmethod
     def completed(cls, step: int, backend: str,
@@ -89,6 +112,18 @@ class SaveHandle:
         return self._done.is_set()
 
     def wait(self, timeout: Optional[float] = None) -> SaveStats:
+        """Block until the LOCAL commit completed.
+
+        Args:
+            timeout: seconds to wait (None = forever).
+
+        Returns:
+            the save's unified :class:`SaveStats`.
+
+        Raises:
+            TimeoutError: still in flight after ``timeout``.
+            BaseException: the save's own failure, re-raised.
+        """
         if not self._done.wait(timeout):
             raise TimeoutError(f"save of step {self.step} still in flight")
         if self._exc is not None:
@@ -96,6 +131,44 @@ class SaveHandle:
         return self._stats
 
     result = wait
+
+    def _attach_upload(self, ticket):
+        # called by the engine AFTER the local commit and BEFORE this
+        # handle is finished, so wait() → wait_uploaded() never races
+        self._upload = ticket
+
+    def uploaded(self) -> bool:
+        """True once the remote COMMIT landed (or there is no upload
+        tier and the local save is done). A FAILED upload is not
+        "uploaded" — its step has no observable remote generation."""
+        if not self.done():
+            return False
+        if self._upload is None:
+            return True
+        return self._upload.done() and self._upload._exc is None
+
+    def wait_uploaded(self, timeout: Optional[float] = None):
+        """Block until this save is durable on the REMOTE tier.
+
+        Args:
+            timeout: seconds to wait (None = forever); ONE budget
+                covering the local wait and the upload together.
+
+        Returns:
+            the save's :class:`repro.core.upload.UploadStats`, or None
+            when the backend has no upload tier.
+
+        Raises:
+            TimeoutError: local save or upload still in flight.
+            BaseException: the save's or the upload's failure.
+        """
+        t0 = time.perf_counter()
+        self.wait(timeout)
+        if self._upload is None:
+            return None
+        remaining = (None if timeout is None else
+                     max(timeout - (time.perf_counter() - t0), 0.0))
+        return self._upload.wait(remaining)
 
     def exception(self, timeout: Optional[float] = None
                   ) -> Optional[BaseException]:
@@ -151,6 +224,15 @@ class CheckpointBackend:
         the trainer calls this when the state's buffers were reclaimed
         or replaced, instead of relying on the structure key alone).
         Default: nothing cached, nothing to drop."""
+
+    def after_commit(self, step: int, directory: str, marker: dict,
+                     stats: SaveStats):
+        """Post-publish hook, called by the engine AFTER the local
+        crash-atomic rename with the published ``directory`` and its
+        COMMIT ``marker``. Tiered backends enqueue the background
+        upload here and return the ``UploadTicket`` (attached to the
+        SaveHandle); the default returns None — no second tier."""
+        return None
 
     def close(self):
         pass
@@ -209,6 +291,44 @@ class PipelinedFastPersistBackend(FastPersistBackend):
     async_save = True
 
 
+class TieredFastPersistBackend(FastPersistBackend):
+    """Tiered durability (DESIGN.md §8): the fastpersist local write
+    path, plus an :class:`repro.core.upload.UploadManager` background
+    worker that streams each committed generation to the spec's
+    ``upload_store`` AFTER the local COMMIT rename — local NVMe for
+    speed, the object tier for durability, hot path untouched."""
+
+    def __init__(self, spec: CheckpointSpec):
+        super().__init__(spec)
+        if spec.upload_store is None:
+            raise ValueError(
+                f"backend {spec.backend!r} needs CheckpointSpec."
+                f"upload_store (a path, file:// / registered scheme:// "
+                f"URL, or an ObjectStore instance)")
+        from repro.core.upload import UploadManager
+        roots = [os.path.abspath(v)
+                 for v in (spec.volumes or [spec.directory])]
+        self.uploader = UploadManager(spec.upload_store,
+                                      volume_roots=roots,
+                                      max_retries=spec.upload_max_retries)
+
+    def after_commit(self, step, directory, marker, stats):
+        return self.uploader.enqueue(step, directory, marker)
+
+    def close(self):
+        try:
+            self.uploader.close(drain=True)
+        finally:
+            super().close()
+
+
+class TieredPipelinedFastPersistBackend(TieredFastPersistBackend):
+    """Tiered durability on top of the §4.3 pipelined local write: the
+    engine's helper thread persists+commits locally off the critical
+    path, then hands the sealed generation to the upload worker."""
+    async_save = True
+
+
 class BaselineBackend(CheckpointBackend):
     """torch.save()-style single buffered writer (paper §3.1)."""
 
@@ -245,7 +365,16 @@ def register_backend(name: str,
                      overwrite: bool = False):
     """Register a checkpoint backend under a string key. Third-party
     strategies plug in here and immediately work with Trainer,
-    RetentionManager, benchmarks, and the CLI."""
+    RetentionManager, benchmarks, and the CLI.
+
+    Args:
+        name: registry key; what ``CheckpointSpec.backend``, the
+            launcher's ``--backend``, and COMMIT markers refer to.
+        factory: called with the engine's :class:`CheckpointSpec`,
+            returns a :class:`CheckpointBackend`.
+        overwrite: replace an existing registration instead of raising
+            ``ValueError``.
+    """
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"backend {name!r} already registered "
                          f"(pass overwrite=True to replace)")
@@ -272,6 +401,9 @@ def get_backend_factory(name: str
 register_backend("baseline", BaselineBackend)
 register_backend("fastpersist", FastPersistBackend)
 register_backend("fastpersist-pipelined", PipelinedFastPersistBackend)
+register_backend("fastpersist-tiered", TieredFastPersistBackend)
+register_backend("fastpersist-tiered-pipelined",
+                 TieredPipelinedFastPersistBackend)
 
 
 # ================================================================== worker
@@ -315,6 +447,7 @@ class EngineStats:
     bytes_written: int = 0
     arena_reuses: int = 0             # saves that refilled a cached arena
     #                                   in place (zero-alloc steady state)
+    uploads_enqueued: int = 0         # commits handed to the upload tier
 
 
 class CheckpointEngine:
@@ -340,6 +473,7 @@ class CheckpointEngine:
         self._backend = get_backend_factory(spec.backend)(spec)
         self._read_backends: Dict[str, CheckpointBackend] = {
             spec.backend: self._backend}
+        self._remote_store = None       # lazy, for non-tiered backends
         self._worker: Optional[_SaveWorker] = None   # started lazily
         self._inflight: List[SaveHandle] = []
         self._deferred_exc: Optional[BaseException] = None
@@ -369,7 +503,8 @@ class CheckpointEngine:
         errors raise immediately), for async backends it completes when
         the helper thread commits."""
         handle = SaveHandle(step, self.spec.backend)
-        job = lambda: self._save_committed(state, step, extras)  # noqa: E731
+        job = lambda: self._save_committed(state, step, extras,  # noqa: E731
+                                           handle)
         self.stats.submitted += 1
         if self._backend.async_save:
             if self._worker is None:
@@ -427,8 +562,8 @@ class CheckpointEngine:
             pending[0]._done.wait()
         self.stats.stall_seconds += time.perf_counter() - t0
 
-    def _save_committed(self, state, step: int,
-                        extras: Optional[dict]) -> SaveStats:
+    def _save_committed(self, state, step: int, extras: Optional[dict],
+                        handle: Optional[SaveHandle] = None) -> SaveStats:
         """The crash-atomic sharded save: stage on every volume → publish
         secondary shard dirs (fresh generation names, invisible until
         referenced) → seal (global COMMIT) → publish the primary
@@ -510,7 +645,7 @@ class CheckpointEngine:
             volume_dirs = {str(v): os.path.basename(f)
                            for v, (s, f) in sorted(secondary.items())
                            if s in live_staging}
-            layout.write_commit_marker(
+            marker = layout.write_commit_marker(
                 staging, step, self.spec.backend,
                 fsync=self.spec.fsync_commit,
                 shards=getattr(stats, "shards", None),
@@ -544,6 +679,15 @@ class CheckpointEngine:
         self.stats.bytes_written += stats.total_bytes
         if getattr(stats, "arena_reused", False):
             self.stats.arena_reuses += 1
+        # second durability tier (DESIGN.md §8): the local commit point
+        # is behind us — hand the sealed generation to the backend's
+        # background uploader; the ticket lands on the handle BEFORE it
+        # finishes, so wait() → wait_uploaded() never races
+        ticket = self._backend.after_commit(step, final, marker, stats)
+        if ticket is not None:
+            self.stats.uploads_enqueued += 1
+            if handle is not None:
+                handle._attach_upload(ticket)
         return stats
 
     # ---------------------------------------------------------------- sync
@@ -613,7 +757,7 @@ class CheckpointEngine:
              verify: Optional[bool] = None, sharding=None,
              parallel=None, owned_only: bool = False,
              reader_rank: int = 0, n_readers: Optional[int] = None,
-             ownership=None):
+             ownership=None, tier: str = "local"):
         """Load a committed checkpoint (latest when ``step`` is None).
         Raises :class:`layout.TornCheckpointError` on an uncommitted or
         torn step — a half-written checkpoint is never silently loaded.
@@ -621,6 +765,14 @@ class CheckpointEngine:
         where every shard lives, so an engine can read checkpoints
         written by a different backend, writer count, or volume layout
         (rank-elastic restore).
+
+        ``tier="remote"`` restores THROUGH the object tier (DESIGN.md
+        §8): the step (latest committed remote generation when None) is
+        first hydrated into the local directory —
+        missing/corrupted local shards are downloaded and CRC-verified
+        against the remote COMMIT manifest, intact local ones reused —
+        and then loaded through the normal (optionally parallel) local
+        path. Requires ``spec.upload_store`` or a tiered backend.
 
         ``sharding`` places the restored arrays onto devices: a single
         ``jax.sharding.Sharding`` (applied to every leaf) or a pytree of
@@ -641,6 +793,11 @@ class CheckpointEngine:
         state — the per-rank half of a genuinely distributed restore
         (``reader_rank`` / ``n_readers`` / ``ownership`` as in
         ``load_owned``)."""
+        if tier not in ("local", "remote"):
+            raise ValueError(f"tier must be 'local' or 'remote', "
+                             f"got {tier!r}")
+        if tier == "remote":
+            step = self.hydrate_remote(step)
         if owned_only:
             return self.load_owned(reader_rank, n_readers, step=step,
                                    ownership=ownership, verify=verify)
@@ -733,10 +890,83 @@ class CheckpointEngine:
         return reader.load_tensor(d, step, name, marker=marker,
                                   volume_roots=self.volume_roots())
 
+    # ---------------------------------------------------------- tiered
+    @property
+    def upload_manager(self):
+        """The tiered backend's :class:`repro.core.upload.UploadManager`
+        (None for backends without an upload tier)."""
+        return getattr(self._backend, "uploader", None)
+
+    @property
+    def remote_store(self):
+        """The resolved :class:`repro.core.upload.ObjectStore` of the
+        second tier — the tiered backend's own store, or one built from
+        ``spec.upload_store`` for non-tiered backends (so any engine
+        can *read* the remote tier); None when no store is configured."""
+        mgr = self.upload_manager
+        if mgr is not None:
+            return mgr.store
+        if self.spec.upload_store is None:
+            return None
+        if self._remote_store is None:
+            from repro.core.upload import make_store
+            self._remote_store = make_store(self.spec.upload_store)
+        return self._remote_store
+
+    def wait_uploaded(self):
+        """Block until every enqueued upload reached its remote COMMIT
+        (the remote-tier analogue of :meth:`wait`); re-raises the first
+        upload failure. Returns the drained uploads'
+        :class:`repro.core.upload.UploadStats` (empty for non-tiered
+        backends)."""
+        mgr = self.upload_manager
+        return mgr.drain() if mgr is not None else []
+
+    def remote_steps(self) -> List[int]:
+        """Steps with a committed generation in the object tier."""
+        store = self.remote_store
+        if store is None:
+            return []
+        from repro.core import upload
+        return upload.remote_steps(store)
+
+    def latest_remote_step(self) -> Optional[int]:
+        steps = self.remote_steps()
+        return steps[-1] if steps else None
+
+    def hydrate_remote(self, step: Optional[int] = None) -> int:
+        """Materialise a remote generation locally (download + CRC
+        verification + crash-atomic local re-commit; intact local shard
+        files are reused). Returns the hydrated step. ``load(tier=
+        "remote")`` calls this before the normal local load."""
+        store = self.remote_store
+        if store is None:
+            raise ValueError(
+                "load(tier='remote') needs an object store: set "
+                "CheckpointSpec.upload_store or use a fastpersist-tiered "
+                "backend")
+        from repro.core.upload import hydrate
+        return hydrate(store, self.spec.directory, step=step,
+                       io_config=self.spec.fp.writer,
+                       verify=self.spec.verify_on_load)
+
+    #: read-path aliases: these backends share the fastpersist on-disk
+    #: format, so loading THEIR checkpoints never needs their write-side
+    #: machinery (a tiered reader would demand an upload store; the
+    #: pipelined one would spin a pointless helper thread)
+    _READ_ALIASES = {
+        "fastpersist-pipelined": "fastpersist",
+        "fastpersist-tiered": "fastpersist",
+        "fastpersist-tiered-pipelined": "fastpersist",
+    }
+
     def _reader_for(self, backend_name: str) -> CheckpointBackend:
         if backend_name not in self._read_backends:
-            self._read_backends[backend_name] = \
-                get_backend_factory(backend_name)(self.spec)
+            alias = self._READ_ALIASES.get(backend_name, backend_name)
+            if alias not in self._read_backends:
+                self._read_backends[alias] = \
+                    get_backend_factory(alias)(self.spec)
+            self._read_backends[backend_name] = self._read_backends[alias]
         return self._read_backends[backend_name]
 
 

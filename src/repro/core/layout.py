@@ -477,6 +477,54 @@ def clean_stale_multi(primary_root: str,
     return removed
 
 
+def commit_files(directory: str, marker: Optional[dict] = None,
+                 volume_roots: Optional[Sequence[str]] = None
+                 ) -> List[dict]:
+    """Enumerate every payload file a committed checkpoint references,
+    across ALL volumes — the manifest-driven input to the upload tier
+    (DESIGN.md §8) and to anything else that must walk a whole step.
+
+    Args:
+        directory: the committed (or sealed staging) checkpoint dir.
+        marker: its parsed COMMIT marker; read from ``directory`` when
+            omitted (raises :class:`TornCheckpointError` if absent).
+        volume_roots: fallback roots for relocated volumes, as in
+            :func:`resolve_shard_dir`.
+
+    Returns:
+        ``[{"path", "name", "size", "volume", "crc32"?}, ...]`` —
+        primary-resident payload files first (``manifest.json``
+        included, ``COMMIT`` excluded), then shards striped onto other
+        volumes. Shard entries carry the layout-v2 ``crc32`` when the
+        writer recorded one; a shard resident in the primary directory
+        is listed exactly once (with its CRC attached).
+    """
+    if marker is None:
+        marker = verify_commit(directory, deep=False)
+    crc_by_name = {sh["name"]: sh.get("crc32")
+                   for sh in marker.get("shards", [])}
+    out, seen = [], set()
+    for name, size in sorted((marker.get("files") or {}).items()):
+        entry = {"path": os.path.join(directory, name), "name": name,
+                 "size": int(size), "volume": 0}
+        if crc_by_name.get(name) is not None:
+            entry["crc32"] = crc_by_name[name]
+        out.append(entry)
+        seen.add(name)
+    for sh in marker.get("shards", []):
+        if sh["name"] in seen:
+            continue
+        seen.add(sh["name"])
+        d = resolve_shard_dir(marker, directory, int(sh.get("volume", 0)),
+                              volume_roots)
+        entry = {"path": os.path.join(d, sh["name"]), "name": sh["name"],
+                 "size": int(sh["size"]), "volume": int(sh.get("volume", 0))}
+        if sh.get("crc32") is not None:
+            entry["crc32"] = sh["crc32"]
+        out.append(entry)
+    return out
+
+
 def delete_step(primary_root: str, step: int,
                 volume_roots: Optional[Sequence[str]] = None) -> None:
     """Delete one checkpoint step across ALL volumes (GC path). The

@@ -1,4 +1,5 @@
-"""DP-parallel checkpoint read/write planning (paper §4.2).
+"""DP-parallel checkpoint read/write planning (paper §4.2; DESIGN.md
+§5 for write plans and volume striping, §7 for read plans).
 
 The serialized checkpoint byte stream is partitioned at BYTE granularity
 (imbalance ≤ 1 byte) across a selected subset of DP ranks. The plan is
@@ -257,7 +258,26 @@ def make_plan(total_bytes: int, topo: Topology, strategy: str = "replica",
     their shards land on the survivors — and recorded in
     ``plan.degraded``; when nothing survives the probe, the plan falls
     back to the full volume set (the write will then fail loudly at
-    the filesystem, which beats silently writing nowhere)."""
+    the filesystem, which beats silently writing nowhere).
+
+    Args:
+        total_bytes: length of the serialized checkpoint stream.
+        topo: the DP group + I/O hardware layout.
+        strategy: writer-subset selection — ``"replica"`` (every DP
+            rank), ``"socket"`` (``writers_per_node`` per node), or
+            ``"auto"`` (bandwidth-model pick).
+        writers_per_node: writer count per node for ``"socket"``.
+        n_volumes: stripe the shards round-robin over this many
+            destination volumes (ignored when ``volume_roots`` given).
+        volume_roots: probe these destinations at plan time.
+        healthy_volumes: pre-probed surviving volume indices.
+        min_free_bytes: extra free-space headroom the probe demands.
+
+    Returns:
+        a :class:`WritePlan` — one :class:`Extent` per writer with its
+        ``(rank, offset, length, shard_index, volume)``, plus the
+        recorded ``degraded`` volume set.
+    """
     writers = select_writers(topo, strategy, writers_per_node, total_bytes)
     n = len(writers)
     if volume_roots is not None and healthy_volumes is None:
@@ -443,7 +463,22 @@ def make_read_plan(saved_plan, index: Optional[dict], n_readers: int,
       (the manifest's global tensor → span index; layout-v1 checkpoints
       have none — use striping); tensors ABSENT from the dict are
       balanced-striped across all readers so the plan still covers the
-      full stream."""
+      full stream.
+
+    Args:
+        saved_plan: the manifest's SAVED write plan (``meta["plan"]``
+            dict or a :class:`WritePlan`).
+        index: the manifest's global tensor → ``[shard, offset,
+            length]`` span index (required for ownership plans).
+        n_readers: reader ranks to carve the stream across.
+        ownership: None for balanced striping, or a per-tensor
+            ownership dict as described above.
+
+    Returns:
+        a :class:`ReadPlan` whose :class:`ReadSpan`s are sorted by
+        ``(reader, stream_offset)``; ``spans_of(rank)`` gives one
+        rank's reads, ``covered_bytes`` what the union claims.
+    """
     assert n_readers >= 1, "need at least one reader"
     exts = _plan_extents(saved_plan)
     ends = [int(e["offset"]) + int(e["length"]) for e in exts]

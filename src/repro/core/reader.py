@@ -1,4 +1,6 @@
-"""Parallel restore read engine (paper §4.2's load-then-allgather).
+"""Parallel restore read engine (paper §4.2's load-then-allgather;
+DESIGN.md §7 — the span-read + CRC-combine half of the restore
+pipeline, also reused by the §8 hydration path's integrity checks).
 
 The write path streams byte extents to shard files with ``queue_depth``
 writes in flight (:mod:`repro.core.writer`); this module is its twin

@@ -1,4 +1,5 @@
-"""Checkpoint retention policy + garbage collection.
+"""Checkpoint retention policy + garbage collection (DESIGN.md §8 for
+the tiered interaction).
 
 Per-iteration checkpointing (the paper's headline capability) writes one
 checkpoint per step — untenable to KEEP them all (S_C × steps). The
@@ -9,12 +10,19 @@ it never blocks training (same decoupling argument as §4.3).
 Crash safety: a checkpoint directory is only eligible for deletion if a
 NEWER one is fully committed (manifest present), so an interruption
 mid-GC always leaves a loadable checkpoint.
+
+Tiered durability (upload-pinning rule): with an object tier behind the
+local NVMe, local retention may keep FEWER steps than the remote tier —
+but a step whose upload has not reached its remote COMMIT (queued, in
+flight, or failed) is PINNED: local GC must never delete what may be
+the only durable copy. ``remote_keep_last`` independently bounds the
+remote tier (0 = keep every uploaded step).
 """
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import Iterable, List, Optional, Sequence
 
 from repro.core import layout
 
@@ -23,6 +31,11 @@ from repro.core import layout
 class RetentionPolicy:
     keep_last: int = 2            # rolling window of most recent ckpts
     keep_every: int = 0           # every Nth step is permanent (0 = none)
+    #: remote-tier retention (tiered backends): keep this many
+    #: most-recent STEPS in the object store, 0 = keep every uploaded
+    #: generation. Typically >= keep_last — short local NVMe window,
+    #: long remote history.
+    remote_keep_last: int = 0
 
 
 def _committed_steps(directory: str) -> List[int]:
@@ -31,44 +44,68 @@ def _committed_steps(directory: str) -> List[int]:
     return layout.committed_steps(directory, legacy_ok=True)
 
 
-def collectable(directory: str, policy: RetentionPolicy) -> List[int]:
-    """Steps whose checkpoints may be deleted under ``policy``."""
+def collectable(directory: str, policy: RetentionPolicy,
+                pinned: Iterable[int] = ()) -> List[int]:
+    """Steps whose checkpoints may be deleted under ``policy``.
+
+    ``pinned`` steps are never collectable regardless of the policy —
+    the upload tier pins every step whose remote COMMIT has not landed
+    (deleting it locally could destroy the only durable copy)."""
     steps = _committed_steps(directory)
     if not steps:
         return []
     keep = set(steps[-max(policy.keep_last, 1):])
     if policy.keep_every:
         keep |= {s for s in steps if s % policy.keep_every == 0}
+    keep |= set(pinned)
     return [s for s in steps if s not in keep]
 
 
 def collect(directory: str, policy: RetentionPolicy,
-            volume_roots: Optional[Sequence[str]] = None) -> List[int]:
+            volume_roots: Optional[Sequence[str]] = None,
+            pinned: Iterable[int] = ()) -> List[int]:
     """Delete collectable checkpoints — a step is removed across ALL
     volumes its COMMIT references (primary dir first, so the step is
     un-committed atomically; a crash mid-delete strands only
     unreferenced shard dirs, which the engine's startup sweep removes).
-    Returns the deleted steps."""
-    victims = collectable(directory, policy)
+    ``pinned`` steps are skipped (see :func:`collectable`). Returns the
+    deleted steps."""
+    victims = collectable(directory, policy, pinned=pinned)
     for s in victims:
         layout.delete_step(directory, s, volume_roots)
     return victims
 
 
 class RetentionManager:
-    """Runs GC off the critical path after each commit."""
+    """Runs GC off the critical path after each commit.
+
+    With ``upload`` (an :class:`repro.core.upload.UploadManager`), the
+    manager enforces the tiered rules: steps still queued/failed on the
+    upload tier are pinned against local deletion, and
+    ``policy.remote_keep_last`` prunes old remote generations after
+    each local sweep."""
 
     def __init__(self, directory: str, policy: RetentionPolicy,
-                 volume_roots: Optional[Sequence[str]] = None):
+                 volume_roots: Optional[Sequence[str]] = None,
+                 upload=None):
         self.directory = directory
         self.policy = policy
         self.volume_roots = volume_roots
+        self.upload = upload
         self._lock = threading.Lock()
         self.deleted: List[int] = []
+        self.remote_deleted: List[int] = []
 
     def after_commit(self):
         """Call after a checkpoint commits (e.g. from the pipeline helper
-        or the trainer loop). Thread-safe, idempotent."""
+        or the trainer loop). Thread-safe, idempotent. Remote pruning is
+        only ENQUEUED here — it runs on the upload worker thread, so the
+        caller (the training loop) never blocks on WAN lists/deletes."""
         with self._lock:
+            pinned = (self.upload.unuploaded_steps()
+                      if self.upload is not None else ())
             self.deleted += collect(self.directory, self.policy,
-                                    self.volume_roots)
+                                    self.volume_roots, pinned=pinned)
+            if self.upload is not None and self.policy.remote_keep_last:
+                self.upload.enqueue_prune(self.policy.remote_keep_last,
+                                          on_done=self.remote_deleted.extend)

@@ -1,0 +1,773 @@
+"""Tiered durability: streaming shard upload to object storage
+(DESIGN.md §8; after Check-N-Run's decoupled persist and
+DataStates-LLM's lazy asynchronous flush tier).
+
+Local NVMe gets checkpoints committed fast (the paper's thesis); this
+module adds the SECOND durability tier behind it: after the local
+crash-atomic COMMIT rename, an :class:`UploadManager` background
+worker streams every sealed shard file of the generation to an object
+store, then writes a remote ``COMMIT`` object — carrying the same
+per-shard ``(volume, size, crc32)`` manifest as the layout-v2 local
+marker — only after every shard has landed. The training hot path
+never waits on the wide-area tier:
+
+    spec   = CheckpointSpec(directory=..., backend="fastpersist-tiered",
+                            upload_store="/mnt/bucket")      # or s3://…
+    handle = engine.save(state, step)        # local commit, as before
+    handle.wait()                            # local durability point
+    handle.wait_uploaded()                   # remote durability point
+    state, m = engine.load(tier="remote")    # hydrate + restore
+
+Crash atomicity, remote side: a remote generation is OBSERVABLE only
+through its ``COMMIT`` object, which is uploaded strictly last — a
+crash (or lost worker) between the local and remote commits leaves
+only unreferenced payload objects that a retry overwrites in place.
+
+Idempotent retries: the remote generation id is DERIVED from the local
+COMMIT marker's content (not drawn fresh per attempt), reusing the
+generation-dir nonce naming of the local sharded layout
+(``ckpt_<step>.gen-<nonce>/``). Re-enqueueing the same committed step
+maps to the same keys, so objects that already landed (same key, same
+size) are skipped, never duplicated, and a half-uploaded generation
+heals instead of leaking a second copy.
+
+Restore hydration: :func:`hydrate` rebuilds a local checkpoint from a
+remote generation through the SAME local commit protocol (staging dir
+→ local COMMIT → atomic publish), verifying every downloaded shard
+against the remote manifest's CRC32 via the async span reader
+(:func:`repro.core.reader.read_stream`) and reusing local shard files
+that still verify, so only missing/corrupted bytes cross the wire.
+
+The :class:`ObjectStore` protocol ships with a local-filesystem "mock
+bucket" (:class:`LocalObjectStore`) for tests/CI; real stores (S3,
+GCS, ...) plug in via :func:`register_store_scheme` without touching
+the engine.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+import time
+import zlib
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core import layout
+
+#: remote marker object name; a generation without it is unobservable
+REMOTE_COMMIT = "COMMIT"
+
+_GEN_RE = re.compile(r"^ckpt_(\d+)\.gen-([0-9a-f]+)$")
+
+
+# ============================================================ ObjectStore
+class ObjectStore:
+    """Minimal object-store surface the upload tier needs. Keys are
+    ``/``-separated strings; ``put``/``put_file`` must be ATOMIC per
+    object (a reader never observes a torn object) and overwrite in
+    place — both are what real stores (S3/GCS) give you for free."""
+
+    def put(self, key: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def put_file(self, key: str, path: str) -> None:
+        """Upload one local file. Default reads it whole; stores with a
+        streaming/multipart path should override."""
+        with open(path, "rb") as f:
+            self.put(key, f.read())
+
+    def get(self, key: str) -> bytes:
+        raise NotImplementedError
+
+    def get_to(self, key: str, path: str) -> None:
+        """Download one object to a local path. Default materialises
+        via :meth:`get`; streaming stores should override."""
+        with open(path, "wb") as f:
+            f.write(self.get(key))
+
+    def exists(self, key: str) -> bool:
+        raise NotImplementedError
+
+    def size(self, key: str) -> Optional[int]:
+        """Object size in bytes, or None when absent."""
+        raise NotImplementedError
+
+    def list(self, prefix: str = "") -> List[str]:
+        """Sorted keys under ``prefix``."""
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+
+class LocalObjectStore(ObjectStore):
+    """Filesystem-backed mock bucket (tests/CI, or an NFS/second-mount
+    tier in anger). One file per object under ``root``; puts stage to a
+    dot-tmp name and ``os.replace`` into place, so a killed uploader
+    never leaves a torn but visible object — the same publish rule as
+    the local checkpoint layout."""
+
+    def __init__(self, root: str):
+        self.root = os.path.abspath(root)
+        os.makedirs(self.root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        p = os.path.normpath(os.path.join(self.root, key))
+        if not p.startswith(self.root + os.sep):
+            raise ValueError(f"object key escapes the bucket: {key!r}")
+        return p
+
+    def _publish(self, tmp: str, final: str):
+        os.replace(tmp, final)
+
+    def put(self, key: str, data: bytes) -> None:
+        final = self._path(key)
+        os.makedirs(os.path.dirname(final), exist_ok=True)
+        tmp = final + f".tmp-{os.getpid()}-{threading.get_ident()}"
+        try:
+            with open(tmp, "wb") as f:
+                f.write(data)
+            self._publish(tmp, final)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    def put_file(self, key: str, path: str) -> None:
+        final = self._path(key)
+        os.makedirs(os.path.dirname(final), exist_ok=True)
+        tmp = final + f".tmp-{os.getpid()}-{threading.get_ident()}"
+        try:
+            shutil.copyfile(path, tmp)
+            self._publish(tmp, final)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    def get(self, key: str) -> bytes:
+        with open(self._path(key), "rb") as f:
+            return f.read()
+
+    def get_to(self, key: str, path: str) -> None:
+        shutil.copyfile(self._path(key), path)
+
+    def exists(self, key: str) -> bool:
+        return os.path.isfile(self._path(key))
+
+    def size(self, key: str) -> Optional[int]:
+        try:
+            return os.path.getsize(self._path(key))
+        except OSError:
+            return None
+
+    def list(self, prefix: str = "") -> List[str]:
+        out = []
+        for dirpath, _dirs, names in os.walk(self.root):
+            for n in names:
+                rel = os.path.relpath(os.path.join(dirpath, n), self.root)
+                key = rel.replace(os.sep, "/")
+                if key.startswith(prefix) and ".tmp-" not in key:
+                    out.append(key)
+        return sorted(out)
+
+    def delete(self, key: str) -> None:
+        try:
+            os.unlink(self._path(key))
+        except FileNotFoundError:
+            pass
+
+
+_STORE_SCHEMES: Dict[str, Callable[[str], ObjectStore]] = {}
+
+
+def register_store_scheme(scheme: str,
+                          factory: Callable[[str], ObjectStore],
+                          overwrite: bool = False):
+    """Plug a real object store in under a URL scheme.
+
+    Args:
+        scheme: the URL scheme (``"s3"``, ``"gs"``, ...), matched
+            against ``<scheme>://...`` specs in :func:`make_store`.
+        factory: called with the FULL spec string, returns an
+            :class:`ObjectStore`.
+        overwrite: replace an existing registration instead of raising.
+    """
+    if scheme in _STORE_SCHEMES and not overwrite:
+        raise ValueError(f"store scheme {scheme!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    _STORE_SCHEMES[scheme] = factory
+
+
+def make_store(spec: Union[str, ObjectStore]) -> ObjectStore:
+    """Resolve a store spec: an :class:`ObjectStore` passes through; a
+    ``file://`` URL or a plain path builds a :class:`LocalObjectStore`;
+    any other ``scheme://`` dispatches to :func:`register_store_scheme`
+    registrations and raises a descriptive error when none matches."""
+    if isinstance(spec, ObjectStore):
+        return spec
+    if not isinstance(spec, str):
+        raise TypeError(f"upload store spec must be a path/URL or an "
+                        f"ObjectStore, got {type(spec).__name__}")
+    if "://" in spec:
+        scheme = spec.split("://", 1)[0]
+        if scheme == "file":
+            return LocalObjectStore(spec.split("://", 1)[1])
+        if scheme in _STORE_SCHEMES:
+            return _STORE_SCHEMES[scheme](spec)
+        raise KeyError(
+            f"no object store registered for scheme {scheme!r} "
+            f"(register one with repro.core.upload.register_store_scheme; "
+            f"known: file, {', '.join(sorted(_STORE_SCHEMES)) or '<none>'})")
+    return LocalObjectStore(spec)
+
+
+# ======================================================== remote layout
+def remote_generation(marker: dict) -> str:
+    """Deterministic generation nonce for one LOCAL commit: the CRC32
+    of the canonicalised COMMIT marker. Deriving it from content (not
+    ``urandom``) is what makes retries idempotent — every re-upload of
+    the same committed generation maps to the same remote keys."""
+    blob = json.dumps(marker, sort_keys=True).encode()
+    return f"{zlib.crc32(blob) & 0xFFFFFFFF:08x}"
+
+
+def remote_prefix(step: int, generation: str) -> str:
+    """Key prefix of one remote generation — the object-store analogue
+    of the local ``ckpt_<step>.shards-<nonce>`` generation dirs."""
+    return f"{layout.step_dir_name(step)}.gen-{generation}"
+
+
+def parse_remote_prefix(prefix: str) -> Optional[Tuple[int, str]]:
+    """(step, generation) of a remote generation prefix, else None."""
+    m = _GEN_RE.match(prefix)
+    return (int(m.group(1)), m.group(2)) if m else None
+
+
+def remote_generations(store: ObjectStore,
+                       step: Optional[int] = None
+                       ) -> List[Tuple[int, str]]:
+    """COMMITTED remote generations, sorted by (step, generation).
+    Generations without a ``COMMIT`` object (uploader died mid-flight)
+    are invisible here — the remote analogue of
+    :func:`layout.committed_steps`."""
+    out = []
+    for key in store.list(""):
+        if not key.endswith("/" + REMOTE_COMMIT):
+            continue
+        parsed = parse_remote_prefix(key.rsplit("/", 1)[0])
+        if parsed is None:
+            continue
+        if step is None or parsed[0] == step:
+            out.append(parsed)
+    return sorted(out)
+
+
+def remote_steps(store: ObjectStore) -> List[int]:
+    """Sorted steps with at least one committed remote generation."""
+    return sorted({s for s, _ in remote_generations(store)})
+
+
+def read_remote_commit(store: ObjectStore, step: int,
+                       generation: str) -> dict:
+    """Parsed remote COMMIT object of one committed generation."""
+    raw = store.get(f"{remote_prefix(step, generation)}/{REMOTE_COMMIT}")
+    return json.loads(raw.decode())
+
+
+# ============================================================== manager
+@dataclass
+class UploadStats:
+    """Outcome of one generation's upload (``SaveHandle.wait_uploaded``
+    and ``UploadTicket.wait`` return this)."""
+    step: int
+    generation: str = ""
+    n_objects: int = 0          # payload objects this generation owns
+    n_uploaded: int = 0         # actually transferred this attempt
+    n_skipped: int = 0          # already present (idempotent retry)
+    bytes_uploaded: int = 0
+    retries: int = 0            # per-object retry attempts consumed
+    seconds: float = 0.0
+    committed: bool = False     # remote COMMIT written (observable)
+
+
+class UploadTicket:
+    """Future for one enqueued generation upload; completed by the
+    manager's worker thread. ``wait`` re-raises the upload's failure."""
+
+    def __init__(self, step: int):
+        self.step = step
+        self._done = threading.Event()
+        self._stats: Optional[UploadStats] = None
+        self._exc: Optional[BaseException] = None
+
+    def _finish(self, stats: Optional[UploadStats] = None,
+                exc: Optional[BaseException] = None):
+        self._stats, self._exc = stats, exc
+        self._done.set()
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> UploadStats:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"upload of step {self.step} still in "
+                               f"flight")
+        if self._exc is not None:
+            raise self._exc
+        return self._stats
+
+    result = wait
+
+    def exception(self, timeout: Optional[float] = None
+                  ) -> Optional[BaseException]:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"upload of step {self.step} still in "
+                               f"flight")
+        return self._exc
+
+    def __repr__(self):
+        st = "done" if self.done() else "pending"
+        return f"UploadTicket(step={self.step}, {st})"
+
+
+class UploadManager:
+    """Background worker streaming sealed generations to an object
+    store, strictly AFTER the local commit — the hot path never blocks
+    on the remote tier.
+
+    Queue lifecycle: ``enqueue`` is called with an already-committed
+    step directory and its marker; the single worker thread uploads
+    payload objects (skipping keys that already exist with the right
+    size — idempotent retry), then writes the remote ``COMMIT`` object
+    last. A step counts as "unuploaded" (pinned against local GC, see
+    :meth:`unuploaded_steps`) from enqueue until its remote COMMIT has
+    landed; failed uploads stay pinned so retention can never delete
+    the only copy of a step whose remote upload did not complete.
+    """
+
+    def __init__(self, store: Union[str, ObjectStore],
+                 volume_roots: Optional[Sequence[str]] = None,
+                 max_retries: int = 2, retry_backoff: float = 0.05):
+        self.store = make_store(store)
+        self.volume_roots = (list(volume_roots) if volume_roots else None)
+        self.max_retries = max_retries
+        self.retry_backoff = retry_backoff
+        self._q: "queue.Queue" = queue.Queue()
+        self._lock = threading.Lock()
+        self._pending: Dict[int, int] = {}   # step → enqueued-not-committed
+        self._failed: Dict[int, int] = {}    # step → failed attempts
+        self._tickets: List[UploadTicket] = []
+        self.total = UploadStats(step=-1)    # aggregate across uploads
+        self._t: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ submit
+    def enqueue(self, step: int, directory: str,
+                marker: Optional[dict] = None) -> UploadTicket:
+        """Queue one committed checkpoint for upload.
+
+        Args:
+            step: the checkpoint step.
+            directory: its PUBLISHED primary directory.
+            marker: the parsed local COMMIT marker; read from
+                ``directory`` when omitted.
+
+        Returns:
+            an :class:`UploadTicket`; ``wait()`` yields the
+            :class:`UploadStats` once the remote COMMIT has landed.
+        """
+        if marker is None:
+            marker = layout.verify_commit(directory, deep=False)
+        ticket = UploadTicket(step)
+        with self._lock:
+            self._pending[step] = self._pending.get(step, 0) + 1
+            self._tickets.append(ticket)
+            self._start_locked()
+        self._q.put(("upload", step, directory, marker, ticket))
+        return ticket
+
+    def enqueue_prune(self, keep_last: int, on_done=None) -> UploadTicket:
+        """Queue a remote-retention sweep (:meth:`prune_remote`) on the
+        worker thread — the training thread must never block on
+        full-bucket lists/deletes over the WAN. ``on_done`` (if given)
+        is called from the worker with the pruned step list. The
+        returned ticket's ``wait()`` yields that list."""
+        ticket = UploadTicket(step=-1)
+        with self._lock:
+            self._tickets.append(ticket)
+            self._start_locked()
+        self._q.put(("prune", keep_last, on_done, ticket))
+        return ticket
+
+    def _start_locked(self):
+        if self._t is None:
+            self._t = threading.Thread(target=self._run, daemon=True,
+                                       name="ckpt-upload-worker")
+            self._t.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            if item[0] == "prune":
+                _, keep_last, on_done, ticket = item
+                try:
+                    victims = self.prune_remote(keep_last)
+                    if on_done is not None:
+                        on_done(victims)
+                except BaseException as e:
+                    ticket._finish(exc=e)
+                else:
+                    ticket._finish(stats=victims)
+                continue
+            _, step, directory, marker, ticket = item
+            try:
+                stats = self._upload_one(step, directory, marker)
+            except BaseException as e:
+                with self._lock:
+                    self._consume_pending(step)
+                    # the step stays pinned through _failed until some
+                    # retry commits remotely — local GC must keep what
+                    # may be the only durable copy
+                    self._failed[step] = self._failed.get(step, 0) + 1
+                ticket._finish(exc=e)
+            else:
+                with self._lock:
+                    self._consume_pending(step)
+                    self._failed.pop(step, None)
+                ticket._finish(stats=stats)
+
+    def _consume_pending(self, step: int):
+        # caller holds self._lock
+        n = self._pending.get(step, 1) - 1
+        if n <= 0:
+            self._pending.pop(step, None)
+        else:
+            self._pending[step] = n
+
+    # ------------------------------------------------------------ upload
+    def _put_with_retry(self, key: str, path: str,
+                        stats: UploadStats) -> None:
+        attempt = 0
+        while True:
+            try:
+                self.store.put_file(key, path)
+                return
+            except Exception:
+                attempt += 1
+                stats.retries += 1
+                if attempt > self.max_retries:
+                    raise
+                time.sleep(self.retry_backoff * attempt)
+
+    def _upload_one(self, step: int, directory: str,
+                    marker: dict) -> UploadStats:
+        t0 = time.perf_counter()
+        gen = remote_generation(marker)
+        prefix = remote_prefix(step, gen)
+        files = layout.commit_files(directory, marker, self.volume_roots)
+        stats = UploadStats(step=step, generation=gen,
+                            n_objects=len(files))
+        commit_key = f"{prefix}/{REMOTE_COMMIT}"
+        if self.store.exists(commit_key):
+            # a previous attempt (or another uploader) already committed
+            # this exact generation — re-uploading would be pure waste
+            stats.n_skipped = len(files)
+            stats.committed = True
+            stats.seconds = time.perf_counter() - t0
+            self._fold(stats)
+            return stats
+        for f in files:
+            key = f"{prefix}/{f['name']}"
+            if self.store.size(key) == f["size"]:
+                stats.n_skipped += 1     # landed on an earlier attempt
+                continue
+            self._put_with_retry(key, f["path"], stats)
+            stats.n_uploaded += 1
+            stats.bytes_uploaded += f["size"]
+        # the remote commit point: observable only once every payload
+        # object above is durably in place. Carries the full per-shard
+        # (volume, size, crc32) manifest so hydration can verify every
+        # byte without the local copy.
+        remote_marker = dict(marker)
+        remote_marker["generation"] = gen
+        remote_marker["objects"] = {f["name"]: f["size"] for f in files}
+        remote_marker["object_crc32"] = {
+            f["name"]: f["crc32"] for f in files if "crc32" in f}
+        # recency record: the content-derived nonce is deliberately NOT
+        # ordered, so when a re-saved step leaves several committed
+        # generations, hydration picks the one committed last by this
+        # stamp (never rewritten on an idempotent re-run — the COMMIT
+        # short-circuit above keeps the first commit time)
+        remote_marker["uploaded_at"] = time.time()
+        self.store.put(commit_key,
+                       json.dumps(remote_marker, sort_keys=True).encode())
+        stats.committed = True
+        stats.seconds = time.perf_counter() - t0
+        self._fold(stats)
+        return stats
+
+    def _fold(self, s: UploadStats):
+        with self._lock:
+            t = self.total
+            t.n_objects += s.n_objects
+            t.n_uploaded += s.n_uploaded
+            t.n_skipped += s.n_skipped
+            t.bytes_uploaded += s.bytes_uploaded
+            t.retries += s.retries
+            t.seconds += s.seconds
+            t.step = max(t.step, s.step)
+
+    # ------------------------------------------------------------- query
+    def unuploaded_steps(self) -> List[int]:
+        """Steps enqueued (or failed) whose remote COMMIT has not
+        landed — the retention pin set: local GC must not delete these,
+        they may be the only durable copy."""
+        with self._lock:
+            return sorted({*self._pending, *self._failed})
+
+    def pending(self) -> int:
+        with self._lock:
+            return sum(self._pending.values())
+
+    # ------------------------------------------------------------- drain
+    def drain(self) -> List[UploadStats]:
+        """Block until every enqueued job finished; re-raises the
+        FIRST failure (after waiting for all). Returns the per-ticket
+        results of the successful ones (:class:`UploadStats` for
+        uploads, pruned step lists for queued prunes)."""
+        with self._lock:
+            tickets, self._tickets = self._tickets, []
+        out, err = [], None
+        for t in tickets:
+            t._done.wait()
+            if t._exc is not None:
+                err = err or t._exc
+            else:
+                out.append(t._stats)
+        if err is not None:
+            raise err
+        return out
+
+    def close(self, drain: bool = True):
+        """Stop the worker thread; ``drain`` first by default so no
+        queued generation is silently dropped."""
+        if drain:
+            try:
+                self.drain()
+            finally:
+                self._stop()
+        else:
+            self._stop()
+
+    def _stop(self):
+        with self._lock:
+            t, self._t = self._t, None
+        if t is not None:
+            self._q.put(None)
+            t.join()
+
+    # --------------------------------------------------------- remote GC
+    def prune_remote(self, keep_last: int) -> List[int]:
+        """Remote retention: delete all generations of every remote
+        step beyond the ``keep_last`` most recent. Steps still pinned
+        (enqueued/failed locally) are never pruned. The COMMIT object
+        is deleted FIRST — that atomically un-commits the remote
+        generation, so a crash mid-prune leaves only unreferenced
+        payload objects, mirroring :func:`layout.delete_step`."""
+        if keep_last <= 0:
+            return []
+        steps = remote_steps(self.store)
+        pinned = set(self.unuploaded_steps())
+        victims = [s for s in steps[:-keep_last] if s not in pinned]
+        for s in victims:
+            for st, gen in remote_generations(self.store, s):
+                prefix = remote_prefix(st, gen)
+                self.store.delete(f"{prefix}/{REMOTE_COMMIT}")
+                for key in self.store.list(prefix + "/"):
+                    self.store.delete(key)
+        return victims
+
+
+# ============================================================ hydration
+def hydrate(store: Union[str, ObjectStore], primary_root: str,
+            step: Optional[int] = None, generation: Optional[str] = None,
+            io_config=None, verify: bool = True) -> int:
+    """Rebuild a local checkpoint from a committed REMOTE generation —
+    the restore half of the tiered design (``engine.load(tier="remote")``
+    lands here).
+
+    The rebuild goes through the SAME local commit protocol as a save:
+    objects land in a ``ckpt_<step>.tmp`` staging dir, a fresh local
+    COMMIT seals it, and :func:`layout.publish` atomically replaces any
+    existing (possibly corrupted) local copy — a crash mid-hydration
+    leaves only ``.tmp`` debris. Every shard with a recorded CRC32 is
+    verified against the remote manifest via the async span reader
+    (:func:`repro.core.reader.read_stream` — same integrity machinery
+    as the parallel restore path); local shard files that already
+    verify are reused instead of re-downloaded, so hydration only moves
+    the bytes that are actually missing or corrupted.
+
+    All hydrated shards become primary-resident (the remote tier has no
+    volume topology), so the local marker is stamped with volume 0 for
+    every shard and no ``volume_dirs`` — readable by any layout
+    version's reader.
+
+    Args:
+        store: object store (spec string or instance).
+        primary_root: the engine's primary checkpoint directory.
+        step: remote step to hydrate; latest committed when None.
+        generation: specific remote generation; when None and several
+            committed generations of ``step`` exist, the
+            lexicographically last wins (any committed one is valid).
+        io_config: a :class:`repro.core.writer.WriterConfig` for the
+            CRC read-back (backend/queue-depth knobs); defaults used
+            when None.
+        verify: CRC-check downloaded AND reused shards (on by default;
+            size checks always happen).
+
+    Returns:
+        the hydrated step.
+
+    Raises:
+        FileNotFoundError: no committed remote generation matches.
+        IOError: a downloaded object fails its size or CRC check.
+    """
+    store = make_store(store)
+    gens = remote_generations(store, step)
+    if not gens:
+        raise FileNotFoundError(
+            f"no committed remote checkpoint generation"
+            f"{f' for step {step}' if step is not None else ''} in the "
+            f"object store")
+    if generation is not None:
+        matches = [(s, g) for s, g in gens if g == generation]
+        if not matches:
+            raise FileNotFoundError(
+                f"remote generation {generation!r} not found")
+        step, generation = matches[-1]
+        commit = read_remote_commit(store, step, generation)
+    else:
+        step = gens[-1][0]
+        # a re-saved step can leave SEVERAL committed generations (the
+        # content-derived nonces carry no order); the remote COMMIT's
+        # uploaded_at stamp records recency — pick the newest, never a
+        # superseded generation
+        best = None
+        for s, g in gens:
+            if s != step:
+                continue
+            c = read_remote_commit(store, s, g)
+            key = (c.get("uploaded_at", 0.0), g)
+            if best is None or key > best[0]:
+                best = (key, g, c)
+        generation, commit = best[1], best[2]
+    prefix = remote_prefix(step, generation)
+
+    os.makedirs(primary_root, exist_ok=True)
+    staging = os.path.join(primary_root, layout.staging_dir_name(step))
+    final = os.path.join(primary_root, layout.step_dir_name(step))
+    if os.path.exists(staging):
+        shutil.rmtree(staging)
+    os.makedirs(staging)
+
+    crc_by_name = commit.get("object_crc32") or {}
+    objects: Dict[str, int] = commit.get("objects") or {}
+    # where a pre-existing local copy of each object might live
+    local_candidates = _local_candidates(primary_root, final, commit)
+    try:
+        for name, size in sorted(objects.items()):
+            want_crc = crc_by_name.get(name)
+            dst = os.path.join(staging, name)
+            src = local_candidates.get(name)
+            if src is not None and _file_ok(src, size, want_crc,
+                                            io_config, verify):
+                shutil.copyfile(src, dst)     # local bytes still good
+                continue
+            store.get_to(f"{prefix}/{name}", dst)
+            actual = os.path.getsize(dst)
+            if actual != size:
+                raise IOError(
+                    f"remote object {name} is {actual} bytes, remote "
+                    f"COMMIT recorded {size} — torn upload")
+            if verify and want_crc is not None:
+                got = _file_crc32(dst, size, io_config)
+                if got != want_crc:
+                    raise IOError(
+                        f"checkpoint corruption: remote shard {name} "
+                        f"crc {got:#x} != remote COMMIT "
+                        f"{want_crc:#x} (hydration path)")
+        if verify and "manifest_crc32" in commit:
+            crc = layout.manifest_crc32(staging)
+            if crc != commit["manifest_crc32"]:
+                raise IOError(
+                    f"hydrated manifest crc {crc:#x} != remote COMMIT "
+                    f"{commit['manifest_crc32']:#x}")
+        shards = [{"name": sh["name"], "volume": 0, "size": sh["size"],
+                   **({"crc32": sh["crc32"]} if "crc32" in sh else {})}
+                  for sh in commit.get("shards", [])]
+        layout.write_commit_marker(
+            staging, step, commit.get("backend", "fastpersist"),
+            shards=shards or None)
+        layout.publish(staging, final)
+    except BaseException:
+        shutil.rmtree(staging, ignore_errors=True)
+        raise
+    return step
+
+
+def _local_candidates(primary_root: str, final: str,
+                      commit: dict) -> Dict[str, str]:
+    """{object name: local path} of possibly-reusable local files for a
+    step being hydrated — primary-dir payloads plus shards the LOCAL
+    marker (if any) striped onto other volumes."""
+    out: Dict[str, str] = {}
+    if not os.path.isdir(final):
+        return out
+    local_marker = layout.read_commit_marker(final)
+    for name in (commit.get("objects") or {}):
+        p = os.path.join(final, name)
+        if os.path.isfile(p):
+            out[name] = p
+    if local_marker is not None:
+        for sh in local_marker.get("shards", []):
+            d = layout.resolve_shard_dir(local_marker, final,
+                                         int(sh.get("volume", 0)))
+            p = os.path.join(d, sh["name"])
+            if sh["name"] not in out and os.path.isfile(p):
+                out[sh["name"]] = p
+    return out
+
+
+def _file_crc32(path: str, size: int, io_config=None) -> int:
+    """Whole-file CRC32 through the async span reader (one span, CRC
+    folded hot) — the same read path restores use, so a backend whose
+    reads are broken fails here too instead of 'verifying' garbage."""
+    if size == 0:
+        return 0
+    from repro.core.reader import read_stream
+    from repro.core.writer import WriterConfig
+    cfg = io_config or WriterConfig()
+    if not getattr(cfg, "checksum", False):
+        from dataclasses import replace
+        cfg = replace(cfg, checksum=True)
+    dest = memoryview(bytearray(size))
+    st = read_stream(path, [(0, 0, size)], dest, cfg)
+    return st.span_crcs[0]
+
+
+def _file_ok(path: str, size: int, crc: Optional[int],
+             io_config, verify: bool) -> bool:
+    """True when a local candidate file matches the remote manifest
+    (size always; CRC when recorded and ``verify``)."""
+    try:
+        if os.path.getsize(path) != size:
+            return False
+        if verify and crc is not None:
+            return _file_crc32(path, size, io_config) == crc
+        return True
+    except OSError:
+        return False

@@ -59,7 +59,20 @@ def main():
                     default=True,
                     help="disable the persistent serialize arena "
                          "(allocate fresh host buffers every save)")
+    ap.add_argument("--upload-store", default=None,
+                    help="object-store spec for the second durability "
+                         "tier (a directory path or file:// URL uses the "
+                         "built-in mock bucket; registered scheme:// URLs "
+                         "reach real stores). Selects the "
+                         "fastpersist-tiered backends: sealed shards "
+                         "stream to the store AFTER each local commit, "
+                         "and --restore falls back to the store when the "
+                         "local checkpoint directory is empty/lost")
     ap.add_argument("--restore", action="store_true")
+    ap.add_argument("--restore-tier", default="local",
+                    choices=["local", "remote"],
+                    help="force --restore to hydrate from the object "
+                         "store (remote) instead of local NVMe")
     ap.add_argument("--restore-readers", default="auto",
                     help="parallel-restore reader workers: 'auto' sizes "
                          "to the saved shard count, an integer forces "
@@ -83,6 +96,7 @@ def main():
             pipeline=args.pipeline, backend=args.backend,
             volumes=(args.volumes.split(",") if args.volumes else None),
             restore_readers=restore_readers,
+            upload=args.upload_store,
             fp=FastPersistConfig(
                 strategy=args.writers,
                 topology=Topology(dp_degree=args.dp, ranks_per_node=4),
@@ -99,7 +113,7 @@ def main():
     if args.restore and ckpt:
         # restores from any backend's COMMIT-marked checkpoints (legacy
         # pre-engine directories need the old classes — DESIGN.md §4)
-        start = tr.restore()
+        start = tr.restore(tier=args.restore_tier)
         print(f"restored from step {start}")
     state, metrics = tr.run(start_step=start)
     import numpy as np

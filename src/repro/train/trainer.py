@@ -50,12 +50,22 @@ class CheckpointPolicy:
     #: "auto" sizes to the saved shard count (capped by CPUs), an int
     #: forces that many, None keeps the legacy single-reader load
     restore_readers: Optional[object] = "auto"
+    #: second durability tier (DESIGN.md §8): object-store spec (path /
+    #: ``file://`` / registered ``scheme://`` URL / ObjectStore). When
+    #: set with mode="fastpersist", the engine runs a tiered backend:
+    #: sealed generations stream to the store after each local commit,
+    #: and ``Trainer.restore`` can hydrate from it (``tier="remote"``,
+    #: or automatically when the local directory is empty/lost).
+    upload: Optional[object] = None
 
     def backend_name(self) -> str:
         """Map the (legacy) mode/pipeline pair onto a registry key."""
         if self.backend is not None:
             return self.backend
         if self.mode == "fastpersist":
+            if self.upload is not None:
+                return ("fastpersist-tiered-pipelined" if self.pipeline
+                        else "fastpersist-tiered")
             return "fastpersist-pipelined" if self.pipeline else "fastpersist"
         return self.mode                # "baseline" or any registered key
 
@@ -96,11 +106,14 @@ class Trainer:
     def _setup_checkpointer(self, pol: CheckpointPolicy):
         self.engine = CheckpointEngine(CheckpointSpec(
             directory=pol.directory, backend=pol.backend_name(), fp=pol.fp,
-            volumes=pol.volumes))
+            volumes=pol.volumes, upload_store=pol.upload))
         # GC must follow the same volume mapping the engine writes with,
-        # or deleting a step would strand its striped shards
+        # or deleting a step would strand its striped shards; with an
+        # upload tier it must also see the upload queue, so it never
+        # deletes a step whose remote COMMIT has not landed (DESIGN §8)
         self._retain = (RetentionManager(pol.directory, pol.retention,
-                                         self.engine.volume_roots())
+                                         self.engine.volume_roots(),
+                                         upload=self.engine.upload_manager)
                         if pol.retention else None)
 
     # ------------------------------------------------------------ state
@@ -114,22 +127,47 @@ class Trainer:
             self.engine.invalidate_arena()
         return self.state
 
-    def restore(self, step: Optional[int] = None) -> int:
+    def restore(self, step: Optional[int] = None,
+                tier: str = "local") -> int:
         """Resume from the most recent committed checkpoint (any
         backend — the COMMIT marker records which one wrote it), through
         the PARALLEL restore pipeline (paper §4.2: N reader workers,
         owned spans, async read backends — ``restore_readers`` in the
-        policy). Returns the step."""
+        policy). Returns the step.
+
+        ``tier="remote"`` forces hydration from the object tier; with
+        the default ``"local"``, a trainer whose local directory holds
+        no committed step but whose policy has an upload store falls
+        back to the remote tier automatically (the lost-node recovery
+        path — DESIGN.md §8)."""
         assert self.engine is not None, "no checkpoint engine configured"
-        step = step if step is not None else self.engine.latest_step()
-        if step is None:
-            return 0
+        forced_remote = tier == "remote"
+        use_remote = forced_remote
+        if not use_remote and step is None \
+                and self.engine.latest_step() is None \
+                and self.engine.remote_store is not None:
+            use_remote = True           # local tier empty/lost → remote
+        if not use_remote:
+            step = step if step is not None else self.engine.latest_step()
+            if step is None:
+                return 0
         if self.state is None:
             self.init_state()
         readers = (self.cfg.checkpoint.restore_readers
                    if self.cfg.checkpoint else None)
-        restored, manifest = self.engine.load(step, like=self.state,
-                                              parallel=readers)
+        try:
+            restored, manifest = self.engine.load(
+                step, like=self.state, parallel=readers,
+                tier="remote" if use_remote else "local")
+        except FileNotFoundError:
+            # only the AUTOMATIC fallback may degrade to a fresh start;
+            # an operator who explicitly asked for the remote tier must
+            # hear that the bucket is empty (a mistyped store path would
+            # otherwise silently retrain from scratch and shadow the
+            # real history)
+            if use_remote and step is None and not forced_remote:
+                return 0                # neither tier has a checkpoint
+            raise
         # jnp.array COPIES: a parallel load returns views into the
         # engine's read arena, which the next load would refill —
         # the trainer's state must own its buffers (DESIGN.md §7)
@@ -141,7 +179,7 @@ class Trainer:
         extras = manifest.extras
         if "data" in extras:
             self.data = TokenStream.from_state(self.data.cfg, extras["data"])
-        return int(extras.get("step", step))
+        return int(extras.get("step", step if step is not None else 0))
 
     # ------------------------------------------------------------- loop
     def _save(self, step: int):
@@ -177,6 +215,11 @@ class Trainer:
         if self.engine is not None:
             t_w = time.perf_counter()
             self.engine.drain()     # commit stragglers, park the worker
+            # a CLEAN exit also flushes the upload tier (the worker is
+            # a daemon thread — returning now would abandon the tail
+            # generations' remote COMMITs; a crash still degrades to
+            # the last fully-uploaded generation, DESIGN §8)
+            self.engine.wait_uploaded()
             self.ckpt_stall += time.perf_counter() - t_w
         jax.block_until_ready(self.state.params)
         return self.state, metrics

@@ -1,0 +1,583 @@
+"""Tiered durability: object-store upload after local commit (DESIGN §8).
+
+Covers the remote commit protocol end to end: mock-bucket round trips
+(save → wipe local → load(tier="remote")), remote-COMMIT-last crash
+atomicity, idempotent retries (no duplicate objects), the retention
+upload-pinning rule, CRC detection of corrupted remote shards on
+hydration, and remote pruning."""
+import glob
+import os
+import shutil
+import threading
+import time
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core import layout, upload
+from repro.core.checkpointer import FastPersistConfig
+from repro.core.engine import CheckpointEngine, CheckpointSpec
+from repro.core.partition import Topology
+from repro.core.retention import RetentionManager, RetentionPolicy
+from repro.core.upload import (LocalObjectStore, ObjectStore, UploadManager,
+                               hydrate, make_store, register_store_scheme,
+                               remote_generation, remote_generations,
+                               remote_prefix, remote_steps)
+
+
+def _state(n=5000, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal(n).astype(np.float32),
+            "b": np.arange(17, dtype=np.float32)}
+
+
+def _spec(tmp_path, backend="fastpersist-tiered", store=None, writers=4,
+          volumes=True, **kw):
+    d = str(tmp_path)
+    vols = ([os.path.join(d, "v0"), os.path.join(d, "v1")]
+            if volumes else None)
+    return CheckpointSpec(
+        directory=os.path.join(d, "prim"), backend=backend, volumes=vols,
+        upload_store=(store if store is not None
+                      else os.path.join(d, "bucket")),
+        fp=FastPersistConfig(strategy="replica",
+                             topology=Topology(dp_degree=writers)), **kw)
+
+
+def _wipe_local(spec):
+    """Delete every local checkpoint artifact (the lost-node scenario)."""
+    for root in [spec.directory, *(spec.volumes or [])]:
+        for p in glob.glob(os.path.join(root, "ckpt_*")):
+            shutil.rmtree(p, ignore_errors=True)
+
+
+# ========================================================= object store
+def test_local_store_basics(tmp_path):
+    s = LocalObjectStore(str(tmp_path / "b"))
+    assert not s.exists("a/x")
+    assert s.size("a/x") is None
+    s.put("a/x", b"hello")
+    assert s.exists("a/x") and s.size("a/x") == 5
+    assert s.get("a/x") == b"hello"
+    s.put("a/x", b"world!")                      # overwrite in place
+    assert s.get("a/x") == b"world!"
+    s.put("a/y", b"1")
+    s.put("b/z", b"2")
+    assert s.list("a/") == ["a/x", "a/y"]
+    assert s.list() == ["a/x", "a/y", "b/z"]
+    s.delete("a/x")
+    s.delete("a/x")                              # idempotent
+    assert not s.exists("a/x")
+
+
+def test_local_store_put_file_and_get_to(tmp_path):
+    s = LocalObjectStore(str(tmp_path / "b"))
+    src = tmp_path / "src.bin"
+    src.write_bytes(b"\x01" * 4096)
+    s.put_file("k/f.bin", str(src))
+    dst = tmp_path / "dst.bin"
+    s.get_to("k/f.bin", str(dst))
+    assert dst.read_bytes() == src.read_bytes()
+
+
+def test_local_store_rejects_escaping_keys(tmp_path):
+    s = LocalObjectStore(str(tmp_path / "b"))
+    with pytest.raises(ValueError):
+        s.put("../outside", b"x")
+
+
+def test_make_store_resolution(tmp_path):
+    assert isinstance(make_store(str(tmp_path / "p")), LocalObjectStore)
+    assert isinstance(make_store(f"file://{tmp_path}/p2"), LocalObjectStore)
+    inst = LocalObjectStore(str(tmp_path / "p3"))
+    assert make_store(inst) is inst
+    with pytest.raises(KeyError, match="no object store registered"):
+        make_store("s3-test-unregistered://bucket/x")
+    register_store_scheme("s3-test-unregistered",
+                          lambda spec: LocalObjectStore(str(tmp_path / "s3")))
+    try:
+        assert isinstance(make_store("s3-test-unregistered://bucket/x"),
+                          LocalObjectStore)
+        with pytest.raises(ValueError, match="already registered"):
+            register_store_scheme("s3-test-unregistered", lambda s: None)
+    finally:
+        upload._STORE_SCHEMES.pop("s3-test-unregistered", None)
+    with pytest.raises(TypeError):
+        make_store(123)
+
+
+def test_remote_naming_roundtrip():
+    marker = {"step": 7, "files": {"a": 1}}
+    gen = remote_generation(marker)
+    assert gen == remote_generation(dict(marker))      # deterministic
+    assert upload.parse_remote_prefix(remote_prefix(7, gen)) == (7, gen)
+    assert upload.parse_remote_prefix("ckpt_00000007") is None
+    assert upload.parse_remote_prefix("junk.gen-zz") is None
+
+
+# ==================================================== end-to-end tiered
+def test_tiered_roundtrip_after_local_wipe(tmp_path):
+    """The acceptance path: tiered save → remote COMMIT → delete ALL
+    local shards → load(tier='remote') restores bit-exactly."""
+    state = _state()
+    spec = _spec(tmp_path)
+    with CheckpointEngine(spec) as eng:
+        h = eng.save(state, 3)
+        st = h.wait()
+        ust = h.wait_uploaded()
+        assert ust is not None and ust.committed
+        assert ust.n_objects == ust.n_uploaded + ust.n_skipped
+        assert eng.remote_steps() == [3]
+        assert eng.stats.uploads_enqueued == 1
+    _wipe_local(spec)
+    # a fresh, NON-tiered engine with only the store spec can hydrate
+    spec2 = _spec(tmp_path, backend="fastpersist")
+    with CheckpointEngine(spec2) as eng:
+        assert eng.latest_step() is None
+        restored, manifest = eng.load(tier="remote")
+        for k in state:
+            assert np.array_equal(np.asarray(restored[k]), state[k]), k
+        # hydration re-committed locally: local loads now work too
+        assert eng.latest_step() == 3
+
+
+def test_tiered_pipelined_backend_and_parallel_remote_load(tmp_path):
+    state = _state(seed=2)
+    spec = _spec(tmp_path, backend="fastpersist-tiered-pipelined")
+    with CheckpointEngine(spec) as eng:
+        h = eng.save(state, 1)
+        assert eng.async_save
+        h.wait_uploaded()               # local + remote durability
+    _wipe_local(spec)
+    with CheckpointEngine(_spec(tmp_path, backend="fastpersist")) as eng:
+        restored, _ = eng.load(tier="remote", parallel=3)
+        for k in state:
+            assert np.array_equal(np.asarray(restored[k]), state[k]), k
+
+
+def test_wait_uploaded_is_none_without_tier(tmp_path):
+    spec = CheckpointSpec(directory=str(tmp_path / "p"),
+                          backend="fastpersist")
+    with CheckpointEngine(spec) as eng:
+        h = eng.save(_state(100), 1)
+        assert h.wait_uploaded() is None
+        assert h.uploaded()
+        assert eng.wait_uploaded() == []
+        assert eng.remote_steps() == []
+
+
+def test_tiered_backend_requires_store(tmp_path):
+    spec = CheckpointSpec(directory=str(tmp_path / "p"),
+                          backend="fastpersist-tiered")
+    with pytest.raises(ValueError, match="upload_store"):
+        CheckpointEngine(spec)
+
+
+def test_load_remote_requires_store(tmp_path):
+    spec = CheckpointSpec(directory=str(tmp_path / "p"),
+                          backend="fastpersist")
+    with CheckpointEngine(spec) as eng:
+        eng.save(_state(100), 1)
+        with pytest.raises(ValueError, match="tier='remote'"):
+            eng.load(tier="remote")
+        with pytest.raises(ValueError, match="tier"):
+            eng.load(tier="nearline")
+
+
+# ================================================ remote crash atomicity
+class _CommitlessStore(LocalObjectStore):
+    """Payload puts succeed; the remote COMMIT put (the only ``put`` of
+    bytes on the upload path) dies — the uploader crashing between the
+    local and remote commit points."""
+
+    def put(self, key, data):
+        raise IOError("injected crash before remote COMMIT")
+
+
+def test_crash_before_remote_commit_is_unobservable(tmp_path):
+    state = _state(seed=3)
+    store = _CommitlessStore(str(tmp_path / "bucket"))
+    spec = _spec(tmp_path, store=store)
+    with CheckpointEngine(spec) as eng:
+        h = eng.save(state, 5)
+        h.wait()                                  # local commit is fine
+        with pytest.raises(IOError, match="injected crash"):
+            h.wait_uploaded()
+        # a FAILED upload is not "uploaded" — the step has no
+        # observable remote generation an operator could rely on
+        assert not h.uploaded()
+        # drain() re-raises the lost upload too (a silently dropped
+        # generation would be worse); consume it so close() is clean
+        with pytest.raises(IOError, match="injected crash"):
+            eng.wait_uploaded()
+    # payload objects landed, but with no COMMIT the generation does
+    # not exist as far as any reader is concerned
+    assert store.list() != []
+    assert remote_steps(store) == []
+    assert remote_generations(store) == []
+    with pytest.raises(FileNotFoundError):
+        hydrate(store, spec.directory)
+
+
+class _OrderAssertingStore(LocalObjectStore):
+    """Asserts the remote COMMIT is written strictly LAST: at put()
+    time every payload object of the generation must already exist."""
+
+    def put(self, key, data):
+        assert key.endswith("/" + upload.REMOTE_COMMIT)
+        import json
+        marker = json.loads(data.decode())
+        prefix = key.rsplit("/", 1)[0]
+        for name in marker["objects"]:
+            assert self.exists(f"{prefix}/{name}"), \
+                f"COMMIT written before payload object {name}"
+        super().put(key, data)
+
+
+def test_remote_commit_written_last(tmp_path):
+    store = _OrderAssertingStore(str(tmp_path / "bucket"))
+    spec = _spec(tmp_path, store=store)
+    with CheckpointEngine(spec) as eng:
+        eng.save(_state(seed=4), 2).wait_uploaded()
+    assert remote_steps(store) == [2]
+
+
+# ===================================================== idempotent retry
+class _CountingStore(LocalObjectStore):
+    def __init__(self, root):
+        super().__init__(root)
+        self.put_ok = Counter()         # successful uploads per key
+        self.fail_once = set()          # keys that fail their next put
+
+    def _maybe_fail(self, key):
+        if key in self.fail_once:
+            self.fail_once.discard(key)
+            raise IOError(f"transient failure for {key}")
+
+    def put(self, key, data):
+        self._maybe_fail(key)
+        super().put(key, data)
+        self.put_ok[key] += 1
+
+    def put_file(self, key, path):
+        self._maybe_fail(key)
+        super().put_file(key, path)
+        self.put_ok[key] += 1
+
+
+def _committed_dir(tmp_path, step=1, seed=5):
+    """One committed local checkpoint; returns (spec, dir, marker)."""
+    spec = _spec(tmp_path, backend="fastpersist")
+    with CheckpointEngine(spec) as eng:
+        eng.save(_state(seed=seed), step).wait()
+    d = os.path.join(spec.directory, layout.step_dir_name(step))
+    return spec, d, layout.verify_commit(d, deep=False)
+
+
+def test_in_attempt_retry_recovers_transient_failure(tmp_path):
+    spec, d, marker = _committed_dir(tmp_path)
+    store = _CountingStore(str(tmp_path / "bucket"))
+    files = layout.commit_files(d, marker, spec.volumes)
+    store.fail_once.add(
+        f"{remote_prefix(1, remote_generation(marker))}/{files[1]['name']}")
+    mgr = UploadManager(store, volume_roots=spec.volumes, max_retries=2,
+                        retry_backoff=0.0)
+    try:
+        st = mgr.enqueue(1, d, marker).wait()
+        assert st.committed and st.retries >= 1
+        assert all(v == 1 for v in store.put_ok.values())   # no doubles
+    finally:
+        mgr.close()
+
+
+def test_partial_upload_retry_is_idempotent(tmp_path):
+    """A failed attempt leaves a half-uploaded, UNOBSERVABLE generation;
+    re-enqueueing the same commit reuses its keys: already-landed
+    objects are skipped, nothing is duplicated, COMMIT lands once."""
+    spec, d, marker = _committed_dir(tmp_path)
+    store = _CountingStore(str(tmp_path / "bucket"))
+    files = layout.commit_files(d, marker, spec.volumes)
+    gen = remote_generation(marker)
+    # third object dies and the attempt has no retry budget
+    store.fail_once.add(f"{remote_prefix(1, gen)}/{files[2]['name']}")
+    mgr = UploadManager(store, volume_roots=spec.volumes, max_retries=0)
+    try:
+        t1 = mgr.enqueue(1, d, marker)
+        assert t1.exception() is not None
+        with pytest.raises(IOError):
+            mgr.drain()                           # failures never vanish
+        assert remote_steps(store) == []          # unobservable
+        assert mgr.unuploaded_steps() == [1]      # still pinned
+        landed = len(store.put_ok)
+        assert 0 < landed < len(files)
+
+        st = mgr.enqueue(1, d, marker).wait()     # the retry
+        assert st.committed
+        assert st.n_skipped >= landed             # first attempt reused
+        assert st.n_uploaded + st.n_skipped == st.n_objects
+        assert mgr.unuploaded_steps() == []
+        # every object uploaded exactly once across both attempts, and
+        # the bucket holds exactly the generation's keys — no leaks
+        assert all(v == 1 for v in store.put_ok.values())
+        expect = {f"{remote_prefix(1, gen)}/{f['name']}" for f in files}
+        expect.add(f"{remote_prefix(1, gen)}/{upload.REMOTE_COMMIT}")
+        assert set(store.list()) == expect
+
+        st2 = mgr.enqueue(1, d, marker).wait()    # fully-committed re-run
+        assert st2.committed and st2.n_uploaded == 0
+        assert st2.n_skipped == st2.n_objects
+    finally:
+        mgr.close()
+
+
+# ================================================== retention interplay
+class _GatedStore(LocalObjectStore):
+    """Uploads block until the gate opens (a slow/clogged WAN link)."""
+
+    def __init__(self, root):
+        super().__init__(root)
+        self.gate = threading.Event()
+
+    def put(self, key, data):
+        self.gate.wait()
+        super().put(key, data)
+
+    def put_file(self, key, path):
+        self.gate.wait()
+        super().put_file(key, path)
+
+
+def test_retention_never_deletes_unuploaded_steps(tmp_path):
+    store = _GatedStore(str(tmp_path / "bucket"))
+    spec = _spec(tmp_path, store=store)
+    with CheckpointEngine(spec) as eng:
+        retain = RetentionManager(spec.directory,
+                                  RetentionPolicy(keep_last=1),
+                                  eng.volume_roots(),
+                                  upload=eng.upload_manager)
+        for s in [1, 2, 3, 4]:
+            eng.save(_state(seed=s), s).wait()
+            retain.after_commit()
+        # uploads are all stuck behind the gate: every step is pinned,
+        # GC must not have deleted ANY of them (the local copy may be
+        # the only copy in existence)
+        assert retain.deleted == []
+        assert sorted(eng.steps()) == [1, 2, 3, 4]
+        assert sorted(eng.upload_manager.unuploaded_steps()) == [1, 2, 3, 4]
+
+        store.gate.set()                      # WAN comes back
+        eng.wait_uploaded()
+        assert eng.upload_manager.unuploaded_steps() == []
+        retain.after_commit()
+        assert retain.deleted == [1, 2, 3]    # policy applies again
+        assert eng.steps() == [4]
+        assert remote_steps(store) == [1, 2, 3, 4]   # remote keeps all
+
+
+def test_failed_upload_stays_pinned(tmp_path):
+    spec, d, marker = _committed_dir(tmp_path, step=9)
+    store = _CommitlessStore(str(tmp_path / "bucket2"))
+    mgr = UploadManager(store, volume_roots=spec.volumes, max_retries=0)
+    try:
+        t = mgr.enqueue(9, d, marker)
+        assert t.exception() is not None
+        assert mgr.unuploaded_steps() == [9]
+        from repro.core.retention import collectable
+        assert collectable(spec.directory, RetentionPolicy(keep_last=0),
+                           pinned=mgr.unuploaded_steps()) == []
+    finally:
+        mgr.close(drain=False)
+
+
+def test_remote_prune_keeps_recent_steps(tmp_path):
+    store = LocalObjectStore(str(tmp_path / "bucket"))
+    spec = _spec(tmp_path, store=store)
+    with CheckpointEngine(spec) as eng:
+        retain = RetentionManager(
+            spec.directory,
+            RetentionPolicy(keep_last=1, remote_keep_last=2),
+            eng.volume_roots(), upload=eng.upload_manager)
+        for s in [1, 2, 3, 4]:
+            eng.save(_state(seed=s), s).wait_uploaded()
+            retain.after_commit()
+        # pruning runs on the upload worker (after_commit only enqueues
+        # — the training thread never touches the WAN); flush it
+        eng.wait_uploaded()
+        # local window: 1 step; remote window: 2 steps — local < remote
+        assert eng.steps() == [4]
+        assert remote_steps(store) == [3, 4]
+        assert 1 in retain.remote_deleted and 2 in retain.remote_deleted
+        # the remotely-pruned generations left no unreferenced objects
+        for key in store.list():
+            assert upload.parse_remote_prefix(
+                key.split("/", 1)[0])[0] in (3, 4)
+
+
+# ======================================================= hydration + CRC
+def test_hydration_detects_corrupted_remote_shard(tmp_path):
+    state = _state(seed=6)
+    store = LocalObjectStore(str(tmp_path / "bucket"))
+    spec = _spec(tmp_path, store=store)
+    with CheckpointEngine(spec) as eng:
+        eng.save(state, 1).wait_uploaded()
+    _wipe_local(spec)
+    # flip bytes inside a remote shard object, behind the store's back
+    shard_keys = [k for k in store.list() if "shard_" in k]
+    victim = shard_keys[0]
+    raw = bytearray(store.get(victim))
+    raw[len(raw) // 2] ^= 0xFF
+    with open(store._path(victim), "wb") as f:      # same size, bad bytes
+        f.write(raw)
+    with pytest.raises(IOError, match="corruption"):
+        hydrate(store, spec.directory)
+    # the failed hydration left no torn local checkpoint behind
+    assert layout.committed_steps(spec.directory, legacy_ok=False) == []
+
+
+def test_hydration_heals_corrupted_local_shard(tmp_path):
+    """tier='remote' with an intact bucket repairs local corruption:
+    bad local shards are re-downloaded, good ones are reused."""
+    state = _state(seed=7)
+    store = LocalObjectStore(str(tmp_path / "bucket"))
+    spec = _spec(tmp_path, store=store)
+    with CheckpointEngine(spec) as eng:
+        eng.save(state, 1).wait_uploaded()
+    d = os.path.join(spec.directory, layout.step_dir_name(1))
+    marker = layout.verify_commit(d, deep=False)
+    files = layout.commit_files(d, marker, spec.volumes)
+    shards = [f for f in files if "crc32" in f]
+    with open(shards[0]["path"], "r+b") as f:       # corrupt one shard
+        f.seek(shards[0]["size"] // 2)
+        f.write(b"\xde\xad\xbe\xef")
+
+    downloads = []
+    orig_get_to = store.get_to
+    store.get_to = lambda key, path: (downloads.append(key),
+                                      orig_get_to(key, path))[1]
+    with CheckpointEngine(_spec(tmp_path, backend="fastpersist",
+                                store=store)) as eng:
+        restored, _ = eng.load(tier="remote")
+        for k in state:
+            assert np.array_equal(np.asarray(restored[k]), state[k]), k
+    # only the corrupted shard crossed the wire; intact files were reused
+    assert len(downloads) == 1
+    assert shards[0]["name"] in downloads[0]
+
+
+def test_hydrated_checkpoint_reuploads_idempotently(tmp_path):
+    """A hydrated (volume-0-rewritten) checkpoint is itself a valid
+    committed generation: commit_files enumerates it and an upload of
+    it round-trips — the repro of re-seeding a replacement node."""
+    state = _state(seed=8)
+    store = LocalObjectStore(str(tmp_path / "bucket"))
+    spec = _spec(tmp_path, store=store)
+    with CheckpointEngine(spec) as eng:
+        eng.save(state, 1).wait_uploaded()
+    _wipe_local(spec)
+    hydrate(store, spec.directory)
+    d = os.path.join(spec.directory, layout.step_dir_name(1))
+    marker = layout.verify_commit(d, deep=True)
+    assert all(int(sh.get("volume", 0)) == 0
+               for sh in marker.get("shards", []))
+    store2 = LocalObjectStore(str(tmp_path / "bucket2"))
+    mgr = UploadManager(store2)
+    try:
+        st = mgr.enqueue(1, d).wait()             # marker read from disk
+        assert st.committed
+    finally:
+        mgr.close()
+    _wipe_local(spec)
+    hydrate(store2, spec.directory)
+    with CheckpointEngine(_spec(tmp_path, backend="fastpersist",
+                                store=store2)) as eng:
+        restored, _ = eng.load(1)
+        for k in state:
+            assert np.array_equal(np.asarray(restored[k]), state[k]), k
+
+
+def test_commit_files_enumerates_all_volumes(tmp_path):
+    spec, d, marker = _committed_dir(tmp_path, step=2)
+    files = layout.commit_files(d, marker, spec.volumes)
+    names = [f["name"] for f in files]
+    assert "manifest.json" in names
+    assert layout.COMMIT_FILE not in names
+    assert len(names) == len(set(names))          # no duplicates
+    shards = [f for f in files if f["name"].startswith("shard_")]
+    assert {f["volume"] for f in shards} == {0, 1}    # striped over 2 vols
+    assert all("crc32" in f for f in shards)
+    for f in files:
+        assert os.path.getsize(f["path"]) == f["size"]
+
+
+def test_hydrate_picks_newest_generation_of_resaved_step(tmp_path):
+    """A re-saved step leaves TWO committed remote generations (the
+    content-derived nonces are unordered); hydration must follow the
+    remote COMMIT's uploaded_at stamp to the newer one, never restore
+    the superseded bytes."""
+    store = LocalObjectStore(str(tmp_path / "bucket"))
+    spec = _spec(tmp_path, store=store)
+    old_state, new_state = _state(seed=20), _state(seed=21)
+    with CheckpointEngine(spec) as eng:
+        eng.save(old_state, 1).wait_uploaded()
+        time.sleep(0.01)                      # distinct uploaded_at
+        eng.save(new_state, 1).wait_uploaded()
+    assert len(remote_generations(store, 1)) == 2
+    _wipe_local(spec)
+    hydrate(store, spec.directory, step=1)
+    with CheckpointEngine(_spec(tmp_path, backend="fastpersist",
+                                store=store)) as eng:
+        restored, _ = eng.load(1)
+        for k in new_state:
+            assert np.array_equal(np.asarray(restored[k]), new_state[k]), k
+
+
+def test_forced_remote_restore_raises_on_empty_bucket(tmp_path):
+    """restore(tier='remote') against an empty/mistyped bucket must
+    raise, not silently retrain from scratch; only the AUTOMATIC
+    local-empty fallback may return 0."""
+    from repro.configs import get_config, reduced
+    from repro.train.trainer import (CheckpointPolicy, Trainer,
+                                     TrainerConfig)
+    cfg = reduced(get_config("stablelm_1_6b"))
+    pol = CheckpointPolicy(
+        directory=str(tmp_path / "ckpt"), every=1, pipeline=False,
+        upload=str(tmp_path / "empty-bucket"),
+        fp=FastPersistConfig(strategy="replica",
+                             topology=Topology(dp_degree=1)))
+    t = Trainer(TrainerConfig(model=cfg, steps=1, global_batch=2,
+                              seq_len=16, checkpoint=pol))
+    with pytest.raises(FileNotFoundError):
+        t.restore(tier="remote")
+    assert t.restore() == 0               # automatic fallback: fresh run
+
+
+# =================================================== trainer integration
+@pytest.mark.slow
+def test_trainer_tiered_upload_and_remote_restore(tmp_path):
+    from repro.configs import get_config, reduced
+    from repro.train.trainer import (CheckpointPolicy, Trainer,
+                                     TrainerConfig)
+    cfg = reduced(get_config("stablelm_1_6b"))
+    bucket = str(tmp_path / "bucket")
+    pol = CheckpointPolicy(
+        directory=str(tmp_path / "ckpt"), every=1, pipeline=False,
+        upload=bucket,
+        fp=FastPersistConfig(strategy="replica",
+                             topology=Topology(dp_degree=1)))
+    tc = TrainerConfig(model=cfg, steps=3, global_batch=2, seq_len=16,
+                       log_every=1000, checkpoint=pol)
+    t = Trainer(tc)
+    assert pol.backend_name() == "fastpersist-tiered"
+    t.run()
+    t.engine.wait_uploaded()
+    assert t.engine.remote_steps() == [1, 2, 3]
+    state_before = t.state
+    # the node dies: local checkpoint directory is gone entirely
+    shutil.rmtree(str(tmp_path / "ckpt"))
+    t2 = Trainer(tc)
+    assert t2.restore() == 3                      # auto remote fallback
+    import jax
+    for a, b in zip(jax.tree.leaves(state_before.params),
+                    jax.tree.leaves(t2.state.params)):
+        assert np.allclose(np.asarray(a), np.asarray(b))
