@@ -16,6 +16,7 @@ PERF_WRITER_JSON = "experiments/perf_writer.json"
 FIG8_JSON = "experiments/fig8.json"
 FIG10_JSON = "experiments/fig10.json"
 FIG13_JSON = "experiments/fig13.json"
+FIG_DELTA_JSON = "experiments/fig_delta.json"
 
 
 def fmt(x, digits=3):
@@ -188,8 +189,33 @@ def ckpt_tiered_table():
             print(f"| {k} | {fig13[k]} |")
 
 
+def ckpt_delta_table():
+    """§Incremental delta checkpoints: fig_delta bytes-written and
+    save-latency cells (keyframe+delta generations, DESIGN.md §9)."""
+    if not os.path.exists(FIG_DELTA_JSON):
+        return
+    with open(FIG_DELTA_JSON) as f:
+        fd = json.load(f)
+    print("\n### Incremental delta checkpoints "
+          "(measured on this host)\n")
+    print(f"{fd['mb']} MiB state, {fd['steps']} steady-state saves; "
+          f"best sparse bytes reduction "
+          f"{fd.get('best_sparse_bytes_x', '?')}x "
+          f"— verdict: {fd.get('verdict', '?')}\n")
+    print("| keyframe_every | dirty frac | bytes full | bytes delta | "
+          "bytes x | save ms full | save ms delta | save x | bit-exact |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for c in fd.get("cells", []):
+        ok = c.get("ok_full") and c.get("ok_delta")
+        print(f"| {c['keyframe_every']} | {c['dirty_frac']} | "
+              f"{c['bytes_full']} | {c['bytes_delta']} | "
+              f"{c['bytes_x']} | {c['save_ms_full']} | "
+              f"{c['save_ms_delta']} | {c['save_x']} | {ok} |")
+
+
 if __name__ == "__main__":
     main()
     ckpt_write_tables()
     ckpt_restore_table()
     ckpt_tiered_table()
+    ckpt_delta_table()

@@ -7,7 +7,10 @@ from repro.core.checkpointer import (FastPersistCheckpointer,
 from repro.core.engine import (CheckpointBackend, CheckpointEngine,
                                CheckpointSpec, EngineStats, SaveHandle,
                                available_backends, register_backend)
-from repro.core.layout import (LAYOUT_VERSION, CheckpointError,
+from repro.core.delta import (DeltaPlan, DeltaSpan, apply_delta,
+                              build_delta, dirty_byte_spans)
+from repro.core.layout import (DELTA_LAYOUT_VERSION, LAYOUT_VERSION,
+                               SHARDED_LAYOUT_VERSION, CheckpointError,
                                TornCheckpointError, committed_steps)
 from repro.core.overlap import (IterationModel, checkpoint_seconds,
                                 effective_overhead, estimate_iteration,

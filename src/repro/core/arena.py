@@ -81,6 +81,13 @@ class SerializeArena:
         self.last_reused = False
         self.n_read_alloc = 0   # read-staging allocations
         self.n_read_reuse = 0   # loads served from the cached buffer
+        # --- dirty-range tracking (delta checkpoints, DESIGN.md §9) ---
+        #: stream-coordinate (offset, length) spans where the LAST
+        #: serialize differed from the resident previous image; None
+        #: when tracking was off or there was no valid baseline (layout
+        #: miss / first fill). An empty list means "nothing changed".
+        self.last_dirty: Optional[List[Tuple[int, int]]] = None
+        self.last_dirty_bytes: Optional[int] = None
 
     # ------------------------------------------------------------ state
     def invalidate(self):
@@ -165,10 +172,19 @@ class SerializeArena:
         self.n_layout += 1
 
     # -------------------------------------------------------- serialize
-    def serialize(self, leaves, treedef):
+    def serialize(self, leaves, treedef, track_dirty: bool = False,
+                  dirty_block: int = 4096):
         """Fill the arena from ``leaves`` and return
         ``(Manifest, buffers)`` with the serializer's exact contract:
-        ``buffers[i]`` holds record *i*'s bytes (views into the arena)."""
+        ``buffers[i]`` holds record *i*'s bytes (views into the arena).
+
+        With ``track_dirty``, each record's incoming bytes are compared
+        against the RESIDENT previous image (blockwise, BEFORE the
+        copy-in overwrites it) and the coalesced dirty spans land in
+        ``self.last_dirty`` in stream coordinates — the input to a delta
+        checkpoint (DESIGN.md §9). Tracking needs a valid baseline:
+        on a layout miss (first fill / shape change / ``invalidate``)
+        ``last_dirty`` is None and the caller must write a keyframe."""
         key = self._signature(leaves, treedef)
         if key != self._key or self._buffers is None:
             self._layout(leaves, treedef, key)
@@ -176,11 +192,20 @@ class SerializeArena:
         else:
             self.n_reuse += 1
             self.last_reused = True
-        for (_path, leaf), dst in zip(leaves, self._buffers):
+        dirty = [] if (track_dirty and self.last_reused) else None
+        for (_path, leaf), dst, rec in zip(leaves, self._buffers,
+                                           self._records):
             if dst.size == 0:
                 continue
-            np.copyto(dst, _host_array(leaf).reshape(dst.shape),
-                      casting="no")
+            src = _host_array(leaf).reshape(dst.shape)
+            if dirty is not None:
+                from repro.core.delta import dirty_byte_spans
+                dirty.extend((rec.offset + off, length) for off, length
+                             in dirty_byte_spans(dst, src, dirty_block))
+            np.copyto(dst, src, casting="no")
+        self.last_dirty = dirty
+        self.last_dirty_bytes = (sum(ln for _, ln in dirty)
+                                 if dirty is not None else None)
         manifest = Manifest(self._records, self._total,
                             treedef=self._treedef_str)
         return manifest, list(self._buffers)

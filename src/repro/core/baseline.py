@@ -88,7 +88,7 @@ class BaselineCheckpointer:
             os.fsync(f.fileno())
         if directory is not None:
             meta = json.loads(manifest.to_json())
-            meta["layout_version"] = layout.LAYOUT_VERSION
+            meta["layout_version"] = layout.SHARDED_LAYOUT_VERSION
             with open(os.path.join(directory, layout.MANIFEST_FILE),
                       "w") as f:
                 json.dump(meta, f)

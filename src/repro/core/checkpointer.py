@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core import layout
 from repro.core.arena import SerializeArena
+from repro.core.delta import DeltaPlan, apply_delta, build_delta
 from repro.core.partition import (ReadPlan, ReadSpan, Topology, WritePlan,
                                   make_plan, make_read_plan, probe_volumes,
                                   select_writers)
@@ -71,6 +72,22 @@ class FastPersistConfig:
     #: allocation steady-state; see repro.core.arena). Turn off to get
     #: the old allocate-per-save serialize.
     arena: bool = True
+    #: incremental delta checkpoints (DESIGN.md §9): every Nth save is
+    #: a full KEYFRAME through the normal path, and the saves in
+    #: between write only the byte spans that changed since the
+    #: previous save (layout-v3 delta generations chained by
+    #: generation nonce). 1 = every save is full (deltas off).
+    #: Requires the arena (it holds the previous image the dirty
+    #: compare runs against); incompatible with ``quantize`` and
+    #: ``single_file`` — those saves silently stay full.
+    keyframe_every: int = 1
+    #: int8-quantize delta spans before they hit disk/the wire
+    #: (Check-N-Run style; LOSSY — restores are approximate). Full
+    #: keyframes stay lossless either way.
+    delta_quantize: bool = False
+    #: dirty-compare granularity in bytes (delta spans coalesce to
+    #: multiples of this)
+    dirty_block: int = 4096
 
 
 @dataclass
@@ -93,6 +110,15 @@ class SaveStats:
     #: (steady-state zero-allocation save); False on first save, shape
     #: change, or with the arena disabled
     arena_reused: bool = False
+    #: this save's random generation nonce — the engine stamps it into
+    #: the COMMIT marker; a later delta's chain validity hangs off it
+    generation: str = ""
+    #: delta-save descriptor (None for full/keyframe saves): the full
+    #: :meth:`repro.core.delta.DeltaPlan.to_meta` dict plus "n_spans" —
+    #: the engine stamps it verbatim into the COMMIT marker, which is
+    #: what chain resolution replays from. ``total_bytes`` of a delta
+    #: save is the PACKED payload actually written, not the stream size.
+    delta: Optional[dict] = None
 
     @property
     def gbps(self):
@@ -111,26 +137,73 @@ class FastPersistCheckpointer:
         # a previous save still reads it. Not safe for CONCURRENT save()
         # calls on one instance (use one checkpointer per caller).
         self._arena = SerializeArena() if self.config.arena else None
+        # ---- delta-chain state (DESIGN.md §9) ----
+        # A save may only chain off a base that is BOTH durably
+        # committed (note_committed fired) and still resident in the
+        # arena (the dirty compare ran against exactly that image).
+        self._base: Optional[Tuple[int, str]] = None      # committed
+        self._pending: Optional[Tuple[int, str]] = None   # written, no
+        #                                                   commit yet
+        self._arena_gen: Optional[Tuple[int, str]] = None  # arena image
+        self._since_keyframe = 0   # deltas committed since last keyframe
 
     # -- setup-time planning (paper: partition fixed before iteration 1) --
     def plan_for(self, total_bytes: int, n_volumes: int = 1,
-                 healthy_volumes: Optional[Tuple[int, ...]] = None
-                 ) -> WritePlan:
+                 healthy_volumes: Optional[Tuple[int, ...]] = None,
+                 min_extent_bytes: int = 0) -> WritePlan:
         """Cached write plan. ``healthy_volumes`` (surviving volume
         indices from a per-save health probe) keys the cache too, so a
         volume dropping out mid-training re-plans instead of serving
-        the stale stripe."""
-        key = (total_bytes, n_volumes, healthy_volumes)
+        the stale stripe. ``min_extent_bytes`` trims the writer subset
+        for tiny streams (delta generations) — see
+        :func:`partition.make_plan`."""
+        key = (total_bytes, n_volumes, healthy_volumes, min_extent_bytes)
         if key not in self._plan_cache:
             self._plan_cache[key] = make_plan(
                 total_bytes, self.config.topology, self.config.strategy,
                 self.config.writers_per_node, n_volumes=n_volumes,
                 healthy_volumes=(list(healthy_volumes)
-                                 if healthy_volumes is not None else None))
+                                 if healthy_volumes is not None else None),
+                min_extent_bytes=min_extent_bytes)
         return self._plan_cache[key]
+
+    #: delta writes below this per-extent size don't split further —
+    #: a few-MB packed stream across every DP writer would pay a
+    #: submission + shard file per writer for KB extents
+    MIN_DELTA_EXTENT = 1 << 20
 
     def path(self, step: int) -> str:
         return os.path.join(self.directory, f"ckpt_{step:08d}")
+
+    def _delta_enabled(self) -> bool:
+        return (self.config.keyframe_every > 1
+                and self._arena is not None
+                and not self.config.quantize
+                and not self.config.single_file)
+
+    def note_committed(self, step: int, marker: Optional[dict]):
+        """Durability hook (DESIGN.md §9): the engine calls this AFTER
+        the crash-atomic publish of a save this checkpointer wrote. Only
+        then does that save become the delta base for the next one — a
+        save whose commit never lands (crash, failed publish) must not
+        be chained off, or the chain would reference a generation no
+        restore can resolve. Standalone saves (no engine, ``directory``
+        None) self-commit inline, since their write IS the durability
+        point."""
+        gen = str((marker or {}).get("generation") or "")
+        if self._pending is not None and self._pending == (step, gen):
+            self._base = self._pending
+            if (marker or {}).get("delta"):
+                self._since_keyframe += 1
+            else:
+                self._since_keyframe = 0
+        else:
+            # a commit we did not just write (another writer, reordered
+            # steps, lost generation) — the arena image no longer
+            # matches the durable tip, so restart the chain
+            self._base = None
+            self._since_keyframe = 0
+        self._pending = None
 
     @staticmethod
     def _shard_file(shard_index: int) -> str:
@@ -146,14 +219,33 @@ class FastPersistCheckpointer:
         stripes shard files across destination volumes; the manifest and
         any volume-0-resident shards stay under ``directory``."""
         t_ser = time.perf_counter()
-        manifest, buffers = serialize(state, arena=self._arena)
+        track = self._delta_enabled()
+        manifest, buffers = serialize(state, arena=self._arena,
+                                      track_dirty=track,
+                                      dirty_block=self.config.dirty_block)
         arena_reused = bool(self._arena and self._arena.last_reused)
         manifest.extras = extras or {}
+        gen = os.urandom(4).hex()
         if self.config.quantize:
             from repro.core.quant import quantize_stream
             ex = manifest.extras
             manifest, buffers = quantize_stream(manifest, buffers)
             manifest.extras.update(ex)
+        # delta eligibility (DESIGN.md §9): tracking produced a valid
+        # dirty set (arena layout hit), the previous save is durably
+        # committed AND is the image resident in the arena, and the
+        # keyframe cadence hasn't come due
+        dplan: Optional[DeltaPlan] = None
+        if track and self._arena.last_dirty is not None \
+                and self._base is not None \
+                and self._arena_gen == self._base \
+                and self._since_keyframe + 1 < self.config.keyframe_every:
+            dplan, payloads = build_delta(
+                manifest.records, ByteStreamView(buffers),
+                self._arena.last_dirty,
+                base_step=self._base[0], base_gen=self._base[1], gen=gen,
+                quantize=self.config.delta_quantize)
+            buffers = payloads
         view = ByteStreamView(buffers)
         ser_s = time.perf_counter() - t_ser
 
@@ -167,10 +259,29 @@ class FastPersistCheckpointer:
         # across the survivors; a totally-dead volume set degrades to
         # the primary directory instead of failing the save
         probe_degraded: Tuple[int, ...] = ()
+        # delta payloads vary in size every save: a direct (uncached)
+        # plan with a minimum extent size, instead of flooding the plan
+        # cache with one entry per distinct packed size
+        min_extent = self.MIN_DELTA_EXTENT if dplan is not None else 0
+
+        def _plan(n_vol, healthy=None):
+            if dplan is None:
+                return self.plan_for(view.total, n_vol,
+                                     healthy_volumes=healthy)
+            return make_plan(
+                view.total, self.config.topology, self.config.strategy,
+                self.config.writers_per_node, n_volumes=n_vol,
+                healthy_volumes=(list(healthy) if healthy is not None
+                                 else None),
+                min_extent_bytes=min_extent)
+
         if n_volumes > 1:
             n_writers = len(select_writers(
                 self.config.topology, self.config.strategy,
                 self.config.writers_per_node, view.total))
+            if min_extent:
+                n_writers = max(1, min(n_writers,
+                                       view.total // min_extent or 1))
             healthy, deg = probe_volumes(dirs, view.total, create=True,
                                          n_shards=n_writers)
             probe_degraded = tuple(deg)
@@ -180,12 +291,11 @@ class FastPersistCheckpointer:
                     f"({dirs}); falling back to the primary directory "
                     f"{d}", stacklevel=2)
                 dirs, n_volumes = [d], 1
-                plan = self.plan_for(view.total, 1)
+                plan = _plan(1)
             else:
-                plan = self.plan_for(view.total, n_volumes,
-                                     healthy_volumes=tuple(healthy))
+                plan = _plan(n_volumes, healthy=tuple(healthy))
         else:
-            plan = self.plan_for(view.total, n_volumes)
+            plan = _plan(n_volumes)
         used_dirs = {d, *(dirs[e.volume] for e in plan.extents)}
         for vd in used_dirs:
             os.makedirs(vd, exist_ok=True)
@@ -220,13 +330,21 @@ class FastPersistCheckpointer:
 
         mpath = os.path.join(d, layout.MANIFEST_FILE)
         meta = json.loads(manifest.to_json())
-        # mirror the COMMIT stamping rule: only a checkpoint whose shards
-        # actually leave the primary directory is a v2 layout — anything
-        # else stays readable by pre-sharding (v1) readers
+        # mirror the COMMIT stamping rule: a delta generation is v3;
+        # otherwise only a checkpoint whose shards actually leave the
+        # primary directory is a v2 layout — anything else stays
+        # readable by pre-sharding (v1) readers
         d_real = os.path.realpath(d)
         striped = any(os.path.realpath(dirs[e.volume]) != d_real
                       for e in plan.extents)
-        meta["layout_version"] = layout.LAYOUT_VERSION if striped else 1
+        meta["layout_version"] = (
+            layout.DELTA_LAYOUT_VERSION if dplan is not None
+            else layout.SHARDED_LAYOUT_VERSION if striped else 1)
+        # the generation nonce also lands in the manifest so standalone
+        # (no-COMMIT) saves still resolve delta chains
+        meta["generation"] = gen
+        if dplan is not None:
+            meta["delta"] = dplan.to_meta()
         extents_meta = [vars(e).copy() for e in plan.extents]
         if self.config.checksum:
             # fill-phase CRCs from the writers — NOT a second sweep
@@ -242,8 +360,12 @@ class FastPersistCheckpointer:
             # work without this — it is for operators and tests)
             meta["plan"]["degraded"] = list(degraded)
         # the global index: tensor → [shard, offset-in-shard, length]
-        # spans, the key to rank-elastic and partial restore (§5)
-        meta["index"] = tensor_spans(manifest.records, plan.extents)
+        # spans, the key to rank-elastic and partial restore (§5).
+        # Delta generations have none: their extents cover the PACKED
+        # span payload, not the tensor stream — the DeltaPlan span
+        # table is their index
+        if dplan is None:
+            meta["index"] = tensor_spans(manifest.records, plan.extents)
         with open(mpath, "w") as f:
             json.dump(meta, f)
         if self.config.fsync:
@@ -261,12 +383,36 @@ class FastPersistCheckpointer:
                 if "crc32" in em:
                     sh["crc32"] = em["crc32"]
                 shard_meta.append(sh)
-        return SaveStats(view.total, wall, ser_s, per_writer,
-                         len(plan.extents), shards=shard_meta,
-                         arena_reused=arena_reused)
+        stats = SaveStats(view.total, wall, ser_s, per_writer,
+                          len(plan.extents), shards=shard_meta,
+                          arena_reused=arena_reused, generation=gen,
+                          delta=dplan.to_meta() if dplan is not None
+                          else None)
+        if stats.delta is not None:
+            # the engine stamps this dict into the COMMIT marker, so it
+            # must stay the COMPLETE table (chain resolution + replay
+            # read it from the marker); n_spans rides along for display
+            stats.delta["n_spans"] = len(dplan.spans)
+        # chain bookkeeping: the arena now holds THIS save's image;
+        # the save becomes the next base only once its commit lands
+        # (note_committed — engine hook, or inline for standalone saves
+        # whose write is already the durability point)
+        if track:
+            self._arena_gen = (step, gen)
+            self._pending = (step, gen)
+            if directory is None:
+                self.note_committed(step, {"generation": gen,
+                                           "delta": stats.delta})
+        else:
+            self._arena_gen = None
+            self._pending = None
+        return stats
 
     # ------------------------------------------------------------- load
     def _read_manifest(self, step: int, directory: Optional[str] = None):
+        """(manifest, saved plan, index, full meta dict) of a step dir.
+        ``meta`` carries the delta descriptor + generation nonce for
+        layout-v3 generations (and everything else the writer stamped)."""
         d = directory if directory is not None else self.path(step)
         with open(os.path.join(d, layout.MANIFEST_FILE)) as f:
             meta = json.load(f)
@@ -277,7 +423,7 @@ class FastPersistCheckpointer:
                                          tuple(r["shape"]), r["offset"],
                                          r["nbytes"])
                             for r in meta["records"]]
-        return manifest, meta["plan"], meta.get("index")
+        return manifest, meta["plan"], meta.get("index"), meta
 
     def _shard_dir(self, directory: str, extent: dict,
                    marker: Optional[dict],
@@ -339,18 +485,32 @@ class FastPersistCheckpointer:
         reader workers; an explicit plan (e.g. ownership-based) is used
         as-is. Each worker reads only its owned spans through the async
         read backends into one shared page-aligned arena buffer."""
-        import zlib
         d = directory if directory is not None else self.path(step)
         if marker is None:
             marker = layout.read_commit_marker(d)
-        manifest, plan, index = self._read_manifest(step, directory)
+        manifest, plan, index, meta = self._read_manifest(step, directory)
+        dinfo = (marker or {}).get("delta") or meta.get("delta")
+        if dinfo:
+            return self._load_delta(step, d, marker, manifest, meta, like,
+                                    verify, volume_roots, read_plan)
         if read_plan is not None:
             return self._load_parallel(manifest, plan, index, read_plan,
                                        like, verify, d, marker,
                                        volume_roots)
         stream = bytearray(manifest.total_bytes)
+        self._fill_sequential(stream, step, d, plan, verify, marker,
+                              volume_roots)
+        return self._materialize(manifest, stream, like)
+
+    def _fill_sequential(self, dest, step: int, d: str, plan: dict,
+                         verify: bool, marker, volume_roots):
+        """Legacy single-reader fill: read each shard whole into
+        ``dest`` at its stream offset, CRC-checking against the saved
+        plan. Shared by the plain load and the keyframe half of a delta
+        restore."""
+        import zlib
         for e in plan["extents"]:
-            data = self.read_shard(step, e["shard_index"], e, directory,
+            data = self.read_shard(step, e["shard_index"], e, d,
                                    marker=marker, volume_roots=volume_roots)
             if verify and "crc32" in e:
                 crc = zlib.crc32(data)
@@ -358,8 +518,96 @@ class FastPersistCheckpointer:
                     raise IOError(
                         f"checkpoint corruption: shard {e['shard_index']} "
                         f"crc {crc:#x} != manifest {e['crc32']:#x}")
-            stream[e["offset"]:e["offset"] + e["length"]] = data
-        return self._materialize(manifest, stream, like)
+            dest[e["offset"]:e["offset"] + e["length"]] = data
+
+    # --------------------------------------- delta restore (DESIGN.md §9)
+    def _resolve_chain(self, step: int, d: str, marker, manifest, meta):
+        """Walk a delta chain newest → keyframe, verifying every link's
+        base identity. Returns ``(deltas, keyframe)`` where ``deltas``
+        is newest-first ``[(step, dir, marker, meta, DeltaPlan), ...]``
+        and ``keyframe`` is ``(step, dir, marker, manifest, plan,
+        index)`` of the full base everything replays onto."""
+        root = os.path.dirname(os.path.abspath(d))
+        deltas = []
+        cur_step, cur_d, cur_marker, cur_manifest, cur_meta = \
+            step, d, marker, manifest, meta
+        seen = set()
+        while True:
+            dinfo = ((cur_marker or {}).get("delta")
+                     or cur_meta.get("delta"))
+            if not dinfo:
+                _mf, kplan, kindex, _meta = self._read_manifest(
+                    cur_step, cur_d)
+                return deltas, (cur_step, cur_d, cur_marker, cur_manifest,
+                                kplan, kindex)
+            dp = DeltaPlan.from_meta(dinfo)
+            deltas.append((cur_step, cur_d, cur_marker, cur_meta, dp))
+            if (dp.base_step, dp.base_gen) in seen or len(seen) > 100000:
+                raise layout.TornCheckpointError(
+                    f"{cur_d}: cyclic delta chain at base step "
+                    f"{dp.base_step}")
+            seen.add((dp.base_step, dp.base_gen))
+            bd = os.path.join(root, layout.step_dir_name(dp.base_step))
+            bmarker = layout.read_commit_marker(bd)
+            try:
+                bmanifest, _bplan, _bindex, bmeta = self._read_manifest(
+                    dp.base_step, bd)
+            except OSError as e:
+                raise layout.TornCheckpointError(
+                    f"{cur_d}: delta base step {dp.base_step} is missing "
+                    f"({bd}) — the keyframe/delta chain is broken") from e
+            bgen = ((bmarker or {}).get("generation")
+                    or bmeta.get("generation") or "")
+            if dp.base_gen and bgen != dp.base_gen:
+                raise layout.TornCheckpointError(
+                    f"{cur_d}: delta chains off generation "
+                    f"{dp.base_gen} of step {dp.base_step}, but the "
+                    f"committed generation there is {bgen or '<none>'} — "
+                    f"the base was re-saved; refusing to replay onto the "
+                    f"wrong image")
+            cur_step, cur_d, cur_marker, cur_manifest, cur_meta = \
+                dp.base_step, bd, bmarker, bmanifest, bmeta
+
+    def _read_delta_payload(self, dstep: int, dd: str, dmarker,
+                            dmeta: dict, dp: DeltaPlan, verify: bool,
+                            volume_roots) -> memoryview:
+        """One delta generation's PACKED span payload, reassembled from
+        its shards through the saved plan (same read machinery as full
+        checkpoints — the per-span CRCs are checked later, at decode)."""
+        packed = memoryview(bytearray(dp.packed_bytes))
+        self._fill_sequential(packed, dstep, dd, dmeta["plan"], verify,
+                              dmarker, volume_roots)
+        return packed
+
+    def _load_delta(self, step: int, d: str, marker, manifest, meta,
+                    like, verify, volume_roots, read_plan):
+        """Restore a delta generation: resolve the chain to its
+        keyframe, reassemble the keyframe stream into ONE buffer (the
+        arena's read staging — through the parallel ReadPlan pipeline
+        when requested), then replay each delta oldest → newest so the
+        newest write of every byte wins; per-span CRCs verify during
+        decode. The materialized manifest/extras are the REQUESTED
+        step's."""
+        deltas, (kstep, kd, kmarker, kmanifest, kplan, kindex) = \
+            self._resolve_chain(step, d, marker, manifest, meta)
+        total = kmanifest.total_bytes
+        if manifest.total_bytes != total:
+            raise layout.TornCheckpointError(
+                f"{d}: delta stream is {manifest.total_bytes} bytes but "
+                f"keyframe step {kstep} holds {total} — chain broken")
+        dest = (self._arena.read_buffer(total) if self._arena is not None
+                else memoryview(bytearray(total)))
+        if read_plan is not None:
+            self._fill_parallel(kplan, kindex, read_plan, verify, kd,
+                                kmarker, volume_roots, dest)
+        else:
+            self._fill_sequential(dest, kstep, kd, kplan, verify, kmarker,
+                                  volume_roots)
+        for dstep, dd, dmarker, dmeta, dp in reversed(deltas):
+            packed = self._read_delta_payload(dstep, dd, dmarker, dmeta,
+                                              dp, verify, volume_roots)
+            apply_delta(dest, dp, packed, verify=verify)
+        return self._materialize(manifest, dest, like)
 
     # ------------------------------------------- parallel restore (§4.2)
     def _resolve_read_plan(self, read_plan, plan: dict,
@@ -432,18 +680,15 @@ class FastPersistCheckpointer:
                     f"combined span crc {combined:#x} != manifest "
                     f"{e['crc32']:#x} (parallel restore path)")
 
-    def _load_parallel(self, manifest: Manifest, plan: dict,
-                       index: Optional[dict], read_plan, like, verify,
-                       d: str, marker, volume_roots):
-        """N local reader workers → one shared arena buffer (the
+    def _fill_parallel(self, plan: dict, index: Optional[dict], read_plan,
+                       verify, d: str, marker, volume_roots,
+                       dest: memoryview):
+        """Fill ``dest`` through N local reader workers (the
         single-host stand-in for the paper's allgather: every rank's
         spans land at their stream offsets, so assembly IS
-        concatenation), combined-CRC verification, zero-copy
-        deserialize."""
+        concatenation), with combined-CRC verification. Shared by the
+        full parallel load and the keyframe half of a delta restore."""
         rp = self._resolve_read_plan(read_plan, plan, index)
-        total = manifest.total_bytes
-        dest = (self._arena.read_buffer(total) if self._arena is not None
-                else memoryview(bytearray(total)))
         rcfg = self.config.writer
         if rcfg.checksum != bool(verify):
             rcfg = replace(rcfg, checksum=bool(verify))
@@ -464,6 +709,17 @@ class FastPersistCheckpointer:
                         rcfg, collected, lock), readers))
         if verify:
             self._verify_span_crcs(plan["extents"], collected)
+
+    def _load_parallel(self, manifest: Manifest, plan: dict,
+                       index: Optional[dict], read_plan, like, verify,
+                       d: str, marker, volume_roots):
+        """N local reader workers → one shared arena buffer, combined-CRC
+        verification, zero-copy deserialize."""
+        total = manifest.total_bytes
+        dest = (self._arena.read_buffer(total) if self._arena is not None
+                else memoryview(bytearray(total)))
+        self._fill_parallel(plan, index, read_plan, verify, d, marker,
+                            volume_roots, dest)
         return self._materialize(manifest, dest, like)
 
     def read_owned(self, step: int, rank: int, n_readers: int,
@@ -485,7 +741,13 @@ class FastPersistCheckpointer:
         d = directory if directory is not None else self.path(step)
         if marker is None:
             marker = layout.read_commit_marker(d)
-        manifest, plan, index = self._read_manifest(step, directory)
+        manifest, plan, index, meta = self._read_manifest(step, directory)
+        if (marker or {}).get("delta") or meta.get("delta"):
+            raise NotImplementedError(
+                f"read_owned on a delta generation (step {step}) is not "
+                f"supported — its shards hold a packed dirty-span "
+                f"payload, not the tensor stream; load() replays the "
+                f"chain, or point at a keyframe step")
         if read_plan is None:
             if ownership == "zero1":
                 from repro.sharding.specs import zero1_ownership
@@ -538,7 +800,13 @@ class FastPersistCheckpointer:
         d = directory if directory is not None else self.path(step)
         if marker is None:
             marker = layout.read_commit_marker(d)
-        manifest, plan, index = self._read_manifest(step, directory)
+        manifest, plan, index, meta = self._read_manifest(step, directory)
+        if (marker or {}).get("delta") or meta.get("delta"):
+            raise NotImplementedError(
+                f"load_tensor on a delta generation (step {step}) is not "
+                f"supported — delta shards hold a packed dirty-span "
+                f"payload with no per-tensor index; load() replays the "
+                f"chain, or point at a keyframe step")
         if index is None or name not in index:
             raise KeyError(f"tensor {name!r} not in the checkpoint index "
                            f"(layout v1 checkpoints have no index — use "

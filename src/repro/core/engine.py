@@ -284,6 +284,14 @@ class FastPersistBackend(CheckpointBackend):
         if arena is not None:
             arena.invalidate()
 
+    def after_commit(self, step, directory, marker, stats):
+        # delta chain bookkeeping (DESIGN.md §9): a save may only serve
+        # as a delta base once its COMMIT actually published — telling
+        # the checkpointer here closes the crash window where a delta
+        # would reference a base that never became visible
+        self._inner.note_committed(step, marker)
+        return None
+
 
 class PipelinedFastPersistBackend(FastPersistBackend):
     """Paper §4.3: same write path, persisted by the engine's helper
@@ -313,6 +321,7 @@ class TieredFastPersistBackend(FastPersistBackend):
                                       max_retries=spec.upload_max_retries)
 
     def after_commit(self, step, directory, marker, stats):
+        super().after_commit(step, directory, marker, stats)
         return self.uploader.enqueue(step, directory, marker)
 
     def close(self):
@@ -650,7 +659,9 @@ class CheckpointEngine:
                 fsync=self.spec.fsync_commit,
                 shards=getattr(stats, "shards", None),
                 volume_roots=roots if volume_dirs else None,
-                volume_dirs=volume_dirs or None)
+                volume_dirs=volume_dirs or None,
+                generation=getattr(stats, "generation", "") or None,
+                delta=getattr(stats, "delta", None))
             layout.publish(staging, final, fsync=self.spec.fsync_commit)
             published = True
             stats.commit_seconds = time.perf_counter() - t0

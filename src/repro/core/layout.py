@@ -39,10 +39,20 @@ from typing import Dict, List, Optional, Sequence
 #: Bump when the on-disk layout changes incompatibly. Readers refuse
 #: directories whose COMMIT declares a NEWER version (forward compat).
 #: v1 = single-directory payloads; v2 = sharded multi-volume layout
-#: (global index + per-volume shard dirs). v1 remains readable: its
+#: (global index + per-volume shard dirs); v3 = incremental DELTA
+#: generations (DESIGN.md §9: the payload is a packed dirty-span
+#: stream, the COMMIT/manifest carry the span table and the base
+#: generation's (step, nonce) identity). Each stamp is the MINIMUM
+#: version that can read the directory: v1 dirs remain readable (their
 #: markers carry no ``shards``/``volume_dirs``, so every check and
-#: shard-path resolution falls back to the primary directory.
-LAYOUT_VERSION = 2
+#: shard-path resolution falls back to the primary directory), and full
+#: keyframes are still stamped v2 so pre-delta readers load them after
+#: a rollback.
+LAYOUT_VERSION = 3
+#: stamp of a full (keyframe / non-delta) sharded checkpoint
+SHARDED_LAYOUT_VERSION = 2
+#: stamp of an incremental delta generation
+DELTA_LAYOUT_VERSION = 3
 
 COMMIT_FILE = "COMMIT"
 MANIFEST_FILE = "manifest.json"
@@ -165,7 +175,9 @@ def write_commit_marker(directory: str, step: int, backend: str,
                         fsync: bool = True,
                         shards: Optional[List[dict]] = None,
                         volume_roots: Optional[Sequence[str]] = None,
-                        volume_dirs: Optional[Dict[str, str]] = None
+                        volume_dirs: Optional[Dict[str, str]] = None,
+                        generation: Optional[str] = None,
+                        delta: Optional[dict] = None
                         ) -> dict:
     """Seal ``directory`` (still at its staging path): checksum the
     manifest, record every payload file's size — and, for the sharded
@@ -173,18 +185,31 @@ def write_commit_marker(directory: str, step: int, backend: str,
     shard directory names — write COMMIT, fsync. This one marker is the
     global commit record for the whole multi-volume checkpoint.
 
-    A checkpoint that references no secondary volume dirs is physically
-    a v1 layout (one directory holds everything), so it is stamped v1:
+    The stamped ``layout_version`` is the MINIMUM version able to read
+    the directory: a delta generation (``delta`` set) is v3, a
+    checkpoint referencing secondary volume dirs is v2, and everything
+    else is physically a v1 layout (one directory holds everything) so
     pre-sharding readers, which refuse markers from a NEWER version,
     can still load it after a rollback. The extra ``shards`` key is
-    additive and ignored by v1 readers."""
+    additive and ignored by v1 readers.
+
+    ``generation`` is the save's random nonce — the identity a later
+    delta's ``delta["base_gen"]`` must match for its chain to be valid
+    (DESIGN.md §9); ``delta`` is the DeltaPlan meta dict of a delta
+    generation (base identity + dirty-span table + per-span CRCs)."""
     marker = {
-        "layout_version": LAYOUT_VERSION if volume_dirs else 1,
+        "layout_version": (DELTA_LAYOUT_VERSION if delta
+                           else SHARDED_LAYOUT_VERSION if volume_dirs
+                           else 1),
         "step": step,
         "backend": backend,
         "manifest_crc32": manifest_crc32(directory),
         "files": payload_files(directory),
     }
+    if generation:
+        marker["generation"] = generation
+    if delta:
+        marker["delta"] = dict(delta)
     if shards:
         marker["shards"] = list(shards)
     if volume_roots is not None:
@@ -214,6 +239,47 @@ def read_commit_marker(directory: str) -> Optional[dict]:
     if marker.get("layout_version", 0) > LAYOUT_VERSION:
         return None            # written by a newer release — don't guess
     return marker
+
+
+def _manifest_meta(directory: str) -> Optional[dict]:
+    """Parsed manifest.json of a step dir, else None (chain helpers'
+    fallback for standalone/legacy saves that carry no COMMIT)."""
+    try:
+        with open(os.path.join(directory, MANIFEST_FILE)) as f:
+            meta = json.load(f)
+    except (OSError, json.JSONDecodeError, ValueError):
+        return None
+    return meta if isinstance(meta, dict) else None
+
+
+def delta_base(directory: str) -> Optional[tuple]:
+    """``(base_step, base_gen)`` the delta generation in ``directory``
+    chains off, or None for keyframes / absent dirs. The COMMIT marker
+    is authoritative; standalone saves (no COMMIT) fall back to the
+    manifest meta. Retention uses this to pin every keyframe (and
+    intermediate delta) a live delta's restore path runs through."""
+    marker = read_commit_marker(directory)
+    if marker is not None:
+        info = marker.get("delta")
+    else:
+        info = (_manifest_meta(directory) or {}).get("delta")
+    if not isinstance(info, dict) or "base_step" not in info:
+        return None
+    return int(info["base_step"]), str(info.get("base_gen", ""))
+
+
+def generation_of(directory: str) -> Optional[str]:
+    """The save-generation nonce of a committed step dir (marker first,
+    manifest-meta fallback), or None when the dir predates generation
+    stamping. Delta chains compare this against their recorded
+    ``base_gen`` to refuse replaying onto a re-saved base."""
+    marker = read_commit_marker(directory)
+    if marker is not None and marker.get("generation"):
+        return str(marker["generation"])
+    meta = _manifest_meta(directory)
+    if meta and meta.get("generation"):
+        return str(meta["generation"])
+    return None
 
 
 def verify_commit(directory: str, deep: bool = True,
@@ -447,6 +513,10 @@ def clean_stale_multi(primary_root: str,
        staging debris and every UNREFERENCED published shard-generation
        dir (orphans from a writer that died between per-volume publish
        and the global COMMIT, or old generations of a re-saved step).
+       DELTA generations (layout v3) stage and publish through these
+       same names, so a writer that crashed between a delta's
+       per-volume publish and its COMMIT leaves orphans this sweep
+       removes identically.
 
     Shard dirs referenced by a committed COMMIT are never touched, so a
     sweep can never strand a loadable step."""

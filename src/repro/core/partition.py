@@ -243,7 +243,8 @@ def make_plan(total_bytes: int, topo: Topology, strategy: str = "replica",
               writers_per_node: int = 2, n_volumes: int = 1,
               volume_roots: Optional[Sequence[str]] = None,
               healthy_volumes: Optional[Sequence[int]] = None,
-              min_free_bytes: int = 0) -> WritePlan:
+              min_free_bytes: int = 0,
+              min_extent_bytes: int = 0) -> WritePlan:
     """Byte-granularity balanced partition over the selected writers.
 
     ``n_volumes`` stripes the shards round-robin across that many
@@ -272,6 +273,12 @@ def make_plan(total_bytes: int, topo: Topology, strategy: str = "replica",
         volume_roots: probe these destinations at plan time.
         healthy_volumes: pre-probed surviving volume indices.
         min_free_bytes: extra free-space headroom the probe demands.
+        min_extent_bytes: trim the writer subset until every extent is
+            at least this long (delta generations: a few-MB packed
+            stream shattered across every DP writer would pay one
+            submission + fsync + shard file per writer for KB-sized
+            extents). 0 keeps the full subset; at least one writer
+            always survives.
 
     Returns:
         a :class:`WritePlan` — one :class:`Extent` per writer with its
@@ -279,6 +286,10 @@ def make_plan(total_bytes: int, topo: Topology, strategy: str = "replica",
         recorded ``degraded`` volume set.
     """
     writers = select_writers(topo, strategy, writers_per_node, total_bytes)
+    if min_extent_bytes > 0:
+        cap = max(1, total_bytes // min_extent_bytes)
+        if cap < len(writers):
+            writers = writers[:cap]
     n = len(writers)
     if volume_roots is not None and healthy_volumes is None:
         n_volumes = len(volume_roots)

@@ -22,14 +22,47 @@ _SCALE_SUFFIX = "#scale"
 _QUANTIZABLE = ("float32", "bfloat16", "float16")
 
 
-def _blockwise(arr: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+def block_amax(arr: np.ndarray) -> np.ndarray:
+    """HOST half of the blockwise scale: per-block absolute maxima of
+    the f32-cast flattened array (zero-padded to a BLOCK multiple). The
+    ``ckpt_pack`` Pallas kernel's amax output is the DEVICE half — same
+    padding rule, same f32 accumulation, so the two agree bitwise on
+    identical inputs (tests assert this)."""
+    flat = np.asarray(arr, np.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = np.pad(flat, (0, pad))
+    return np.abs(flat.reshape(-1, BLOCK)).max(axis=1)
+
+
+def device_block_amax(x) -> np.ndarray:
+    """Per-block amax computed BY the ``ckpt_pack`` kernel (the
+    device-side half this module's docstring promises): feed it to
+    ``_blockwise(arr, amax=...)`` / ``quantize_stream(amax_fn=...)`` to
+    skip the host reduction when the tensor is already on an
+    accelerator."""
+    from repro.kernels import ops
+    _packed, amax = ops.ckpt_pack(x, block=BLOCK)
+    return np.asarray(amax, np.float32)
+
+
+def amax_to_scale(amax: np.ndarray) -> np.ndarray:
+    """Blockwise scale from per-block amax (all-zero blocks get 1.0 so
+    dequantization never divides by / multiplies with 0)."""
+    amax = np.asarray(amax, np.float32)
+    return np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+
+
+def _blockwise(arr: np.ndarray, amax: np.ndarray = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
     flat = arr.astype(np.float32).reshape(-1)
     pad = (-flat.size) % BLOCK
     if pad:
         flat = np.pad(flat, (0, pad))
     blocks = flat.reshape(-1, BLOCK)
-    amax = np.abs(blocks).max(axis=1)
-    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    if amax is None:
+        amax = np.abs(blocks).max(axis=1)
+    scale = amax_to_scale(amax)
     q = np.clip(np.round(blocks / scale[:, None]), -127, 127).astype(np.int8)
     return q.reshape(-1)[:arr.size], scale
 
@@ -46,10 +79,14 @@ def _deblock(q: np.ndarray, scale: np.ndarray, dtype: str) -> np.ndarray:
     return out.astype(np.dtype(dtype))
 
 
-def quantize_stream(manifest: Manifest, buffers: List[np.ndarray]
-                    ) -> Tuple[Manifest, List[np.ndarray]]:
+def quantize_stream(manifest: Manifest, buffers: List[np.ndarray],
+                    amax_fn=None) -> Tuple[Manifest, List[np.ndarray]]:
     """Rewrite (manifest, buffers) with int8+scale record pairs for every
-    quantizable tensor. Small/int tensors pass through unchanged."""
+    quantizable tensor. Small/int tensors pass through unchanged.
+
+    ``amax_fn(values) -> per-block amax`` plugs in the device-side
+    reduction (:func:`device_block_amax`, i.e. the ckpt_pack kernel);
+    None keeps the host reduction."""
     records, out = [], []
     offset = 0
 
@@ -70,7 +107,9 @@ def quantize_stream(manifest: Manifest, buffers: List[np.ndarray]
                     if buf.dtype == np.uint16 else buf
             else:
                 values = buf
-            q, scale = _blockwise(np.asarray(values, np.float32))
+            q, scale = _blockwise(
+                np.asarray(values, np.float32),
+                amax=amax_fn(values) if amax_fn is not None else None)
             push(rec.name + _QUANT_SUFFIX, q, f"int8|{rec.dtype}",
                  rec.shape)
             push(rec.name + _SCALE_SUFFIX, scale, "float32", scale.shape)

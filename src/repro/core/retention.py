@@ -17,9 +17,16 @@ but a step whose upload has not reached its remote COMMIT (queued, in
 flight, or failed) is PINNED: local GC must never delete what may be
 the only durable copy. ``remote_keep_last`` independently bounds the
 remote tier (0 = keep every uploaded step).
+
+Delta chains (DESIGN.md §9): an incremental delta generation is only
+restorable while its base — transitively, its keyframe — exists. The
+keep set is therefore expanded with every chain ancestor of a kept
+step before victims are chosen, so retention never deletes a keyframe
+(or intermediate delta) that a live delta still references.
 """
 from __future__ import annotations
 
+import os
 import threading
 from dataclasses import dataclass
 from typing import Iterable, List, Optional, Sequence
@@ -44,13 +51,34 @@ def _committed_steps(directory: str) -> List[int]:
     return layout.committed_steps(directory, legacy_ok=True)
 
 
+def _chain_ancestors(directory: str, steps: Iterable[int]) -> set:
+    """Transitive delta-base closure: every step some step in ``steps``
+    depends on for restore (delta → base → ... → keyframe)."""
+    closure: set = set()
+    frontier = list(steps)
+    while frontier:
+        s = frontier.pop()
+        base = layout.delta_base(
+            os.path.join(directory, layout.step_dir_name(s)))
+        if base is None:
+            continue
+        bstep = base[0]
+        if bstep not in closure:
+            closure.add(bstep)
+            frontier.append(bstep)
+    return closure
+
+
 def collectable(directory: str, policy: RetentionPolicy,
                 pinned: Iterable[int] = ()) -> List[int]:
     """Steps whose checkpoints may be deleted under ``policy``.
 
     ``pinned`` steps are never collectable regardless of the policy —
     the upload tier pins every step whose remote COMMIT has not landed
-    (deleting it locally could destroy the only durable copy)."""
+    (deleting it locally could destroy the only durable copy). Delta
+    chains pin transitively: every chain ancestor (base deltas and the
+    keyframe) of a kept step is itself kept, so a surviving delta can
+    always be replayed."""
     steps = _committed_steps(directory)
     if not steps:
         return []
@@ -58,6 +86,7 @@ def collectable(directory: str, policy: RetentionPolicy,
     if policy.keep_every:
         keep |= {s for s in steps if s % policy.keep_every == 0}
     keep |= set(pinned)
+    keep |= _chain_ancestors(directory, keep)
     return [s for s in steps if s not in keep]
 
 
@@ -71,9 +100,12 @@ def collect(directory: str, policy: RetentionPolicy,
     ``pinned`` steps are skipped (see :func:`collectable`). Returns the
     deleted steps."""
     victims = collectable(directory, policy, pinned=pinned)
-    for s in victims:
+    # newest-first: a crash mid-sweep must never leave a delta whose
+    # (older) base was already deleted — deleting the newest victim
+    # first keeps every surviving chain replayable at all times
+    for s in sorted(victims, reverse=True):
         layout.delete_step(directory, s, volume_roots)
-    return victims
+    return sorted(victims)
 
 
 class RetentionManager:

@@ -97,7 +97,9 @@ def _to_numpy(leaf) -> np.ndarray:
     return np.ascontiguousarray(portable_view(arr))
 
 
-def serialize(state, arena=None) -> Tuple[Manifest, List[np.ndarray]]:
+def serialize(state, arena=None, track_dirty: bool = False,
+              dirty_block: int = 4096
+              ) -> Tuple[Manifest, List[np.ndarray]]:
     """Flatten a checkpoint state into (manifest, ordered host buffers).
 
     With ``arena`` (a :class:`repro.core.arena.SerializeArena`), buffers
@@ -105,10 +107,16 @@ def serialize(state, arena=None) -> Tuple[Manifest, List[np.ndarray]]:
     the first save allocates, steady-state saves copy device→arena in
     place with zero Python-side allocation (DESIGN.md §6). Without it,
     the original allocate-per-save path runs (one fresh host copy per
-    leaf)."""
+    leaf).
+
+    ``track_dirty`` (arena path only) compares incoming bytes against
+    the arena's resident previous image during the copy and records the
+    dirty spans in ``arena.last_dirty`` — the input to an incremental
+    delta checkpoint (DESIGN.md §9)."""
     leaves, treedef = jax.tree_util.tree_flatten_with_path(state)
     if arena is not None:
-        return arena.serialize(leaves, treedef)
+        return arena.serialize(leaves, treedef, track_dirty=track_dirty,
+                               dirty_block=dirty_block)
     records, buffers = [], []
     offset = 0
     for path, leaf in leaves:

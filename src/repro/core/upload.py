@@ -493,7 +493,10 @@ class UploadManager:
         # (volume, size, crc32) manifest so hydration can verify every
         # byte without the local copy.
         remote_marker = dict(marker)
-        remote_marker["generation"] = gen
+        # the local marker's "generation" key is the SAVE nonce that
+        # delta chains match on — keep it intact and record the
+        # content-derived remote nonce under its own key
+        remote_marker["remote_generation"] = gen
         remote_marker["objects"] = {f["name"]: f["size"] for f in files}
         remote_marker["object_crc32"] = {
             f["name"]: f["crc32"] for f in files if "crc32" in f}
@@ -577,19 +580,40 @@ class UploadManager:
         (enqueued/failed locally) are never pruned. The COMMIT object
         is deleted FIRST — that atomically un-commits the remote
         generation, so a crash mid-prune leaves only unreferenced
-        payload objects, mirroring :func:`layout.delete_step`."""
+        payload objects, mirroring :func:`layout.delete_step`.
+
+        Delta chains pin transitively on the remote tier too: a kept
+        step whose remote COMMIT records a delta keeps its base step
+        (and so on down to the keyframe), else the surviving delta
+        generation could never be hydrated."""
         if keep_last <= 0:
             return []
         steps = remote_steps(self.store)
         pinned = set(self.unuploaded_steps())
-        victims = [s for s in steps[:-keep_last] if s not in pinned]
-        for s in victims:
+        keep = set(steps[-keep_last:]) | pinned
+        frontier, seen = list(keep), set()
+        while frontier:
+            s = frontier.pop()
+            if s in seen:
+                continue
+            seen.add(s)
+            for st, gen in remote_generations(self.store, s):
+                d = read_remote_commit(self.store, st, gen).get("delta")
+                if isinstance(d, dict) and "base_step" in d:
+                    b = int(d["base_step"])
+                    if b not in keep:
+                        keep.add(b)
+                        frontier.append(b)
+        victims = [s for s in steps if s not in keep]
+        # newest-first, so a crash mid-prune never strands a delta
+        # whose (older) base is already gone
+        for s in sorted(victims, reverse=True):
             for st, gen in remote_generations(self.store, s):
                 prefix = remote_prefix(st, gen)
                 self.store.delete(f"{prefix}/{REMOTE_COMMIT}")
                 for key in self.store.list(prefix + "/"):
                     self.store.delete(key)
-        return victims
+        return sorted(victims)
 
 
 # ============================================================ hydration
@@ -632,11 +656,45 @@ def hydrate(store: Union[str, ObjectStore], primary_root: str,
     Returns:
         the hydrated step.
 
+    Delta chains (DESIGN.md §9): when the hydrated step's remote COMMIT
+    records a delta, its base generation is hydrated too — selected by
+    the SAVE nonce the delta pinned (``base_gen``), never by recency —
+    and so on down to the keyframe, so the local directory afterwards
+    holds the complete replayable chain.
+
     Raises:
-        FileNotFoundError: no committed remote generation matches.
+        FileNotFoundError: no committed remote generation matches (or
+            a delta chain's base generation is gone from the store).
         IOError: a downloaded object fails its size or CRC check.
     """
     store = make_store(store)
+    first, commit = _hydrate_one(store, primary_root, step, generation,
+                                 io_config, verify)
+    hops = 0
+    while True:
+        dinfo = commit.get("delta")
+        if not isinstance(dinfo, dict) or "base_step" not in dinfo:
+            return first
+        hops += 1
+        if hops > 10000:
+            raise IOError(
+                f"remote delta chain rooted at step {first} exceeds "
+                f"10000 links — cyclic or corrupt COMMIT metadata")
+        _, commit = _hydrate_one(
+            store, primary_root, int(dinfo["base_step"]), None,
+            io_config, verify,
+            save_generation=dinfo.get("base_gen", ""))
+
+
+def _hydrate_one(store: ObjectStore, primary_root: str,
+                 step: Optional[int], generation: Optional[str],
+                 io_config, verify: bool,
+                 save_generation: Optional[str] = None
+                 ) -> Tuple[int, dict]:
+    """Hydrate exactly ONE remote generation (no chain walking);
+    returns ``(step, remote commit dict)``. ``save_generation`` selects
+    by the local SAVE nonce recorded in the remote COMMIT — how a delta
+    pins its exact base image across re-saves of the same step."""
     gens = remote_generations(store, step)
     if not gens:
         raise FileNotFoundError(
@@ -650,6 +708,18 @@ def hydrate(store: Union[str, ObjectStore], primary_root: str,
                 f"remote generation {generation!r} not found")
         step, generation = matches[-1]
         commit = read_remote_commit(store, step, generation)
+    elif save_generation is not None:
+        found = None
+        for s, g in gens:
+            c = read_remote_commit(store, s, g)
+            if c.get("generation", "") == save_generation:
+                found = (s, g, c)
+        if found is None:
+            raise FileNotFoundError(
+                f"no committed remote generation of step {step} carries "
+                f"save generation {save_generation!r} — the delta "
+                f"chain's base is gone from the object store")
+        step, generation, commit = found
     else:
         step = gens[-1][0]
         # a re-saved step can leave SEVERAL committed generations (the
@@ -711,12 +781,14 @@ def hydrate(store: Union[str, ObjectStore], primary_root: str,
                   for sh in commit.get("shards", [])]
         layout.write_commit_marker(
             staging, step, commit.get("backend", "fastpersist"),
-            shards=shards or None)
+            shards=shards or None,
+            generation=commit.get("generation") or None,
+            delta=commit.get("delta") or None)
         layout.publish(staging, final)
     except BaseException:
         shutil.rmtree(staging, ignore_errors=True)
         raise
-    return step
+    return step, commit
 
 
 def _local_candidates(primary_root: str, final: str,

@@ -37,6 +37,16 @@ def main():
                          "(overrides --ckpt-mode/--pipeline); see "
                          "repro.core.engine.available_backends()")
     ap.add_argument("--every", type=int, default=1)
+    ap.add_argument("--keyframe-every", type=int, default=1,
+                    help="incremental delta checkpoints: every Nth save "
+                         "is a full keyframe, the rest write only the "
+                         "byte ranges that changed since the previous "
+                         "save (1 = every save is full). Needs the "
+                         "serialize arena (incompatible with --no-arena)")
+    ap.add_argument("--delta-quantize", action="store_true",
+                    help="int8-quantize delta spans (lossy; blockwise "
+                         "absmax scales, DESIGN.md §9) — keyframes stay "
+                         "full-precision")
     ap.add_argument("--pipeline", action="store_true", default=True)
     ap.add_argument("--no-pipeline", dest="pipeline", action="store_false")
     ap.add_argument("--writers", default="auto",
@@ -97,10 +107,12 @@ def main():
             volumes=(args.volumes.split(",") if args.volumes else None),
             restore_readers=restore_readers,
             upload=args.upload_store,
+            keyframe_every=args.keyframe_every,
             fp=FastPersistConfig(
                 strategy=args.writers,
                 topology=Topology(dp_degree=args.dp, ranks_per_node=4),
                 arena=args.arena,
+                delta_quantize=args.delta_quantize,
                 writer=WriterConfig(backend=args.io_backend,
                                     queue_depth=args.queue_depth)))
 

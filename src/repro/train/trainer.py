@@ -57,6 +57,18 @@ class CheckpointPolicy:
     #: and ``Trainer.restore`` can hydrate from it (``tier="remote"``,
     #: or automatically when the local directory is empty/lost).
     upload: Optional[object] = None
+    #: incremental delta checkpoints (DESIGN.md §9): every Nth save is
+    #: a full keyframe, the rest write only the dirty byte spans since
+    #: the previous save. 1 (default) = every save is full. Requires
+    #: the serialize arena; copied into ``fp.keyframe_every`` unless
+    #: the FastPersistConfig already sets it.
+    keyframe_every: int = 1
+
+    def __post_init__(self):
+        if self.keyframe_every > 1 and self.fp.keyframe_every == 1:
+            import dataclasses
+            self.fp = dataclasses.replace(self.fp,
+                                          keyframe_every=self.keyframe_every)
 
     def backend_name(self) -> str:
         """Map the (legacy) mode/pipeline pair onto a registry key."""

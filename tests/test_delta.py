@@ -1,0 +1,474 @@
+"""Incremental delta checkpoints (DESIGN.md §9): dirty-range tracking,
+keyframe+delta generations, chain-aware restore/retention/upload."""
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import layout
+from repro.core.arena import SerializeArena
+from repro.core.checkpointer import (FastPersistCheckpointer,
+                                     FastPersistConfig)
+from repro.core.delta import (DIRTY_BLOCK, DeltaPlan, DeltaSpan,
+                              apply_delta, build_delta, decode_span,
+                              dirty_byte_spans, encode_span)
+from repro.core.engine import CheckpointEngine, CheckpointSpec
+from repro.core.retention import RetentionPolicy, collect, collectable
+from repro.core.serializer import ByteStreamView, serialize
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((300, 64)).astype(np.float32),
+            "b": np.zeros(4 * DIRTY_BLOCK, np.float32),
+            "ints": np.arange(7, dtype=np.int32)}
+
+
+def _touch(state, step):
+    """Sparse in-place update: one row of w, one element of b."""
+    state["w"][step % 300, :] += 1.0
+    state["b"][(step * 3) % state["b"].size] = float(step + 1)
+
+
+def _replay(seed, n_steps):
+    """Reference state after n_steps _touch updates."""
+    s = _state(seed)
+    for i in range(n_steps):
+        _touch(s, i)
+    return s
+
+
+def _assert_equal(got, ref):
+    for k in ref:
+        assert np.array_equal(np.asarray(got[k]), ref[k]), k
+
+
+# ------------------------------------------------------- dirty tracking
+def test_dirty_byte_spans_blockwise_coalescing():
+    n = 10 * DIRTY_BLOCK + 100          # non-divisible tail
+    a = np.zeros(n, np.uint8)
+    b = a.copy()
+    b[0] = 1                             # block 0
+    b[3 * DIRTY_BLOCK + 5] = 1           # block 3
+    b[4 * DIRTY_BLOCK] = 1               # block 4 (adjacent → coalesce)
+    b[10 * DIRTY_BLOCK + 50] = 1         # tail block, clipped to n
+    assert dirty_byte_spans(a, b) == [
+        (0, DIRTY_BLOCK),
+        (3 * DIRTY_BLOCK, 2 * DIRTY_BLOCK),
+        (10 * DIRTY_BLOCK, 100)]
+    assert dirty_byte_spans(a, a) == []
+    assert dirty_byte_spans(np.zeros(0, np.uint8),
+                            np.zeros(0, np.uint8)) == []
+    with pytest.raises(ValueError, match="size mismatch"):
+        dirty_byte_spans(np.zeros(8, np.uint8), np.zeros(9, np.uint8))
+
+
+def test_arena_tracks_dirty_ranges_across_saves():
+    arena = SerializeArena()
+    state = _state()
+    serialize(state, arena=arena, track_dirty=True)
+    # first fill: no resident baseline → tracking reports None
+    assert arena.last_dirty is None
+    manifest, _ = serialize(state, arena=arena, track_dirty=True)
+    assert arena.last_dirty == [] and arena.last_dirty_bytes == 0
+    _touch(state, 0)
+    serialize(state, arena=arena, track_dirty=True)
+    dirty = arena.last_dirty
+    assert dirty and arena.last_dirty_bytes == sum(l for _, l in dirty)
+    # every span must stay inside one record (uniform dtype per span)
+    recs = sorted(manifest.records, key=lambda r: r.offset)
+    for off, length in dirty:
+        assert any(r.offset <= off and off + length <= r.offset + r.nbytes
+                   for r in recs), (off, length)
+
+
+def test_build_and_apply_delta_roundtrip():
+    arena = SerializeArena()
+    state = _state()
+    manifest, buffers = serialize(state, arena=arena, track_dirty=True)
+    base = ByteStreamView(buffers).read(0, manifest.total_bytes).tobytes()
+    _touch(state, 0)
+    manifest, buffers = serialize(state, arena=arena, track_dirty=True)
+    view = ByteStreamView(buffers)
+    plan, payloads = build_delta(manifest.records, view,
+                                 arena.last_dirty, base_step=0,
+                                 base_gen="aa", gen="bb")
+    assert plan.dirty_bytes == sum(l for _, l in arena.last_dirty)
+    assert plan.packed_bytes == sum(p.nbytes for p in payloads)
+    packed = b"".join(bytes(p) for p in payloads)
+    dest = memoryview(bytearray(base))
+    applied = apply_delta(dest, plan, packed)
+    assert applied == plan.dirty_bytes
+    assert bytes(dest) == view.read(0, manifest.total_bytes).tobytes()
+
+
+def test_delta_plan_meta_roundtrip_tolerates_extras():
+    plan = DeltaPlan(base_step=3, base_gen="ab", gen="cd",
+                     stream_bytes=100,
+                     spans=[DeltaSpan(0, 10, 0, 10, "raw", 123, "float32")])
+    meta = plan.to_meta()
+    meta["n_spans"] = 1                 # SaveStats/marker rider key
+    back = DeltaPlan.from_meta(meta)
+    assert back == plan and back.packed_bytes == 10
+
+
+def test_encode_decode_span_q8_and_raw():
+    rng = np.random.default_rng(3)
+    vals = rng.standard_normal(2 * 4096).astype(np.float32)
+    raw = vals.tobytes()
+    payload, enc = encode_span(raw, "float32", quantize=True)
+    assert enc == "q8" and payload.nbytes < len(raw)
+    out = np.frombuffer(decode_span(payload, "q8", "float32", len(raw)),
+                        np.float32)
+    assert np.max(np.abs(out - vals)) <= np.max(np.abs(vals)) / 127 + 1e-7
+    # ints never quantize; odd-size spans fall back to raw
+    p2, e2 = encode_span(b"\x01\x02\x03", "int32", quantize=True)
+    assert e2 == "raw" and bytes(p2) == b"\x01\x02\x03"
+    assert decode_span(p2, "raw", "int32", 3) == b"\x01\x02\x03"
+    with pytest.raises(IOError, match="corruption"):
+        decode_span(p2, "raw", "int32", 4)
+
+
+# --------------------------------------------------- save/restore paths
+def test_keyframe_cadence_and_bit_exact_restore(tmp_path):
+    ck = FastPersistCheckpointer(str(tmp_path),
+                                 FastPersistConfig(keyframe_every=4))
+    state = _state()
+    stats = []
+    for step in range(6):
+        _touch(state, step)
+        stats.append(ck.save(state, step))
+    # cadence K D D D K D
+    assert [s.delta is None for s in stats] == \
+        [True, False, False, False, True, False]
+    full = stats[0].total_bytes
+    for s in stats:
+        if s.delta is not None:
+            # a delta writes ONLY the packed dirty spans
+            assert s.total_bytes == s.delta["packed_bytes"]
+            assert s.total_bytes == sum(
+                w.bytes_written for w in s.per_writer)
+            assert s.total_bytes < full / 5
+            assert s.delta["stream_bytes"] == full
+    for step in range(6):
+        got, m = ck.load(step, like=state)
+        _assert_equal(got, _replay(0, step + 1))
+        assert m.total_bytes == full
+
+
+def test_delta_restore_crc_verified_vs_full(tmp_path):
+    """Keyframe+delta restore must be byte-identical to a full save of
+    the same state, and survive verify=True CRC checks throughout."""
+    d1, d2 = str(tmp_path / "delta"), str(tmp_path / "full")
+    ck = FastPersistCheckpointer(d1, FastPersistConfig(keyframe_every=8))
+    full = FastPersistCheckpointer(d2, FastPersistConfig())
+    state = _state()
+    for step in range(3):
+        _touch(state, step)
+        ck.save(state, step)
+        full.save(state, step)
+    a, _ = ck.load(2, like=state, verify=True)
+    b, _ = full.load(2, like=state, verify=True)
+    for k in a:
+        assert np.array_equal(np.asarray(a[k]), np.asarray(b[k])), k
+
+
+def test_engine_marker_carries_generation_and_delta(tmp_path):
+    spec = CheckpointSpec(directory=str(tmp_path), backend="fastpersist",
+                          fp=FastPersistConfig(keyframe_every=3))
+    state = _state()
+    with CheckpointEngine(spec) as eng:
+        for step in range(4):            # K D D K
+            _touch(state, step)
+            st = eng.save(state, step).wait()
+            d = os.path.join(str(tmp_path), layout.step_dir_name(step))
+            m = layout.read_commit_marker(d)
+            assert m["generation"] == st.generation
+            assert layout.generation_of(d) == st.generation
+            if st.delta is None:
+                assert "delta" not in m
+                assert layout.delta_base(d) is None
+                assert m["layout_version"] == 1    # unstriped keyframe
+            else:
+                assert m["delta"]["spans"]          # full table on COMMIT
+                assert layout.delta_base(d) == (
+                    st.delta["base_step"], st.delta["base_gen"])
+                assert m["layout_version"] == layout.DELTA_LAYOUT_VERSION
+        assert [layout.delta_base(os.path.join(
+            str(tmp_path), layout.step_dir_name(s))) is not None
+            for s in range(4)] == [False, True, True, False]
+
+
+def test_engine_parallel_delta_load(tmp_path):
+    spec = CheckpointSpec(directory=str(tmp_path), backend="fastpersist",
+                          fp=FastPersistConfig(keyframe_every=4))
+    state = _state()
+    with CheckpointEngine(spec) as eng:
+        for step in range(4):
+            _touch(state, step)
+            eng.save(state, step).wait()
+        got, _ = eng.load(step=3, like=state, parallel=2)
+        _assert_equal(got, _replay(0, 4))
+        got, _ = eng.load(step=3, like=state)   # sequential agrees
+        _assert_equal(got, _replay(0, 4))
+
+
+def test_delta_corruption_detected(tmp_path):
+    ck = FastPersistCheckpointer(str(tmp_path),
+                                 FastPersistConfig(keyframe_every=4))
+    state = _state()
+    for step in range(2):
+        _touch(state, step)
+        ck.save(state, step)
+    shard = os.path.join(ck.path(1), "shard_000.bin")
+    with open(shard, "r+b") as f:
+        f.seek(10)
+        b = f.read(1)
+        f.seek(10)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(IOError, match="corruption"):
+        ck.load(1, like=state)
+    ck.load(1, like=state, verify=False)    # explicit escape hatch
+
+
+def test_base_generation_mismatch_refused(tmp_path):
+    ck = FastPersistCheckpointer(str(tmp_path),
+                                 FastPersistConfig(keyframe_every=4))
+    state = _state()
+    for step in range(2):
+        _touch(state, step)
+        ck.save(state, step)
+    # re-save the base out of band: new generation nonce → the delta's
+    # chain now points at an image that no longer exists
+    ck2 = FastPersistCheckpointer(str(tmp_path), FastPersistConfig())
+    ck2.save(_state(seed=9), 0)
+    with pytest.raises(layout.TornCheckpointError, match="re-saved"):
+        ck.load(1, like=state)
+
+
+def test_missing_base_breaks_chain(tmp_path):
+    ck = FastPersistCheckpointer(str(tmp_path),
+                                 FastPersistConfig(keyframe_every=4))
+    state = _state()
+    for step in range(2):
+        _touch(state, step)
+        ck.save(state, step)
+    shutil.rmtree(ck.path(0))
+    with pytest.raises(layout.TornCheckpointError, match="missing"):
+        ck.load(1, like=state)
+
+
+def test_partial_read_apis_refuse_delta_steps(tmp_path):
+    spec = CheckpointSpec(directory=str(tmp_path), backend="fastpersist",
+                          fp=FastPersistConfig(keyframe_every=4))
+    state = _state()
+    with CheckpointEngine(spec) as eng:
+        for step in range(2):
+            _touch(state, step)
+            eng.save(state, step).wait()
+        with pytest.raises(NotImplementedError):
+            eng.load_tensor("w", step=1)
+        with pytest.raises(NotImplementedError):
+            eng.load_owned(0, 2, step=1)
+        # keyframes keep full partial-read support
+        assert eng.load_tensor("ints", step=0) is not None
+
+
+def test_quantized_delta_spans(tmp_path):
+    ck = FastPersistCheckpointer(
+        str(tmp_path), FastPersistConfig(keyframe_every=4,
+                                         delta_quantize=True))
+    state = _state()
+    _touch(state, 0)
+    ck.save(state, 0)
+    # touch enough float bytes that q8 actually wins (small spans stay raw)
+    state["b"][:] = np.linspace(0.0, 1.0, state["b"].size,
+                                dtype=np.float32)
+    s = ck.save(state, 1)
+    assert s.delta is not None
+    assert any(row[4] == "q8" for row in s.delta["spans"])
+    assert s.delta["packed_bytes"] < s.delta["dirty_bytes"]
+    got, _ = ck.load(1, like=state)
+    # lossy but bounded: blockwise int8 absmax error
+    err = np.max(np.abs(np.asarray(got["b"]) - state["b"]))
+    assert err <= np.max(np.abs(state["b"])) / 127 + 1e-7
+    assert np.array_equal(np.asarray(got["ints"]), state["ints"])
+
+
+def test_multi_volume_delta_trims_writers(tmp_path):
+    vols = [str(tmp_path / f"vol{i}") for i in range(3)]
+    spec = CheckpointSpec(directory=str(tmp_path / "primary"),
+                          backend="fastpersist", volumes=vols,
+                          fp=FastPersistConfig(keyframe_every=4))
+    state = _state()
+    with CheckpointEngine(spec) as eng:
+        for step in range(2):
+            _touch(state, step)
+            st = eng.save(state, step).wait()
+        # a KB-scale delta must not shatter into per-volume KB extents
+        assert st.delta is not None and st.n_writers == 1
+        got, _ = eng.load(step=1, like=state)
+        _assert_equal(got, _replay(0, 2))
+
+
+# ---------------------------------------------------- retention + tiers
+def test_retention_pins_delta_chain(tmp_path):
+    spec = CheckpointSpec(directory=str(tmp_path), backend="fastpersist",
+                          fp=FastPersistConfig(keyframe_every=4))
+    state = _state()
+    with CheckpointEngine(spec) as eng:
+        for step in range(6):            # K D D D K D
+            _touch(state, step)
+            eng.save(state, step).wait()
+        # naive keep={5}; 5 chains on keyframe 4 → 4 pinned
+        assert collectable(str(tmp_path), RetentionPolicy(keep_last=1)) \
+            == [0, 1, 2, 3]
+        # pinning a mid-chain delta pins its whole ancestry
+        assert collectable(str(tmp_path), RetentionPolicy(keep_last=1),
+                           pinned=[3]) == []
+        deleted = collect(str(tmp_path), RetentionPolicy(keep_last=1),
+                          eng.volume_roots())
+        assert deleted == [0, 1, 2, 3]
+        got, _ = eng.load(step=5, like=state)
+        _assert_equal(got, _replay(0, 6))
+
+
+def test_tiered_wipe_and_remote_chain_hydration(tmp_path):
+    root, bucket = str(tmp_path / "local"), str(tmp_path / "bucket")
+    spec = CheckpointSpec(directory=root, backend="fastpersist-tiered",
+                          fp=FastPersistConfig(keyframe_every=4),
+                          upload_store=bucket)
+    state = _state()
+    with CheckpointEngine(spec) as eng:
+        for step in range(4):
+            _touch(state, step)
+            eng.save(state, step).wait()
+        eng.wait_uploaded()
+    shutil.rmtree(root)                 # local tier lost entirely
+    with CheckpointEngine(spec) as eng2:
+        got, _ = eng2.load(step=3, like=state, tier="remote")
+        _assert_equal(got, _replay(0, 4))
+        # the WHOLE chain was hydrated and recommitted locally, with
+        # the save nonces intact so the chain stays resolvable
+        for s in range(4):
+            d = os.path.join(root, layout.step_dir_name(s))
+            assert layout.read_commit_marker(d) is not None
+            assert layout.generation_of(d)
+        got, _ = eng2.load(step=3, like=state)   # now fully local
+        _assert_equal(got, _replay(0, 4))
+
+
+def test_remote_prune_pins_chain_bases(tmp_path):
+    from repro.core.upload import remote_steps
+    root, bucket = str(tmp_path / "local"), str(tmp_path / "bucket")
+    spec = CheckpointSpec(directory=root, backend="fastpersist-tiered",
+                          fp=FastPersistConfig(keyframe_every=4),
+                          upload_store=bucket)
+    state = _state()
+    with CheckpointEngine(spec) as eng:
+        for step in range(6):            # K D D D K D
+            _touch(state, step)
+            eng.save(state, step).wait()
+        eng.wait_uploaded()
+        mgr = eng.upload_manager
+        victims = mgr.prune_remote(keep_last=1)
+        # keep {5} → its keyframe 4 is pinned transitively
+        assert victims == [0, 1, 2, 3]
+        assert remote_steps(mgr.store) == [4, 5]
+    shutil.rmtree(root)
+    with CheckpointEngine(spec) as eng2:
+        got, _ = eng2.load(like=state, tier="remote")
+        _assert_equal(got, _replay(0, 6))
+
+
+# -------------------------------------------- crash injection + sweeps
+def test_crash_between_delta_write_and_commit(tmp_path, monkeypatch):
+    vols = [str(tmp_path / "vol0"), str(tmp_path / "vol1")]
+    primary = str(tmp_path / "primary")
+    spec = CheckpointSpec(directory=primary, backend="fastpersist",
+                          volumes=vols,
+                          fp=FastPersistConfig(keyframe_every=4))
+    state = _state()
+    eng = CheckpointEngine(spec)
+    _touch(state, 0)
+    eng.save(state, 0).wait()
+
+    import repro.core.engine as engine_mod
+    real = layout.write_commit_marker
+
+    def boom(*a, **kw):
+        raise RuntimeError("injected crash before COMMIT")
+    monkeypatch.setattr(engine_mod.layout, "write_commit_marker", boom)
+    _touch(state, 1)
+    with pytest.raises(RuntimeError, match="injected"):
+        eng.save(state, 1).wait()
+    monkeypatch.setattr(engine_mod.layout, "write_commit_marker", real)
+    # the failed delta never became visible; the keyframe still loads
+    assert eng.latest_step() == 0
+    got, _ = eng.load(like=state)
+    _assert_equal(got, _replay(0, 1))
+    # and the NEXT save works (chain state reset: step 1 re-saves fine)
+    _touch(state, 1)
+    ref = {k: v.copy() for k, v in state.items()}
+    eng.save(state, 1).wait()
+    got, _ = eng.load(step=1, like=state)
+    _assert_equal(got, ref)
+    eng.close()
+
+
+def test_startup_sweep_clears_orphaned_delta_staging(tmp_path):
+    """SIGKILL debris: staging .tmp dirs + unreferenced generation shard
+    dirs from a died-mid-delta writer are swept on engine start; the
+    committed chain stays intact."""
+    vols = [str(tmp_path / "vol0"), str(tmp_path / "vol1")]
+    primary = str(tmp_path / "primary")
+    spec = CheckpointSpec(directory=primary, backend="fastpersist",
+                          volumes=vols,
+                          fp=FastPersistConfig(keyframe_every=4))
+    state = _state()
+    with CheckpointEngine(spec) as eng:
+        for step in range(2):
+            _touch(state, step)
+            eng.save(state, step).wait()
+    # simulate a writer killed between delta payload publish and COMMIT
+    debris = [
+        os.path.join(primary, layout.staging_dir_name(2)),
+        os.path.join(vols[1], layout.shard_staging_dir_name(2, "dead")),
+        os.path.join(vols[1], layout.shard_dir_name(2, "dead")),
+    ]
+    for d in debris:
+        os.makedirs(d)
+        with open(os.path.join(d, "shard_000.bin"), "wb") as f:
+            f.write(b"torn delta payload")
+    with CheckpointEngine(spec) as eng2:
+        for d in debris:
+            assert not os.path.exists(d), d
+        assert eng2.latest_step() == 1
+        got, _ = eng2.load(like=state)
+        _assert_equal(got, _replay(0, 2))
+
+
+# ------------------------------------------------------- config surface
+def test_policy_maps_keyframe_every_into_fp():
+    from repro.train.trainer import CheckpointPolicy
+    pol = CheckpointPolicy(directory="/tmp/x", keyframe_every=5)
+    assert pol.fp.keyframe_every == 5
+    # explicit fp setting wins over the policy default
+    pol2 = CheckpointPolicy(directory="/tmp/x", keyframe_every=1,
+                            fp=FastPersistConfig(keyframe_every=3))
+    assert pol2.fp.keyframe_every == 3
+
+
+def test_delta_disabled_paths_stay_full(tmp_path):
+    # quantize and single_file are incompatible with deltas: saves
+    # silently stay full instead of failing
+    for kw in ({"quantize": True}, {"single_file": True}, {"arena": False}):
+        d = str(tmp_path / ("-".join(sorted(kw))))
+        ck = FastPersistCheckpointer(
+            d, FastPersistConfig(keyframe_every=4, **kw))
+        state = _state()
+        for step in range(2):
+            _touch(state, step)
+            s = ck.save(state, step)
+            assert s.delta is None, kw

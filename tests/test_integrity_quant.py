@@ -89,3 +89,78 @@ def test_quantized_extras_survive(tmp_path):
     _, mf = fp.load(5)
     assert mf.extras["step"] == 5
     assert mf.extras["data"]["position"] == 9
+
+
+# --------------------------- blockwise scale: device/host agreement
+def test_kernel_amax_matches_host_blockwise():
+    """The ckpt_pack Pallas kernel's amax output IS the device half of
+    quant.py's blockwise scale: same padding rule, same f32
+    accumulation, so it must agree with the host reduction."""
+    from repro.core.quant import amax_to_scale, block_amax, \
+        device_block_amax
+    k = jax.random.PRNGKey(42)
+    for shape, dtype in [((300, 64), jnp.float32),
+                         ((2, BLOCK), jnp.bfloat16),
+                         ((3 * BLOCK + 17,), jnp.float32),
+                         ((BLOCK,), jnp.float16)]:
+        x = jax.random.normal(k, shape, dtype)
+        host = block_amax(np.asarray(x))
+        dev = device_block_amax(x)
+        assert dev.shape == host.shape
+        np.testing.assert_allclose(dev, host, rtol=1e-6)
+        np.testing.assert_allclose(amax_to_scale(dev),
+                                   amax_to_scale(host), rtol=1e-6)
+
+
+def test_quantize_stream_accepts_device_amax(tmp_path):
+    """quantize_stream(amax_fn=device_block_amax) must produce the same
+    bytes as the host reduction (the kernel replaces, not changes, the
+    math)."""
+    from repro.core.quant import device_block_amax, quantize_stream
+    from repro.core.serializer import serialize
+    state = _state()
+    m1, b1 = serialize(state)
+    m2, b2 = serialize(state)
+    mh, bh = quantize_stream(m1, b1)
+    md, bd = quantize_stream(m2, b2, amax_fn=device_block_amax)
+    assert [r.name for r in mh.records] == [r.name for r in md.records]
+    for rh, h, d in zip(mh.records, bh, bd):
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(d),
+                                      err_msg=rh.name)
+
+
+# ------------------------------------ blockwise quant edge cases
+def test_quant_bf16_roundtrip():
+    import ml_dtypes
+    rng = np.random.default_rng(7)
+    vals = rng.standard_normal(BLOCK + 100).astype(ml_dtypes.bfloat16)
+    q, scale = _blockwise(np.asarray(vals, np.float32))
+    out = _deblock(q, scale, "bfloat16")
+    assert out.dtype == ml_dtypes.bfloat16 and out.shape == vals.shape
+    err = np.abs(out.astype(np.float32) - vals.astype(np.float32))
+    bound = np.max(np.abs(vals.astype(np.float32))) / 127
+    # quant error bound + one bf16 ulp of slack
+    assert np.max(err) <= bound + 0.02 * max(bound, 1.0)
+
+
+def test_quant_size_not_divisible_by_block():
+    rng = np.random.default_rng(8)
+    n = 2 * BLOCK + 123                   # padded tail block
+    vals = rng.standard_normal(n).astype(np.float32)
+    q, scale = _blockwise(vals)
+    assert q.size == n                    # padding never leaks out
+    assert scale.size == 3
+    out = _deblock(q, scale, "float32")
+    assert out.shape == vals.shape
+    assert np.max(np.abs(out - vals)) <= np.max(np.abs(vals)) / 127 + 1e-7
+
+
+def test_quant_all_zero_block_scale_one():
+    vals = np.zeros(2 * BLOCK, np.float32)
+    vals[BLOCK:] = 3.0                    # block 0 all-zero, block 1 not
+    q, scale = _blockwise(vals)
+    assert scale[0] == 1.0                # no divide-by-zero sentinel
+    assert np.all(q[:BLOCK] == 0)
+    out = _deblock(q, scale, "float32")
+    np.testing.assert_array_equal(out[:BLOCK], 0.0)   # zeros exact
+    np.testing.assert_allclose(out[BLOCK:], 3.0, rtol=1e-2)

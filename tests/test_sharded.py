@@ -141,7 +141,7 @@ def test_striped_checkpoint_declares_layout_v2(tmp_path):
     d = prim / layout.step_dir_name(1)
     meta = json.loads((d / layout.MANIFEST_FILE).read_text())
     marker = json.loads((d / layout.COMMIT_FILE).read_text())
-    assert meta["layout_version"] == layout.LAYOUT_VERSION == 2
+    assert meta["layout_version"] == layout.SHARDED_LAYOUT_VERSION == 2
     assert marker["layout_version"] == 2
     assert marker["volume_dirs"]
 
