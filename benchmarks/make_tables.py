@@ -17,6 +17,7 @@ FIG8_JSON = "experiments/fig8.json"
 FIG10_JSON = "experiments/fig10.json"
 FIG13_JSON = "experiments/fig13.json"
 FIG_DELTA_JSON = "experiments/fig_delta.json"
+FIG_SNAPSHOT_JSON = "experiments/fig_snapshot.json"
 
 
 def fmt(x, digits=3):
@@ -213,9 +214,44 @@ def ckpt_delta_table():
               f"{c['save_ms_delta']} | {c['save_x']} | {ok} |")
 
 
+def ckpt_snapshot_table():
+    """§Chunked snapshots + device dirty masks: fig_snapshot
+    step-boundary stall and device→host traffic cells (DESIGN.md §10)."""
+    if not os.path.exists(FIG_SNAPSHOT_JSON):
+        return
+    with open(FIG_SNAPSHOT_JSON) as f:
+        fs = json.load(f)
+    print("\n### Chunked snapshot pipeline + device dirty masks "
+          "(measured on this host)\n")
+    print(f"{fs.get('stall_mb', fs['mb'])} MiB state for the stall sweep "
+          f"(emulated {fs.get('emu_link_gbps', '?')} GB/s device link; "
+          f"{fs.get('dirty_mb', fs['mb'])} MiB for the dirty sweep), "
+          f"{fs['steps']} steady-state saves, "
+          f"compute window {fs.get('compute_window_ms', '?')} ms "
+          f"(prime copy {fs.get('prime_copy_ms', '?')} ms, write "
+          f"{fs.get('prime_write_ms', '?')} ms); default-chunk stall "
+          f"reduction {fs.get('default_chunk_stall_x', '?')}x, sparse "
+          f"PCIe ratio {fs.get('sparse_pcie_x', '?')}x "
+          f"— verdict: {fs.get('verdict', '?')}\n")
+    print("| chunk MiB | stall ms | stall x | bit-exact |")
+    print("|---|---|---|---|")
+    for c in fs.get("chunk_cells", []):
+        label = "monolithic" if c["chunk_mb"] == 0 else c["chunk_mb"]
+        print(f"| {label} | {c['stall_ms']} | "
+              f"{c.get('stall_x', '—')} | {c['ok']} |")
+    print("\n| dirty frac | d2h device | d2h host | dirty bytes | "
+          "pcie x | host x | bit-exact |")
+    print("|---|---|---|---|---|---|---|")
+    for c in fs.get("dirty_cells", []):
+        print(f"| {c['dirty_frac']} | {c['d2h_device']} | "
+              f"{c['d2h_host']} | {c['dirty_bytes']} | {c['pcie_x']} | "
+              f"{c['host_x']} | {c['ok']} |")
+
+
 if __name__ == "__main__":
     main()
     ckpt_write_tables()
     ckpt_restore_table()
     ckpt_tiered_table()
     ckpt_delta_table()
+    ckpt_snapshot_table()

@@ -37,6 +37,8 @@ the NEXT load on the same arena; copy them (``jnp.array`` /
 """
 from __future__ import annotations
 
+import threading
+import time
 from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -47,12 +49,124 @@ from repro.core.writer import aligned_buffer
 
 PAGE = 4096
 
+#: dtypes the device-dirty snapshot path handles (the Pallas pack kernel
+#: is bit-preserving for these at scale=1; everything else host-compares)
+_DEV_DTYPES = ("float32", "bfloat16", "float16")
+
 
 def _host_array(leaf) -> np.ndarray:
     """Device→host view of one leaf in the shared on-stream layout
     (serializer.portable_view), ndim >= 1. No copy unless the source is
     non-contiguous or lives on an accelerator."""
     return np.atleast_1d(portable_view(np.asarray(leaf)))
+
+
+class _LeafBytes:
+    """Lazy byte-range source over one leaf, in on-stream layout.
+
+    The chunked snapshot path (DESIGN.md §10) pulls a record's bytes in
+    pieces. For device (non-numpy) arrays each piece is sliced on device
+    first, so only that piece's bytes cross PCIe per call — the D2H
+    itself is chunk-granular, not just the staging copy. Numpy leaves
+    (and unsliceable hosts) fall back to one lazy full-record view."""
+
+    def __init__(self, leaf, nbytes: int):
+        self._leaf = leaf
+        self._n = int(nbytes)
+        self._host: Optional[np.ndarray] = None
+        self._flat = None
+        self._isz = 0
+        if not isinstance(leaf, np.ndarray) and hasattr(leaf, "dtype") \
+                and callable(getattr(leaf, "reshape", None)):
+            try:
+                self._flat = leaf.reshape(-1)
+                self._isz = np.dtype(str(leaf.dtype)).itemsize
+            except Exception:
+                self._flat = None
+
+    def range(self, lo: int, hi: int) -> np.ndarray:
+        """uint8 view/copy of stream bytes [lo, hi) of this leaf."""
+        partial = not (lo == 0 and hi == self._n)
+        if (self._flat is not None and partial and self._isz
+                and lo % self._isz == 0 and hi % self._isz == 0):
+            piece = _host_array(self._flat[lo // self._isz:hi // self._isz])
+            return np.ascontiguousarray(piece).reshape(-1).view(np.uint8)
+        if self._host is None:
+            self._host = _host_array(self._leaf).reshape(-1).view(np.uint8)
+        return self._host[lo:hi]
+
+
+class SnapshotProgress:
+    """Byte watermark of an in-flight chunked device→arena snapshot.
+
+    The fill worker ``advance()``s the watermark as each piece lands (in
+    stream order, so a single monotonic counter is the whole "which
+    chunks are filled" state); gated writer segments ``wait_until()``
+    their bytes are covered before consuming them. A fill failure parks
+    the exception here and re-raises at EVERY wait site — writers abort,
+    the save raises, and the engine never reaches COMMIT (the §10
+    crash-safety rule)."""
+
+    def __init__(self, total: int, chunk_bytes: int):
+        self.total = int(total)
+        self.chunk_bytes = max(int(chunk_bytes), 1)
+        self.n_chunks = max(1, -(-self.total // self.chunk_bytes))
+        #: fill wall time, stamped when the fill worker finishes
+        self.seconds = 0.0
+        self._cond = threading.Condition()
+        self._filled = 0
+        self._exc: Optional[BaseException] = None
+        self._done = False
+
+    @property
+    def filled(self) -> int:
+        return self._filled
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    @property
+    def failed(self) -> bool:
+        return self._exc is not None
+
+    def advance(self, watermark: int):
+        """Raise the filled-bytes watermark (monotonic; stream order)."""
+        with self._cond:
+            if watermark > self._filled:
+                self._filled = int(watermark)
+                self._cond.notify_all()
+
+    def finish(self):
+        with self._cond:
+            self._filled = self.total
+            self._done = True
+            self._cond.notify_all()
+
+    def fail(self, exc: BaseException):
+        with self._cond:
+            self._exc = exc
+            self._done = True
+            self._cond.notify_all()
+
+    def wait_until(self, watermark: int):
+        """Block until ``watermark`` stream bytes are staged; re-raises
+        the fill worker's exception if the snapshot died."""
+        watermark = min(int(watermark), self.total)
+        with self._cond:
+            while (self._filled < watermark and self._exc is None
+                   and not self._done):
+                self._cond.wait()
+            if self._exc is not None:
+                raise self._exc
+
+    def wait_done(self):
+        """Block until the whole snapshot landed (or failed)."""
+        with self._cond:
+            while not self._done:
+                self._cond.wait()
+            if self._exc is not None:
+                raise self._exc
 
 
 class SerializeArena:
@@ -88,6 +202,21 @@ class SerializeArena:
         #: miss / first fill). An empty list means "nothing changed".
         self.last_dirty: Optional[List[Tuple[int, int]]] = None
         self.last_dirty_bytes: Optional[int] = None
+        # --- device-dirty snapshots (DESIGN.md §10) ---
+        #: per-record device-resident packed previous images (kernel
+        #: outputs — safe from train-step donation) for the
+        #: ckpt_pack_dirty change-mask compare; None entries fall back
+        #: to the host copy+compare path
+        self._dev_prev: Optional[List[Any]] = None
+        #: True iff the resident host image is a COMPLETE copy of the
+        #: last fill (the per-chunk invariant: a fill in flight or died
+        #: mid-stream leaves this False, which disables both dirty
+        #: tracking and device-mask clean-block skipping next save)
+        self._image_valid = False
+        #: bytes that crossed device→host during the last fill (masks +
+        #: gathered dirty blocks on the device path; everything on the
+        #: host path) — the PCIe-traffic figure fig_snapshot reports
+        self.last_d2h_bytes = 0
 
     # ------------------------------------------------------------ state
     def invalidate(self):
@@ -97,6 +226,8 @@ class SerializeArena:
         self._key = None
         self._records = None
         self._buffers = None
+        self._dev_prev = None
+        self._image_valid = False
 
     def _ensure_capacity(self, total: int):
         if self._raw is None or total > self.capacity:
@@ -169,11 +300,144 @@ class SerializeArena:
         self._buffers = buffers
         self._treedef_str = str(treedef)
         self._total = offset
+        self._dev_prev = None
+        self._image_valid = False
         self.n_layout += 1
 
     # -------------------------------------------------------- serialize
+    def _prepare(self, leaves, treedef):
+        """Key check + (on miss) metadata-only layout; sets last_reused."""
+        key = self._signature(leaves, treedef)
+        if key != self._key or self._buffers is None:
+            self._layout(leaves, treedef, key)
+            self.last_reused = False
+        else:
+            self.n_reuse += 1
+            self.last_reused = True
+
+    @staticmethod
+    def _device_eligible(rec, dirty_block: int) -> bool:
+        """Records the ckpt_pack_dirty kernel can snapshot: float dtypes
+        whose per-mask-block element count is a whole multiple of the
+        8x128 vreg tile, and at least one block long."""
+        if rec.dtype not in _DEV_DTYPES or rec.nbytes < dirty_block:
+            return False
+        isz = store_dtype(rec.dtype).itemsize
+        return dirty_block % isz == 0 and (dirty_block // isz) % 1024 == 0
+
+    def _fill_record_device(self, leaf, dst, rec, prev2d, dirty,
+                            dirty_block: int):
+        """Device-mask snapshot of one record: the Pallas kernel compares
+        the packed image against ``prev2d`` on device, and only dirty
+        blocks (plus the tiny mask) cross PCIe. Clean blocks are skipped
+        entirely — valid because the resident arena bytes equal the
+        previous packed image (``_image_valid``) and the pack is
+        bit-preserving. Returns (new prev2d, d2h bytes moved)."""
+        from repro.core.delta import mask_to_spans
+        from repro.kernels import ops
+        elems = dirty_block // store_dtype(rec.dtype).itemsize
+        packed2d, _amax, mask = ops.ckpt_pack_dirty(leaf, prev2d,
+                                                    block=elems)
+        mask_h = np.asarray(mask)
+        d2h = mask_h.nbytes
+        idx = np.flatnonzero(mask_h)
+        if idx.size:
+            rows = np.asarray(packed2d[idx])          # gather: one D2H
+            rows8 = np.ascontiguousarray(portable_view(rows)) \
+                .view(np.uint8).reshape(idx.size, dirty_block)
+            d2h += rows8.nbytes
+            dst8 = dst.reshape(-1).view(np.uint8)
+            for k, b in enumerate(idx.tolist()):
+                lo = b * dirty_block
+                hi = min(lo + dirty_block, rec.nbytes)
+                dst8[lo:hi] = rows8[k, :hi - lo]
+        if dirty is not None:
+            dirty.extend((rec.offset + off, length) for off, length
+                         in mask_to_spans(mask_h, dirty_block, rec.nbytes))
+        return packed2d, d2h
+
+    def _fill(self, leaves, *, track_dirty: bool, dirty_block: int,
+              device_dirty: bool = False,
+              progress: Optional[SnapshotProgress] = None,
+              chunk_bytes: int = 0):
+        """Copy ``leaves`` into the laid-out arena (device→host), piece
+        by piece when chunked. Dirty compare runs per piece BEFORE the
+        copy-in overwrites the resident image; spans never cross record
+        boundaries (adjacent pieces of one record merge)."""
+        from repro.core.delta import dirty_byte_spans
+        prev_valid = self.last_reused and self._image_valid
+        self._image_valid = False
+        dirty: Optional[list] = [] if (track_dirty and prev_valid) else None
+        n = len(self._records)
+        old_prev = (self._dev_prev
+                    if (device_dirty and prev_valid
+                        and self._dev_prev is not None
+                        and len(self._dev_prev) == n) else None)
+        new_prev: Optional[list] = [None] * n if device_dirty else None
+        piece = 0
+        if progress is not None and chunk_bytes > 0:
+            piece = max(chunk_bytes - chunk_bytes % dirty_block,
+                        dirty_block)
+        d2h = 0
+        for i, ((_path, leaf), dst, rec) in enumerate(
+                zip(leaves, self._buffers, self._records)):
+            end = rec.offset + rec.nbytes
+            if dst.size == 0:
+                if progress is not None:
+                    progress.advance(end)
+                continue
+            if old_prev is not None and old_prev[i] is not None \
+                    and self._device_eligible(rec, dirty_block):
+                new_prev[i], nb = self._fill_record_device(
+                    leaf, dst, rec, old_prev[i], dirty, dirty_block)
+                d2h += nb
+                if progress is not None:
+                    progress.advance(end)
+                continue
+            # host path: piece-granular compare+copy
+            src = _LeafBytes(leaf, rec.nbytes)
+            dst8 = dst.reshape(-1).view(np.uint8)
+            step = piece if piece else rec.nbytes
+            rec_spans: list = []
+            lo = 0
+            while lo < rec.nbytes:
+                hi = min(lo + step, rec.nbytes)
+                pb = src.range(lo, hi)
+                if pb.size != hi - lo:
+                    raise ValueError(
+                        f"record {rec.name!r}: leaf yields {pb.size} "
+                        f"bytes for [{lo},{hi}) of {rec.nbytes}")
+                if dirty is not None:
+                    for off, length in dirty_byte_spans(dst8[lo:hi], pb,
+                                                        dirty_block):
+                        off += lo
+                        if rec_spans and sum(rec_spans[-1]) == off:
+                            rec_spans[-1] = (rec_spans[-1][0],
+                                             rec_spans[-1][1] + length)
+                        else:
+                            rec_spans.append((off, length))
+                dst8[lo:hi] = pb
+                if progress is not None:
+                    progress.advance(rec.offset + hi)
+                lo = hi
+            if dirty is not None:
+                dirty.extend((rec.offset + off, length)
+                             for off, length in rec_spans)
+            d2h += rec.nbytes
+            if device_dirty and self._device_eligible(rec, dirty_block):
+                # seed the device baseline so the NEXT fill can mask
+                from repro.kernels import ops
+                elems = dirty_block // store_dtype(rec.dtype).itemsize
+                new_prev[i] = ops.pack_blocks(leaf, block=elems)
+        self._dev_prev = new_prev
+        self.last_dirty = dirty
+        self.last_dirty_bytes = (sum(ln for _, ln in dirty)
+                                 if dirty is not None else None)
+        self.last_d2h_bytes = d2h
+        self._image_valid = True
+
     def serialize(self, leaves, treedef, track_dirty: bool = False,
-                  dirty_block: int = 4096):
+                  dirty_block: int = 4096, device_dirty: bool = False):
         """Fill the arena from ``leaves`` and return
         ``(Manifest, buffers)`` with the serializer's exact contract:
         ``buffers[i]`` holds record *i*'s bytes (views into the arena).
@@ -184,31 +448,55 @@ class SerializeArena:
         ``self.last_dirty`` in stream coordinates — the input to a delta
         checkpoint (DESIGN.md §9). Tracking needs a valid baseline:
         on a layout miss (first fill / shape change / ``invalidate``)
-        ``last_dirty`` is None and the caller must write a keyframe."""
-        key = self._signature(leaves, treedef)
-        if key != self._key or self._buffers is None:
-            self._layout(leaves, treedef, key)
-            self.last_reused = False
-        else:
-            self.n_reuse += 1
-            self.last_reused = True
-        dirty = [] if (track_dirty and self.last_reused) else None
-        for (_path, leaf), dst, rec in zip(leaves, self._buffers,
-                                           self._records):
-            if dst.size == 0:
-                continue
-            src = _host_array(leaf).reshape(dst.shape)
-            if dirty is not None:
-                from repro.core.delta import dirty_byte_spans
-                dirty.extend((rec.offset + off, length) for off, length
-                             in dirty_byte_spans(dst, src, dirty_block))
-            np.copyto(dst, src, casting="no")
-        self.last_dirty = dirty
-        self.last_dirty_bytes = (sum(ln for _, ln in dirty)
-                                 if dirty is not None else None)
+        ``last_dirty`` is None and the caller must write a keyframe.
+
+        With ``device_dirty`` (DESIGN.md §10), float records carry a
+        device-resident packed previous image and the ckpt_pack_dirty
+        kernel's change mask decides which blocks cross PCIe — clean
+        blocks are never transferred; the host compare above remains the
+        fallback (and produces identical spans)."""
+        self._prepare(leaves, treedef)
+        self._fill(leaves, track_dirty=track_dirty,
+                   dirty_block=dirty_block, device_dirty=device_dirty)
         manifest = Manifest(self._records, self._total,
                             treedef=self._treedef_str)
         return manifest, list(self._buffers)
+
+    def begin_snapshot(self, leaves, treedef, chunk_bytes: int, *,
+                       track_dirty: bool = False, dirty_block: int = 4096,
+                       device_dirty: bool = False):
+        """Chunked-snapshot entry (DESIGN.md §10): lay out the stream
+        (metadata only — no device transfer) and return
+        ``(manifest, buffers, progress, fill)`` WITHOUT copying a byte.
+
+        ``fill()`` — run it on a snapshot worker thread — streams the
+        device→arena copy in ``chunk_bytes`` pieces, advancing
+        ``progress`` as each lands so gated writer segments can consume
+        chunks while later tensors are still leaving the device.
+        ``fill`` never raises: failures land in ``progress`` and
+        re-raise at every ``wait_*`` site, which is how a mid-snapshot
+        death aborts the writers before COMMIT."""
+        self._prepare(leaves, treedef)
+        progress = SnapshotProgress(self._total, chunk_bytes)
+        manifest = Manifest(self._records, self._total,
+                            treedef=self._treedef_str)
+        buffers = list(self._buffers)
+
+        def fill():
+            t0 = time.perf_counter()
+            try:
+                self._fill(leaves, track_dirty=track_dirty,
+                           dirty_block=dirty_block,
+                           device_dirty=device_dirty, progress=progress,
+                           chunk_bytes=chunk_bytes)
+            except BaseException as exc:   # noqa: BLE001 — parked, re-raised
+                progress.seconds = time.perf_counter() - t0
+                progress.fail(exc)
+            else:
+                progress.seconds = time.perf_counter() - t0
+                progress.finish()
+
+        return manifest, buffers, progress, fill
 
     # ------------------------------------------------------------ intro
     @property

@@ -50,9 +50,60 @@ from repro.core.partition import (ReadPlan, ReadSpan, Topology, WritePlan,
                                   select_writers)
 from repro.core.reader import combine_span_crcs, read_stream
 from repro.core.serializer import (ByteStreamView, Manifest, TensorRecord,
-                                   decode_record, deserialize, serialize,
-                                   tensor_spans)
+                                   begin_snapshot, decode_record,
+                                   deserialize, serialize, tensor_spans)
 from repro.core.writer import WriteStats, WriterConfig, write_stream
+
+
+class _GatedSegments:
+    """One extent's stream slices, gated on the snapshot watermark
+    (DESIGN.md §10): each piece is yielded as soon as the fill worker
+    has staged its bytes, so writers submit chunk N while chunk N+1 is
+    still crossing from the device. The iterator never waits while ANY
+    covered bytes remain unyielded (it hands over exactly what the
+    watermark covers), and ``would_block()`` tells ``write_stream``
+    whether pulling the next piece would stall — the writer then
+    flushes its partially-filled staging buffer instead of idling
+    behind the gate. A fill failure re-raises inside every waiting
+    writer — a save with a torn snapshot can never reach COMMIT. The
+    summed stall inside the gate lands in
+    ``WriteStats.source_wait_seconds``."""
+
+    def __init__(self, view: ByteStreamView, offset: int, length: int,
+                 progress):
+        self._view = view
+        self._offset = offset
+        self._length = length
+        self._progress = progress
+        self._cursor = offset          # stream offset of the next byte
+        self.wait_seconds = 0.0
+
+    def would_block(self):
+        """True iff the next ``__iter__`` piece would wait on the
+        watermark (no new bytes landed, fill still in flight)."""
+        p = self._progress
+        return (self._cursor < self._offset + self._length
+                and p.filled <= self._cursor and not p.failed
+                and not p.done)
+
+    def __iter__(self):
+        for seg in self._view.slices(self._offset, self._length):
+            n = len(seg)
+            done = 0
+            while done < n:
+                avail = self._progress.filled - self._cursor
+                if avail <= 0 or self._progress.failed:
+                    t0 = time.perf_counter()
+                    self._progress.wait_until(self._cursor + 1)
+                    self.wait_seconds += time.perf_counter() - t0
+                    avail = self._progress.filled - self._cursor
+                take = min(n - done, avail)
+                # cursor moves BEFORE the yield: the consumer only asks
+                # would_block() after it has copied this piece out, and
+                # by then these bytes are spoken for
+                self._cursor += take
+                yield seg[done:done + take]
+                done += take
 
 
 @dataclass
@@ -88,6 +139,24 @@ class FastPersistConfig:
     #: dirty-compare granularity in bytes (delta spans coalesce to
     #: multiples of this)
     dirty_block: int = 4096
+    #: chunked device→arena snapshots (DESIGN.md §10): the copy runs on
+    #: a snapshot worker in chunks of this many MiB, and writers consume
+    #: each chunk as it lands — the first NVMe submission no longer
+    #: waits for the last tensor to leave the device, and with an async
+    #: engine the WRITE overlaps the next train step (the step only
+    #: waits for the snapshot, ``wait_snapshot``). 0 = the old
+    #: monolithic copy. Needs the arena; quantized saves stay
+    #: monolithic (the quantizer reads the whole stream).
+    snapshot_chunk_mb: int = 8
+    #: device-side dirty masks (DESIGN.md §10): keep a packed previous
+    #: image of every float record RESIDENT ON DEVICE and let the
+    #: ckpt_pack_dirty Pallas kernel decide per block what changed —
+    #: only dirty blocks (plus a tiny mask) cross PCIe, for full saves
+    #: and deltas alike (Check-N-Run's bandwidth win at the PCIe hop,
+    #: not just on disk). Opt-in: costs a device-memory copy of the
+    #: float state. Non-float records and invalid baselines fall back
+    #: to the host copy+compare, which stays the verification oracle.
+    device_dirty: bool = False
 
 
 @dataclass
@@ -119,6 +188,14 @@ class SaveStats:
     #: what chain resolution replays from. ``total_bytes`` of a delta
     #: save is the PACKED payload actually written, not the stream size.
     delta: Optional[dict] = None
+    #: bytes that crossed device→host for this save (masks + gathered
+    #: dirty blocks under ``device_dirty``; the full stream otherwise)
+    d2h_bytes: int = 0
+    #: wall time of the device→arena snapshot (the chunked fill worker;
+    #: == serialize_seconds for monolithic saves)
+    snapshot_seconds: float = 0.0
+    #: chunk count of the snapshot (0 = monolithic copy)
+    snapshot_chunks: int = 0
 
     @property
     def gbps(self):
@@ -146,6 +223,12 @@ class FastPersistCheckpointer:
         #                                                   commit yet
         self._arena_gen: Optional[Tuple[int, str]] = None  # arena image
         self._since_keyframe = 0   # deltas committed since last keyframe
+        #: one-shot snapshot-complete callback (DESIGN.md §10): set by
+        #: the engine/pipeline BEFORE each save; fired (and cleared)
+        #: once the device→staging copy has fully landed — the earliest
+        #: point a donating train step may reuse the state's buffers,
+        #: while the write is still in flight
+        self.on_snapshot = None
 
     # -- setup-time planning (paper: partition fixed before iteration 1) --
     def plan_for(self, total_bytes: int, n_volumes: int = 1,
@@ -220,9 +303,39 @@ class FastPersistCheckpointer:
         any volume-0-resident shards stay under ``directory``."""
         t_ser = time.perf_counter()
         track = self._delta_enabled()
-        manifest, buffers = serialize(state, arena=self._arena,
-                                      track_dirty=track,
-                                      dirty_block=self.config.dirty_block)
+        device_dirty = bool(self.config.device_dirty
+                            and self._arena is not None)
+        # chunked snapshot (DESIGN.md §10): arena-only, and quantized
+        # saves stay monolithic (the quantizer reads the whole stream)
+        chunk_bytes = 0
+        if (self.config.snapshot_chunk_mb > 0 and self._arena is not None
+                and not self.config.quantize):
+            chunk_bytes = int(self.config.snapshot_chunk_mb) << 20
+        notify = self.on_snapshot
+        self.on_snapshot = None
+        progress = None
+        fill_thread = None
+        if chunk_bytes:
+            manifest, buffers, progress, fill = begin_snapshot(
+                state, self._arena, chunk_bytes, track_dirty=track,
+                dirty_block=self.config.dirty_block,
+                device_dirty=device_dirty)
+
+            def _fill_job():
+                fill()                     # failures park in `progress`
+                if notify is not None and not progress.failed:
+                    notify()
+
+            fill_thread = threading.Thread(target=_fill_job,
+                                           name="fp-snapshot", daemon=True)
+            fill_thread.start()
+        else:
+            manifest, buffers = serialize(
+                state, arena=self._arena, track_dirty=track,
+                dirty_block=self.config.dirty_block,
+                device_dirty=device_dirty)
+            if notify is not None:
+                notify()
         arena_reused = bool(self._arena and self._arena.last_reused)
         manifest.extras = extras or {}
         gen = os.urandom(4).hex()
@@ -234,18 +347,22 @@ class FastPersistCheckpointer:
         # delta eligibility (DESIGN.md §9): tracking produced a valid
         # dirty set (arena layout hit), the previous save is durably
         # committed AND is the image resident in the arena, and the
-        # keyframe cadence hasn't come due
+        # keyframe cadence hasn't come due. A chunked snapshot must
+        # fully land first — the dirty set is only complete then (small
+        # delta payloads don't profit from write overlap anyway).
         dplan: Optional[DeltaPlan] = None
-        if track and self._arena.last_dirty is not None \
-                and self._base is not None \
+        if track and self._base is not None \
                 and self._arena_gen == self._base \
                 and self._since_keyframe + 1 < self.config.keyframe_every:
-            dplan, payloads = build_delta(
-                manifest.records, ByteStreamView(buffers),
-                self._arena.last_dirty,
-                base_step=self._base[0], base_gen=self._base[1], gen=gen,
-                quantize=self.config.delta_quantize)
-            buffers = payloads
+            if progress is not None:
+                progress.wait_done()
+            if self._arena.last_dirty is not None:
+                dplan, payloads = build_delta(
+                    manifest.records, ByteStreamView(buffers),
+                    self._arena.last_dirty,
+                    base_step=self._base[0], base_gen=self._base[1],
+                    gen=gen, quantize=self.config.delta_quantize)
+                buffers = payloads
         view = ByteStreamView(buffers)
         ser_s = time.perf_counter() - t_ser
 
@@ -310,8 +427,17 @@ class FastPersistCheckpointer:
         if wcfg.checksum != self.config.checksum:
             wcfg = replace(wcfg, checksum=self.config.checksum)
 
+        # chunk-granular handoff: writers consume gated segments that
+        # block until the snapshot watermark covers them (delta saves
+        # already waited for the whole fill — no gate needed)
+        gate = progress if (progress is not None and dplan is None) else None
+
         def run_writer(extent):
-            segs = view.slices(extent.offset, extent.length)
+            if gate is not None:
+                segs = _GatedSegments(view, extent.offset, extent.length,
+                                      gate)
+            else:
+                segs = view.slices(extent.offset, extent.length)
             if self.config.single_file:
                 return write_stream(os.path.join(d, "checkpoint.bin"),
                                     segs, extent.length, wcfg,
@@ -321,11 +447,21 @@ class FastPersistCheckpointer:
                              self._shard_file(extent.shard_index)),
                 segs, extent.length, wcfg)
 
-        if len(plan.extents) == 1:
-            per_writer = [run_writer(plan.extents[0])]
-        else:
-            with ThreadPoolExecutor(len(plan.extents)) as ex:
-                per_writer = list(ex.map(run_writer, plan.extents))
+        try:
+            if len(plan.extents) == 1:
+                per_writer = [run_writer(plan.extents[0])]
+            else:
+                with ThreadPoolExecutor(len(plan.extents)) as ex:
+                    per_writer = list(ex.map(run_writer, plan.extents))
+        finally:
+            # the arena must never see a new fill while this one runs —
+            # join on every exit, including writer failure
+            if fill_thread is not None:
+                fill_thread.join()
+        if progress is not None:
+            # re-raise a fill failure the (already-satisfied) writers
+            # outran: no manifest, no COMMIT
+            progress.wait_done()
         wall = time.perf_counter() - t0
 
         mpath = os.path.join(d, layout.MANIFEST_FILE)
@@ -387,7 +523,15 @@ class FastPersistCheckpointer:
                           len(plan.extents), shards=shard_meta,
                           arena_reused=arena_reused, generation=gen,
                           delta=dplan.to_meta() if dplan is not None
-                          else None)
+                          else None,
+                          d2h_bytes=(self._arena.last_d2h_bytes
+                                     if self._arena is not None
+                                     else manifest.total_bytes),
+                          snapshot_seconds=(progress.seconds
+                                            if progress is not None
+                                            else ser_s),
+                          snapshot_chunks=(progress.n_chunks
+                                           if progress is not None else 0))
         if stats.delta is not None:
             # the engine stamps this dict into the COMMIT marker, so it
             # must stay the COMPLETE table (chain resolution + replay

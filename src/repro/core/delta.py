@@ -67,6 +67,20 @@ def _byte_view(arr) -> np.ndarray:
     return a.reshape(-1).view(np.uint8).reshape(-1)
 
 
+def _coalesce_dirty_blocks(dirty: np.ndarray, block: int, n: int
+                           ) -> List[Tuple[int, int]]:
+    """Per-block bool dirty vector → coalesced (offset, length) byte
+    spans; the final span is clipped to the ``n``-byte buffer."""
+    idx = np.flatnonzero(dirty)
+    if idx.size == 0:
+        return []
+    breaks = np.flatnonzero(np.diff(idx) > 1)
+    starts = np.concatenate(([idx[0]], idx[breaks + 1]))
+    ends = np.concatenate((idx[breaks], [idx[-1]])) + 1
+    return [(int(s) * block, min(int(e) * block, n) - int(s) * block)
+            for s, e in zip(starts, ends)]
+
+
 def dirty_byte_spans(prev, new, block: int = DIRTY_BLOCK
                      ) -> List[Tuple[int, int]]:
     """Coalesced ``(offset, length)`` byte spans where ``new`` differs
@@ -89,14 +103,21 @@ def dirty_byte_spans(prev, new, block: int = DIRTY_BLOCK
     if tail:
         dirty[nfull] = not np.array_equal(a[nfull * block:],
                                           b[nfull * block:])
-    idx = np.flatnonzero(dirty)
-    if idx.size == 0:
+    return _coalesce_dirty_blocks(dirty, block, n)
+
+
+def mask_to_spans(mask, block: int, nbytes: int) -> List[Tuple[int, int]]:
+    """Device change-mask → coalesced byte spans, same contract as
+    :func:`dirty_byte_spans` (block-aligned, last span clipped to
+    ``nbytes``). ``mask`` is the per-block int/bool vector the
+    ``kernels.ops.ckpt_pack_dirty`` kernel emitted; blocks past the
+    stream's end (pad blocks) are ignored — the pad rule (zero-pad on
+    both sides of the compare) guarantees they are never dirty anyway."""
+    if nbytes == 0:
         return []
-    breaks = np.flatnonzero(np.diff(idx) > 1)
-    starts = np.concatenate(([idx[0]], idx[breaks + 1]))
-    ends = np.concatenate((idx[breaks], [idx[-1]])) + 1
-    return [(int(s) * block, min(int(e) * block, n) - int(s) * block)
-            for s, e in zip(starts, ends)]
+    m = np.asarray(mask).reshape(-1).astype(bool)
+    nblocks = -(-nbytes // block)
+    return _coalesce_dirty_blocks(m[:nblocks], block, nbytes)
 
 
 # ------------------------------------------------------------ span table

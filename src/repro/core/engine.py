@@ -92,6 +92,7 @@ class SaveHandle:
         self.step = step
         self.backend = backend
         self._done = threading.Event()
+        self._snapshotted = threading.Event()
         self._stats: Optional[SaveStats] = None
         self._exc: Optional[BaseException] = None
         self._upload = None          # UploadTicket, attached pre-finish
@@ -106,10 +107,42 @@ class SaveHandle:
     def _finish(self, stats: Optional[SaveStats] = None,
                 exc: Optional[BaseException] = None):
         self._stats, self._exc = stats, exc
+        # a finished save's snapshot is trivially over (success OR
+        # failure, and backends without snapshot signalling) — nobody
+        # may hang in wait_snapshot
+        self._snapshotted.set()
         self._done.set()
+
+    def _mark_snapshot(self):
+        # backend callback (bind_snapshot): the device→staging copy has
+        # fully landed; the write may still be in flight
+        self._snapshotted.set()
 
     def done(self) -> bool:
         return self._done.is_set()
+
+    def snapshot_done(self) -> bool:
+        """True once the save's device→host snapshot has landed (the
+        write may still be in flight). Backends without snapshot
+        signalling flip this together with :meth:`done`."""
+        return self._snapshotted.is_set()
+
+    def wait_snapshot(self, timeout: Optional[float] = None):
+        """Block until the snapshot (device→staging copy) of this save
+        has landed — the earliest point a training step that DONATES the
+        state's buffers may safely run (DESIGN.md §10). The write keeps
+        overlapping that step; ``wait()`` remains the local durability
+        point.
+
+        Raises:
+            TimeoutError: snapshot still in flight after ``timeout``.
+            BaseException: the save's failure, when it already failed.
+        """
+        if not self._snapshotted.wait(timeout):
+            raise TimeoutError(
+                f"snapshot of step {self.step} still in flight")
+        if self._done.is_set() and self._exc is not None:
+            raise self._exc
 
     def wait(self, timeout: Optional[float] = None) -> SaveStats:
         """Block until the LOCAL commit completed.
@@ -225,6 +258,13 @@ class CheckpointBackend:
         or replaced, instead of relying on the structure key alone).
         Default: nothing cached, nothing to drop."""
 
+    def bind_snapshot(self, callback):
+        """Install the one-shot snapshot-complete callback for the NEXT
+        save (DESIGN.md §10): fire it once the device→staging copy has
+        fully landed, while the write may still be in flight. Backends
+        without a distinct snapshot stage ignore it — the engine then
+        treats snapshot-done as save-done."""
+
     def after_commit(self, step: int, directory: str, marker: dict,
                      stats: SaveStats):
         """Post-publish hook, called by the engine AFTER the local
@@ -283,6 +323,11 @@ class FastPersistBackend(CheckpointBackend):
         arena = getattr(self._inner, "_arena", None)
         if arena is not None:
             arena.invalidate()
+
+    def bind_snapshot(self, callback):
+        # the checkpointer consumes (and clears) this at save start, so
+        # a binding never leaks into a later save
+        self._inner.on_snapshot = callback
 
     def after_commit(self, step, directory, marker, stats):
         # delta chain bookkeeping (DESIGN.md §9): a save may only serve
@@ -451,7 +496,10 @@ class EngineStats:
     submitted: int = 0
     committed: int = 0
     failed: int = 0
-    stall_seconds: float = 0.0        # caller time blocked in wait()
+    stall_seconds: float = 0.0        # caller time blocked in wait()/
+    #                                   wait_snapshot()
+    snapshot_stall_seconds: float = 0.0   # the wait_snapshot() share of
+    #                                       stall_seconds (§10 sync point)
     write_seconds: float = 0.0        # sum of per-save persist wall time
     bytes_written: int = 0
     arena_reuses: int = 0             # saves that refilled a cached arena
@@ -621,6 +669,12 @@ class CheckpointEngine:
             if os.path.exists(d):
                 shutil.rmtree(d)
             os.makedirs(d)
+        # snapshot-granular sync (DESIGN.md §10): tell the backend to
+        # flip this handle's snapshot event as soon as the device→
+        # staging copy lands — binding happens here (on the serial save
+        # path) so queued saves never clobber each other's callback
+        if handle is not None:
+            self._backend.bind_snapshot(handle._mark_snapshot)
         published = False
         try:
             stats = self._backend.write_payload_sharded(
@@ -715,6 +769,31 @@ class CheckpointEngine:
             if err is None and h.exception() is not None:
                 err = h.exception()
         self.stats.stall_seconds += time.perf_counter() - t0
+        if err is not None:
+            raise err
+
+    def wait_snapshot(self):
+        """Block until every in-flight save's device→host snapshot has
+        landed (DESIGN.md §10) — the chunk-granular half of the paper's
+        §4.3 sync point. After this, a train step may donate/overwrite
+        the state's device buffers while the WRITES still overlap its
+        forward/backward; full commits are still awaited by the save
+        throttle, :meth:`wait` and :meth:`drain`. Re-raises the first
+        failure of an already-failed save. No-op for sync backends."""
+        t0 = time.perf_counter()
+        with self._lock:
+            pending = list(self._prune_inflight_locked())
+            err, self._deferred_exc = self._deferred_exc, None
+        for h in pending:
+            h._snapshotted.wait()
+            if err is None and h.done() and h._exc is not None:
+                err = h._exc
+                with self._lock:
+                    if h in self._inflight:
+                        self._inflight.remove(h)
+        dt = time.perf_counter() - t0
+        self.stats.stall_seconds += dt
+        self.stats.snapshot_stall_seconds += dt
         if err is not None:
             raise err
 

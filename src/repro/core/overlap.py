@@ -77,8 +77,25 @@ def staging_seconds(ckpt_bytes: int, topo: Topology,
     return copy if steady_state else 2.0 * copy
 
 
+def chunk_overlap_fraction(ckpt_bytes: int, chunk_bytes: int) -> float:
+    """Fraction of the device→arena staging copy hidden behind the next
+    iteration by CHUNKED snapshotting (DESIGN.md §10).
+
+    With a monolithic snapshot the whole copy gates the next step
+    (fraction 0). Split into n chunks, the main thread only waits for
+    the snapshot worker's in-flight chunk boundary: in the bandwidth-
+    bound limit everything except the equivalent of one chunk overlaps,
+    so the hidden fraction is 1 - 1/n. ``chunk_bytes <= 0`` means
+    monolithic."""
+    if chunk_bytes <= 0 or ckpt_bytes <= 0:
+        return 0.0
+    n = -(-ckpt_bytes // chunk_bytes)       # ceil
+    return max(0.0, 1.0 - 1.0 / n)
+
+
 def effective_overhead(it: IterationModel, ckpt_seconds: float,
-                       pipelined: bool, serialize_s: float = 0.0) -> float:
+                       pipelined: bool, serialize_s: float = 0.0,
+                       snapshot_overlap: float = 0.0) -> float:
     """Per-iteration slowdown fraction due to checkpointing every step.
 
     Pipelined: the write overlaps fwd+bwd of the next iteration; only the
@@ -86,11 +103,21 @@ def effective_overhead(it: IterationModel, ckpt_seconds: float,
     Unpipelined: the full write sits on the critical path.
 
     ``serialize_s`` (device→arena staging, see :func:`staging_seconds`)
-    always sits on the critical path: with donation on, the snapshot
+    sits on the critical path by default: with donation on, the snapshot
     must complete before the next optimizer step reuses the buffers —
-    pipelining hides the WRITE, never the staging copy."""
+    pipelining hides the WRITE, never the staging copy.
+
+    ``snapshot_overlap`` (0..1, see :func:`chunk_overlap_fraction`)
+    models the chunked snapshot stage: that fraction of the staging
+    copy ALSO overlaps the next iteration's fwd+bwd window, competing
+    with the write for it. Only the unhidden remainder plus whatever
+    spills past the window stalls. At 0 this reduces exactly to the
+    monolithic formula."""
+    f = min(1.0, max(0.0, snapshot_overlap))
     if pipelined:
-        stall = serialize_s + max(0.0, ckpt_seconds - it.fb)
+        stall = serialize_s * (1.0 - f) \
+            + max(0.0, ckpt_seconds + serialize_s * f - it.fb)
     else:
+        # no write pipelining → nothing for the snapshot to hide behind
         stall = serialize_s + ckpt_seconds
     return stall / it.total

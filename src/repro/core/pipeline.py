@@ -43,6 +43,8 @@ class PipelineStats:
     submitted: int = 0
     committed: int = 0
     stall_seconds: float = 0.0       # main-thread time blocked in wait()
+    #                                  or wait_snapshot()
+    snapshot_stall_seconds: float = 0.0  # the wait_snapshot() share
     write_seconds: float = 0.0       # helper time actually persisting
     arena_reuses: int = 0            # overlapped saves that refilled the
     #                                  inner checkpointer's arena in place
@@ -56,6 +58,7 @@ class PipelinedCheckpointer:
         self.inner = inner
         self._q = queue.Queue()
         self._outstanding = 0
+        self._snap_outstanding = 0   # jobs whose snapshot hasn't landed
         self._lock = threading.Condition()
         self._err: Optional[BaseException] = None
         self.stats = PipelineStats()
@@ -72,6 +75,21 @@ class PipelinedCheckpointer:
                 return
             state, step, extras = item
             t0 = time.perf_counter()
+            snap_fired = threading.Event()
+
+            def _on_snapshot():
+                # one decrement per job, whether the inner checkpointer
+                # signals (chunked snapshot landed) or never does
+                # (no on_snapshot support / failed save — the finally
+                # below settles it)
+                if not snap_fired.is_set():
+                    snap_fired.set()
+                    with self._lock:
+                        self._snap_outstanding -= 1
+                        self._lock.notify_all()
+
+            if hasattr(self.inner, "on_snapshot"):
+                self.inner.on_snapshot = _on_snapshot
             try:
                 s = self.inner.save(state, step, extras) \
                     if extras is not None else self.inner.save(state, step)
@@ -80,6 +98,8 @@ class PipelinedCheckpointer:
                     self.stats.arena_reuses += 1
             except BaseException as e:       # surfaced on next wait()
                 self._err = e
+            finally:
+                _on_snapshot()
             self.stats.write_seconds += time.perf_counter() - t0
             with self._lock:
                 self._outstanding -= 1
@@ -99,12 +119,31 @@ class PipelinedCheckpointer:
             err, self._err = self._err, None
             raise err
 
+    def wait_snapshot(self):
+        """Block only until every submitted save's device→staging
+        snapshot has landed (DESIGN.md §10) — the chunk-granular half of
+        the §4.3 sync point. The writes keep overlapping the caller's
+        next iteration; ``wait()``/``close()`` remain the durability
+        points. Degrades to :meth:`wait` for inner checkpointers without
+        snapshot signalling. Re-raises an already-surfaced failure."""
+        t0 = time.perf_counter()
+        with self._lock:
+            while self._snap_outstanding > 0:
+                self._lock.wait()
+        dt = time.perf_counter() - t0
+        self.stats.stall_seconds += dt
+        self.stats.snapshot_stall_seconds += dt
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
     def submit(self, state, step: int, extras: Optional[dict] = None):
         """Enqueue checkpoint creation. Called AFTER the optimizer step."""
         with self._lock:
             while self._outstanding >= self.max_outstanding:
                 self._lock.wait()
             self._outstanding += 1
+            self._snap_outstanding += 1
         self.stats.submitted += 1
         self._q.put((state, step, extras))
 

@@ -98,7 +98,7 @@ def _to_numpy(leaf) -> np.ndarray:
 
 
 def serialize(state, arena=None, track_dirty: bool = False,
-              dirty_block: int = 4096
+              dirty_block: int = 4096, device_dirty: bool = False
               ) -> Tuple[Manifest, List[np.ndarray]]:
     """Flatten a checkpoint state into (manifest, ordered host buffers).
 
@@ -116,7 +116,8 @@ def serialize(state, arena=None, track_dirty: bool = False,
     leaves, treedef = jax.tree_util.tree_flatten_with_path(state)
     if arena is not None:
         return arena.serialize(leaves, treedef, track_dirty=track_dirty,
-                               dirty_block=dirty_block)
+                               dirty_block=dirty_block,
+                               device_dirty=device_dirty)
     records, buffers = [], []
     offset = 0
     for path, leaf in leaves:
@@ -129,6 +130,22 @@ def serialize(state, arena=None, track_dirty: bool = False,
         buffers.append(arr)
         offset += arr.nbytes
     return Manifest(records, offset, treedef=str(treedef)), buffers
+
+
+def begin_snapshot(state, arena, chunk_bytes: int, *,
+                   track_dirty: bool = False, dirty_block: int = 4096,
+                   device_dirty: bool = False):
+    """Chunked-snapshot variant of :func:`serialize` (DESIGN.md §10):
+    lays out the stream against ``arena`` without copying and returns
+    ``(manifest, buffers, progress, fill)`` — the caller runs ``fill``
+    on a snapshot worker and gates writer segments on ``progress``.
+    Arena-only: the allocate-per-save path has no resident image to
+    fill piecewise."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(state)
+    return arena.begin_snapshot(leaves, treedef, chunk_bytes,
+                                track_dirty=track_dirty,
+                                dirty_block=dirty_block,
+                                device_dirty=device_dirty)
 
 
 def decode_record(rec: TensorRecord, raw) -> np.ndarray:

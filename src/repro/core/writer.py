@@ -93,6 +93,11 @@ class WriteStats:
     direct: bool = False
     backend: str = "pwrite"        # resolved submission backend
     crc32: Optional[int] = None    # stream CRC32 (None if checksum off)
+    #: time the fill phase spent blocked waiting for its SOURCE (the
+    #: chunked-snapshot gate, DESIGN.md §10) rather than copying —
+    #: reported by gated segment iterables, 0.0 for plain streams.
+    #: ``fill_seconds`` includes this; subtract to get pure copy time.
+    source_wait_seconds: float = 0.0
 
     @property
     def gbps(self) -> float:
@@ -129,6 +134,12 @@ def write_stream(path: str, segments: Iterable[memoryview], total: int,
 
     t0 = time.perf_counter()
     seg_iter = iter(segments)
+    # gated sources (chunked snapshots, DESIGN.md §10) expose
+    # would_block(): instead of idling behind the gate with a
+    # partially-filled staging buffer, flush what is already staged —
+    # the first NVMe submission happens after the FIRST chunk lands,
+    # not once a whole io_buffer's worth has crossed from the device
+    would_block = getattr(segments, "would_block", None)
     pending: Optional[memoryview] = None   # unconsumed tail of a segment
     written = 0          # bytes handed to the flusher (aligned region)
     bi = 0
@@ -145,6 +156,11 @@ def write_stream(path: str, segments: Iterable[memoryview], total: int,
             filled = 0
             while filled < target:
                 if pending is None:
+                    # early flush: submit the aligned bytes in hand
+                    # rather than waiting for the snapshot watermark
+                    if (filled and filled % align == 0
+                            and would_block is not None and would_block()):
+                        break
                     try:
                         pending = next(seg_iter)
                     except StopIteration:
@@ -204,4 +220,6 @@ def write_stream(path: str, segments: Iterable[memoryview], total: int,
     stats.bytes_written = written
     stats.seconds = time.perf_counter() - t0
     stats.crc32 = crc
+    stats.source_wait_seconds = float(getattr(segments, "wait_seconds",
+                                              0.0))
     return stats

@@ -20,11 +20,37 @@ from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK = 8 * 1024            # 8192 floats = 64 (8,128) vregs
 
+# same-width unsigned views for bitwise block comparison
+_UINTS = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+
 
 def _kernel(x_ref, y_ref, amax_ref, *, out_dtype, scale):
     x = x_ref[...].astype(jnp.float32) * scale
     y_ref[...] = x.astype(out_dtype)
     amax_ref[0, 0] = jnp.max(jnp.abs(x))
+
+
+def _identity_pack(x, out_dtype, scale):
+    # scale==1 and matching dtype must be bit-preserving: the packed
+    # image lands verbatim in the checkpoint stream, and a f32
+    # round-trip could canonicalize NaN payloads
+    return jnp.dtype(out_dtype) == x.dtype and float(scale) == 1.0
+
+
+def _dirty_kernel(x_ref, prev_ref, y_ref, amax_ref, mask_ref, *,
+                  out_dtype, scale):
+    x = x_ref[...]
+    xf = x.astype(jnp.float32) * scale
+    y = x if _identity_pack(x, out_dtype, scale) else xf.astype(out_dtype)
+    y_ref[...] = y
+    amax_ref[0, 0] = jnp.max(jnp.abs(xf))
+    # bitwise (not value) compare in the packed domain: NaN != NaN under
+    # float compare, but the host fallback (delta.dirty_byte_spans)
+    # compares bytes — bitcasting keeps the two paths equivalent
+    ubits = _UINTS[jnp.dtype(out_dtype).itemsize]
+    yb = jax.lax.bitcast_convert_type(y, ubits)
+    pb = jax.lax.bitcast_convert_type(prev_ref[...], ubits)
+    mask_ref[0, 0] = jnp.any(yb != pb).astype(jnp.int32)
 
 
 def ckpt_pack_blocks(x2d, *, out_dtype=jnp.bfloat16, scale=1.0,
@@ -45,3 +71,34 @@ def ckpt_pack_blocks(x2d, *, out_dtype=jnp.bfloat16, scale=1.0,
         interpret=interpret,
     )(x2d)
     return packed, amax[:, 0]
+
+
+def ckpt_pack_dirty_blocks(x2d, prev2d, *, out_dtype=jnp.bfloat16,
+                           scale=1.0, interpret=False):
+    """Pack + per-block change mask against a device-resident image.
+
+    x2d (n_blocks, BLOCK); prev2d (n_blocks, BLOCK) in ``out_dtype`` —
+    the packed image of the previous snapshot, kept resident on device.
+    Returns (packed (n_blocks, BLOCK) out_dtype, amax (n_blocks,) f32,
+    mask (n_blocks,) int32) with mask[i] = 1 iff block i's packed bytes
+    differ from prev2d's. The snapshot path gathers only mask==1 blocks
+    across PCIe (Check-N-Run's incremental-bandwidth win)."""
+    n_blocks, block = x2d.shape
+    if prev2d.shape != x2d.shape:
+        raise ValueError(f"prev2d shape {prev2d.shape} != {x2d.shape}")
+    kernel = functools.partial(_dirty_kernel, out_dtype=out_dtype,
+                               scale=float(scale))
+    packed, amax, mask = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                  pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n_blocks, block), out_dtype),
+                   jax.ShapeDtypeStruct((n_blocks, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((n_blocks, 1), jnp.int32)],
+        interpret=interpret,
+    )(x2d, prev2d)
+    return packed, amax[:, 0], mask[:, 0]

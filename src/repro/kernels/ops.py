@@ -34,6 +34,40 @@ def ckpt_pack(x, *, out_dtype=jnp.bfloat16, scale=1.0,
     return packed.reshape(-1)[:n], amax
 
 
+def _to_blocks(flat, block):
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def pack_blocks(x, *, block=_cp.DEFAULT_BLOCK):
+    """Device-side layout-pack only: flatten + zero-pad to
+    (n_blocks, block), keeping x's dtype and bits. This is the baseline
+    image ``ckpt_pack_dirty`` compares against — building it with the
+    same pad rule guarantees pad blocks never read as dirty."""
+    return _to_blocks(x.reshape(-1), block)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "block", "scale"))
+def ckpt_pack_dirty(x, prev2d, *, out_dtype=None, scale=1.0,
+                    block=_cp.DEFAULT_BLOCK):
+    """Pack + per-block change mask vs a device-resident previous image.
+
+    prev2d is the (n_blocks, block) packed image of the LAST snapshot
+    (a prior ``packed`` output, or ``pack_blocks`` of the old value).
+    Returns (packed (n_blocks, block), amax (n_blocks,), mask
+    (n_blocks,) int32). With out_dtype=None (same dtype, scale 1) the
+    pack is bit-preserving, so mask==0 blocks are byte-identical to the
+    previous checkpoint stream — the contract the device-dirty snapshot
+    path relies on (DESIGN.md §10)."""
+    out_dtype = x.dtype if out_dtype is None else out_dtype
+    x2d = _to_blocks(x.reshape(-1), block)
+    return _cp.ckpt_pack_dirty_blocks(x2d, prev2d, out_dtype=out_dtype,
+                                      scale=scale, interpret=INTERPRET)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "cap",
                                              "block_q", "block_k"))
 def flash_attention(q, k, v, *, causal=True, window=None, cap=None,

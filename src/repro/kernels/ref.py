@@ -14,6 +14,26 @@ def ckpt_pack_ref(x2d, *, out_dtype=jnp.bfloat16, scale=1.0):
     return xf.astype(out_dtype), jnp.max(jnp.abs(xf), axis=1)
 
 
+_UINTS = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+
+
+def ckpt_pack_dirty_ref(x2d, prev2d, *, out_dtype=None, scale=1.0):
+    """Oracle for ckpt_pack.ckpt_pack_dirty_blocks: pack + per-block
+    BITWISE change mask vs the previous packed image (NaN-safe, matching
+    the host byte compare in delta.dirty_byte_spans)."""
+    out_dtype = x2d.dtype if out_dtype is None else out_dtype
+    xf = x2d.astype(jnp.float32) * scale
+    if jnp.dtype(out_dtype) == x2d.dtype and float(scale) == 1.0:
+        y = x2d
+    else:
+        y = xf.astype(out_dtype)
+    ubits = _UINTS[jnp.dtype(out_dtype).itemsize]
+    yb = jax.lax.bitcast_convert_type(y, ubits)
+    pb = jax.lax.bitcast_convert_type(prev2d, ubits)
+    mask = jnp.any(yb != pb, axis=1).astype(jnp.int32)
+    return y, jnp.max(jnp.abs(xf), axis=1), mask
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=None, cap=None):
     """q (B,H,Lq,hd); k,v (B,KV,Lk,hd) -> (B,H,Lq,hd)."""
     B, H, Lq, hd = q.shape

@@ -65,6 +65,17 @@ def main():
     ap.add_argument("--queue-depth", type=int, default=2,
                     help="in-flight writes per writer stream; staging "
                          "memory is (depth+1) x io buffer per writer")
+    ap.add_argument("--snapshot-chunk-mb", type=int, default=8,
+                    help="chunk size for the overlapped device→arena "
+                         "snapshot stage (DESIGN.md §10): NVMe writers "
+                         "start as soon as the first chunk lands. 0 = "
+                         "monolithic snapshot. Needs the serialize arena")
+    ap.add_argument("--device-dirty", action="store_true",
+                    help="compute delta-checkpoint dirty masks ON DEVICE "
+                         "(Pallas pack+compare kernel) so delta saves "
+                         "transfer only dirty blocks over PCIe; costs one "
+                         "device-resident copy of the packed state. "
+                         "Implies dirty tracking via --keyframe-every")
     ap.add_argument("--no-arena", dest="arena", action="store_false",
                     default=True,
                     help="disable the persistent serialize arena "
@@ -112,6 +123,8 @@ def main():
                 strategy=args.writers,
                 topology=Topology(dp_degree=args.dp, ranks_per_node=4),
                 arena=args.arena,
+                snapshot_chunk_mb=args.snapshot_chunk_mb,
+                device_dirty=args.device_dirty,
                 delta_quantize=args.delta_quantize,
                 writer=WriterConfig(backend=args.io_backend,
                                     queue_depth=args.queue_depth)))

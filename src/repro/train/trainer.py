@@ -207,11 +207,15 @@ class Trainer:
             t0 = time.perf_counter()
             batch = next(self.data)
             if self.engine is not None and self.engine.async_save:
-                # §4.3 sync point: the previous checkpoint must commit
-                # before the optimizer may update the params it snapshots
+                # §4.3 sync point, chunk-granular (DESIGN.md §10): the
+                # previous checkpoint's device→arena SNAPSHOT must land
+                # before the optimizer may update the params it captures
                 # (train_step donates its buffers — see pipeline docs).
+                # The NVMe writes keep overlapping this iteration; the
+                # engine's submit throttle + drain() stay the
+                # durability sync points.
                 t_w = time.perf_counter()
-                self.engine.wait()
+                self.engine.wait_snapshot()
                 self.ckpt_stall += time.perf_counter() - t_w
             self.state, metrics = self.train_step(self.state, batch)
             if pol and self.engine is not None \

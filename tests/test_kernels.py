@@ -41,6 +41,87 @@ def test_ckpt_pack_scale():
                                           np.float32))
 
 
+# ------------------------------------------------- ckpt_pack dirty masks
+@pytest.mark.parametrize("shape", [(8,), (1000,), (37, 1000), (8192,),
+                                   (1023,), (1025,)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ckpt_pack_dirty_matches_ref(shape, dtype):
+    """Kernel mask/pack == pure-jnp reference, incl. non-block-multiple
+    shapes (pad blocks) and identity (same-dtype, bit-preserving) packs."""
+    block = 1024
+    old = _rand(shape, dtype)
+    new = np.asarray(old, np.float32).copy()
+    idx = RNG.choice(new.size, size=max(1, new.size // 7), replace=False)
+    new.reshape(-1)[idx] += 1.0
+    new = jnp.asarray(new, dtype=dtype)
+    prev2d = ops.pack_blocks(old, block=block)
+    packed, amax, mask = ops.ckpt_pack_dirty(new, prev2d, block=block)
+    x2d = ops.pack_blocks(new, block=block)
+    pref, aref, mref = ref.ckpt_pack_dirty_ref(x2d, prev2d)
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(mref))
+    np.testing.assert_array_equal(
+        np.asarray(packed).view(np.uint8), np.asarray(pref).view(np.uint8))
+    np.testing.assert_allclose(np.asarray(amax), np.asarray(aref),
+                               rtol=1e-6)
+
+
+def test_ckpt_pack_dirty_self_clean_and_pad_blocks():
+    """Unchanged tensor ⇒ all-clean mask; the zero-pad rule keeps pad
+    blocks clean even for non-multiple sizes; all-zero data blocks are
+    clean against an all-zero baseline (mask means CHANGED, not
+    nonzero)."""
+    block = 1024
+    x = _rand((3000,), jnp.float32)           # 3 blocks, 72-elem pad
+    prev2d = ops.pack_blocks(x, block=block)
+    _, _, mask = ops.ckpt_pack_dirty(x, prev2d, block=block)
+    assert not np.asarray(mask).any()
+    z = jnp.zeros((3000,), jnp.float32)
+    _, _, mz = ops.ckpt_pack_dirty(z, ops.pack_blocks(z, block=block),
+                                   block=block)
+    assert not np.asarray(mz).any()
+
+
+def test_ckpt_pack_dirty_mask_equals_host_spans():
+    """THE device-mask / host-compare equivalence rule (DESIGN.md §10):
+    mask_to_spans(kernel mask) == dirty_byte_spans(host byte compare)
+    for identity packs, including the clipped tail span."""
+    from repro.core.delta import dirty_byte_spans, mask_to_spans
+    block = 1024                               # elements
+    for n in (4096, 5000, 1023):               # multiple / tail / tiny
+        old = np.asarray(_rand((n,), jnp.float32))
+        new = old.copy()
+        if n > 100:
+            new[5] += 1.0
+            new[-1] -= 2.0
+        bb = block * 4                         # bytes per block
+        want = dirty_byte_spans(old.view(np.uint8), new.view(np.uint8),
+                                block=bb)
+        prev2d = ops.pack_blocks(jnp.asarray(old), block=block)
+        _, _, mask = ops.ckpt_pack_dirty(jnp.asarray(new), prev2d,
+                                         block=block)
+        got = mask_to_spans(np.asarray(mask), bb, old.nbytes)
+        assert got == want, (n, got, want)
+
+
+def test_ckpt_pack_dirty_nan_stable():
+    """Bitwise compare: an unchanged NaN payload reads CLEAN (== host
+    byte compare), unlike a value compare where NaN != NaN."""
+    block = 1024
+    x = np.asarray(_rand((2048,), jnp.float32)).copy()
+    x[100] = np.nan
+    xs = jnp.asarray(x)
+    _, _, mask = ops.ckpt_pack_dirty(xs, ops.pack_blocks(xs, block=block),
+                                     block=block)
+    assert not np.asarray(mask).any()
+
+
+def test_ckpt_pack_dirty_shape_mismatch():
+    x = _rand((2048,), jnp.float32)
+    prev2d = ops.pack_blocks(_rand((4096,), jnp.float32), block=1024)
+    with pytest.raises(ValueError):
+        ops.ckpt_pack_dirty(x, prev2d, block=1024)
+
+
 # ------------------------------------------------------- flash attention
 @pytest.mark.parametrize("B,H,KV,L,hd", [
     (1, 4, 4, 128, 64),       # MHA

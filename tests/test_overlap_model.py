@@ -3,7 +3,8 @@ import pytest
 
 from repro.configs import get_paper_config
 from repro.core.overlap import (IterationModel, checkpoint_seconds,
-                                effective_overhead, estimate_iteration,
+                                chunk_overlap_fraction, effective_overhead,
+                                estimate_iteration,
                                 recovery_overhead_gpu_seconds,
                                 required_bandwidth)
 from repro.core.partition import Topology
@@ -41,6 +42,49 @@ def test_pipelined_partial_stall():
     it = IterationModel(1.0, 2.0, 0.15)
     ov = effective_overhead(it, ckpt_seconds=3.5, pipelined=True)
     assert 0.0 < ov < effective_overhead(it, 3.5, pipelined=False)
+
+
+def test_chunk_overlap_fraction():
+    """1 - 1/n_chunks, clamped: monolithic (or chunk >= total) hides
+    nothing; more chunks hide more, asymptotically everything."""
+    assert chunk_overlap_fraction(1 << 30, 0) == 0.0
+    assert chunk_overlap_fraction(1 << 20, 1 << 20) == 0.0   # one chunk
+    assert chunk_overlap_fraction(2 << 20, 1 << 20) == pytest.approx(0.5)
+    fracs = [chunk_overlap_fraction(64 << 20, c << 20)
+             for c in (64, 32, 16, 8, 4, 2, 1)]
+    assert fracs == sorted(fracs)
+    assert fracs[-1] == pytest.approx(1 - 1 / 64)
+
+
+def test_snapshot_overlap_monotone():
+    """Satellite contract: more snapshot overlap ⇒ lower (never higher)
+    effective overhead, in both the hidden-write and spilling-write
+    regimes; f=0 reduces exactly to the monolithic formula."""
+    it = IterationModel(1.0, 2.0, 0.15)
+    for ck in (1.0, 2.5, 3.5):                 # hidden / edge / spilling
+        ovs = [effective_overhead(it, ck, True, serialize_s=0.8,
+                                  snapshot_overlap=f)
+               for f in (0.0, 0.25, 0.5, 0.75, 1.0)]
+        for a, b in zip(ovs, ovs[1:]):
+            assert b <= a + 1e-12, (ck, ovs)
+    assert effective_overhead(it, 2.5, True, serialize_s=0.8,
+                              snapshot_overlap=0.0) == \
+        pytest.approx(effective_overhead(it, 2.5, True, serialize_s=0.8))
+
+
+def test_snapshot_overlap_spill_regime():
+    """When write + staged copy overflow the fwd+bwd window, the hidden
+    fraction just moves time around — overlap can't beat the bandwidth
+    bound: stall >= (serialize + ckpt - fb) / total."""
+    it = IterationModel(1.0, 2.0, 0.15)
+    floor = (0.8 + 3.5 - it.fb) / it.total
+    ov = effective_overhead(it, 3.5, True, serialize_s=0.8,
+                            snapshot_overlap=1.0)
+    assert ov == pytest.approx(floor)
+    # unpipelined: nothing to hide behind — overlap param is inert
+    assert effective_overhead(it, 3.5, False, serialize_s=0.8,
+                              snapshot_overlap=1.0) == \
+        pytest.approx(effective_overhead(it, 3.5, False, serialize_s=0.8))
 
 
 def test_gas_reduces_overhead():
