@@ -18,6 +18,7 @@ FIG10_JSON = "experiments/fig10.json"
 FIG13_JSON = "experiments/fig13.json"
 FIG_DELTA_JSON = "experiments/fig_delta.json"
 FIG_SNAPSHOT_JSON = "experiments/fig_snapshot.json"
+FIG_PEER_JSON = "experiments/fig_peer.json"
 
 
 def fmt(x, digits=3):
@@ -248,6 +249,28 @@ def ckpt_snapshot_table():
               f"{c['host_x']} | {c['ok']} |")
 
 
+def ckpt_peer_table():
+    """§Peer-replication tier: fig_peer time-to-off-node-durability
+    cells (peer tier vs object tier, DESIGN.md §11)."""
+    if not os.path.exists(FIG_PEER_JSON):
+        return
+    with open(FIG_PEER_JSON) as f:
+        fp = json.load(f)
+    print("\n### Peer-replication durability tier "
+          "(measured on this host)\n")
+    print(f"{fp['mb']} MiB state, {fp['steps']} saves, emulated "
+          f"{fp.get('wan_latency_ms', '?')} ms WAN latency per object; "
+          f"peer tier reaches off-node durability "
+          f"{fp.get('tier_gap_x', '?')}x before the object tier "
+          f"— verdict: {fp.get('verdict', '?')}\n")
+    print("| fig_peer metric | value |")
+    print("|---|---|")
+    for k in ("t_replicated_ms", "t_uploaded_ms", "tier_gap_x",
+              "failover_ok", "failover_restore_s", "verdict"):
+        if k in fp:
+            print(f"| {k} | {fp[k]} |")
+
+
 if __name__ == "__main__":
     main()
     ckpt_write_tables()
@@ -255,3 +278,4 @@ if __name__ == "__main__":
     ckpt_tiered_table()
     ckpt_delta_table()
     ckpt_snapshot_table()
+    ckpt_peer_table()

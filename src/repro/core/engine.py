@@ -73,6 +73,23 @@ class CheckpointSpec:
     upload_store: Optional[object] = None
     #: per-object upload retry budget for the tiered backends
     upload_max_retries: int = 2
+    #: peer-replication tier (DESIGN.md §11): replication targets for
+    #: ANY backend — ``[name=]store[@failure_domain]`` specs,
+    #: :class:`repro.core.peer.PeerConfig` instances, or store objects.
+    #: After each local COMMIT the sealed generation (full delta chain)
+    #: is streamed to peers in the background; ``SaveHandle.
+    #: wait_replicated()`` is the peer-tier durability point and
+    #: ``engine.load(tier="peer")`` restores from the healthiest peer.
+    peers: Optional[Sequence[object]] = None
+    #: replicas each checkpoint should reach (placed across distinct
+    #: failure domains when available)
+    replication_factor: int = 2
+    #: this WRITER's failure domain — placement avoids it whenever any
+    #: other usable domain exists
+    failure_domain: Optional[str] = None
+    #: per-attempt wall-clock deadline on every peer operation (seconds;
+    #: None = unbounded) — a hung peer must never wedge the replicator
+    peer_op_timeout: Optional[float] = 30.0
 
 
 # ================================================================== handle
@@ -96,6 +113,7 @@ class SaveHandle:
         self._stats: Optional[SaveStats] = None
         self._exc: Optional[BaseException] = None
         self._upload = None          # UploadTicket, attached pre-finish
+        self._replication = None     # ReplicationTicket, ditto (§11)
 
     @classmethod
     def completed(cls, step: int, backend: str,
@@ -202,6 +220,56 @@ class SaveHandle:
         remaining = (None if timeout is None else
                      max(timeout - (time.perf_counter() - t0), 0.0))
         return self._upload.wait(remaining)
+
+    def _attach_replication(self, ticket):
+        # like _attach_upload: attached AFTER the local commit, BEFORE
+        # the handle finishes — wait() → wait_replicated() never races
+        self._replication = ticket
+
+    def replicated(self) -> bool:
+        """True once the peer tier holds this save (the replication job
+        committed its chain to at least one peer), or there is no peer
+        tier and the local save is done. A FAILED replication — zero
+        peers committed — is never "replicated"."""
+        if not self.done():
+            return False
+        if self._replication is None:
+            return True
+        if not self._replication.done() or \
+                self._replication._exc is not None:
+            return False
+        stats = self._replication._stats
+        return bool(stats is not None and stats.committed)
+
+    def wait_replicated(self, timeout: Optional[float] = None):
+        """Block until this save is durable on the PEER tier (DESIGN.md
+        §11) — the first OFF-NODE durability point, expected orders of
+        magnitude before :meth:`wait_uploaded`'s object-store commit.
+
+        Args:
+            timeout: seconds to wait (None = forever); ONE budget
+                covering the local wait and ALL K peer transfers
+                together — never K stacked timeouts.
+
+        Returns:
+            the save's :class:`repro.core.peer.ReplicationStats`
+            (``under_replicated`` flags a degraded K' < K landing), or
+            None when no peer tier is configured.
+
+        Raises:
+            TimeoutError: local save or replication still in flight.
+            BaseException: the save's failure, or the replication's —
+                a replication that committed to NO peer raises
+                :class:`repro.core.peer.ReplicationError` here and
+                never reports durable.
+        """
+        t0 = time.perf_counter()
+        self.wait(timeout)
+        if self._replication is None:
+            return None
+        remaining = (None if timeout is None else
+                     max(timeout - (time.perf_counter() - t0), 0.0))
+        return self._replication.wait(remaining)
 
     def exception(self, timeout: Optional[float] = None
                   ) -> Optional[BaseException]:
@@ -505,6 +573,7 @@ class EngineStats:
     arena_reuses: int = 0             # saves that refilled a cached arena
     #                                   in place (zero-alloc steady state)
     uploads_enqueued: int = 0         # commits handed to the upload tier
+    replications_enqueued: int = 0    # commits handed to the peer tier
 
 
 class CheckpointEngine:
@@ -531,6 +600,18 @@ class CheckpointEngine:
         self._read_backends: Dict[str, CheckpointBackend] = {
             spec.backend: self._backend}
         self._remote_store = None       # lazy, for non-tiered backends
+        # peer-replication tier (DESIGN.md §11): backend-agnostic — the
+        # ENGINE owns the replicator and enqueues at the same
+        # after-local-commit point the tiered backends upload from
+        self._replicator = None
+        if spec.peers:
+            from repro.core.peer import PeerReplicator
+            self._replicator = PeerReplicator(
+                spec.peers,
+                replication_factor=spec.replication_factor,
+                failure_domain=spec.failure_domain,
+                volume_roots=self.volume_roots(),
+                op_timeout=spec.peer_op_timeout)
         self._worker: Optional[_SaveWorker] = None   # started lazily
         self._inflight: List[SaveHandle] = []
         self._deferred_exc: Optional[BaseException] = None
@@ -753,6 +834,13 @@ class CheckpointEngine:
             self.stats.uploads_enqueued += 1
             if handle is not None:
                 handle._attach_upload(ticket)
+        # peer tier (DESIGN.md §11): same hook point, same pre-finish
+        # attach discipline — wait() → wait_replicated() never races
+        if self._replicator is not None:
+            rticket = self._replicator.enqueue(step, final, marker)
+            self.stats.replications_enqueued += 1
+            if handle is not None:
+                handle._attach_replication(rticket)
         return stats
 
     # ---------------------------------------------------------------- sync
@@ -810,11 +898,16 @@ class CheckpointEngine:
 
     def close(self):
         """Drain outstanding saves, stop the helper thread, and close
-        the backend."""
+        the backend (which drains its upload tier) and the peer
+        replicator."""
         try:
             self.drain()
         finally:
-            self._backend.close()
+            try:
+                self._backend.close()
+            finally:
+                if self._replicator is not None:
+                    self._replicator.close()
 
     def __enter__(self):
         return self
@@ -864,6 +957,11 @@ class CheckpointEngine:
         and then loaded through the normal (optionally parallel) local
         path. Requires ``spec.upload_store`` or a tiered backend.
 
+        ``tier="peer"`` restores from the peer-replication tier
+        (DESIGN.md §11): the newest fully-replicated chain is hydrated
+        from the healthiest peer holding it, falling back to the
+        remote tier when no peer can serve. Requires ``spec.peers``.
+
         ``sharding`` places the restored arrays onto devices: a single
         ``jax.sharding.Sharding`` (applied to every leaf) or a pytree of
         shardings matching the state — the hook for restoring onto a
@@ -883,11 +981,13 @@ class CheckpointEngine:
         state — the per-rank half of a genuinely distributed restore
         (``reader_rank`` / ``n_readers`` / ``ownership`` as in
         ``load_owned``)."""
-        if tier not in ("local", "remote"):
-            raise ValueError(f"tier must be 'local' or 'remote', "
-                             f"got {tier!r}")
+        if tier not in ("local", "peer", "remote"):
+            raise ValueError(f"tier must be 'local', 'peer' or "
+                             f"'remote', got {tier!r}")
         if tier == "remote":
             step = self.hydrate_remote(step)
+        elif tier == "peer":
+            step = self.hydrate_peer(step)
         if owned_only:
             return self.load_owned(reader_rank, n_readers, step=step,
                                    ownership=ownership, verify=verify)
@@ -1039,6 +1139,58 @@ class CheckpointEngine:
         return hydrate(store, self.spec.directory, step=step,
                        io_config=self.spec.fp.writer,
                        verify=self.spec.verify_on_load)
+
+    # ------------------------------------------------------------ peer tier
+    @property
+    def peer_replicator(self):
+        """The engine's :class:`repro.core.peer.PeerReplicator` (None
+        when ``spec.peers`` is unset)."""
+        return self._replicator
+
+    def wait_replicated(self):
+        """Block until every enqueued replication finished on the peer
+        tier (the peer analogue of :meth:`wait_uploaded`); re-raises
+        the first replication failure. Returns the drained jobs'
+        :class:`repro.core.peer.ReplicationStats` (empty without a
+        peer tier)."""
+        rep = self._replicator
+        return rep.drain() if rep is not None else []
+
+    def unreplicated_steps(self) -> List[int]:
+        """Steps not yet durable at the full replication target —
+        the peer tier's retention pin set (empty without one)."""
+        rep = self._replicator
+        return rep.unreplicated_steps() if rep is not None else []
+
+    def peer_status(self) -> List[dict]:
+        """Per-peer health snapshot (empty without a peer tier)."""
+        rep = self._replicator
+        return rep.peer_status() if rep is not None else []
+
+    def hydrate_peer(self, step: Optional[int] = None) -> int:
+        """Restore-from-peer failover (DESIGN.md §11): rebuild the
+        local checkpoint from the newest FULLY-replicated chain on the
+        healthiest peer (CRC-verified, crash-atomic local re-commit),
+        falling back to the remote tier when no peer holds a complete
+        chain, and raising only when neither tier can serve. Returns
+        the hydrated step. ``load(tier="peer")`` calls this first."""
+        rep = self._replicator
+        if rep is None:
+            raise ValueError(
+                "load(tier='peer') needs a peer tier: set "
+                "CheckpointSpec.peers")
+        try:
+            return rep.hydrate(self.spec.directory, step=step,
+                               io_config=self.spec.fp.writer,
+                               verify=self.spec.verify_on_load)
+        except FileNotFoundError as peer_miss:
+            if self.remote_store is None:
+                raise
+            import warnings
+            warnings.warn(
+                f"peer tier cannot serve the restore ({peer_miss}); "
+                f"falling back to the remote tier", stacklevel=2)
+            return self.hydrate_remote(step)
 
     #: read-path aliases: these backends share the fastpersist on-disk
     #: format, so loading THEIR checkpoints never needs their write-side

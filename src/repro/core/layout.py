@@ -268,6 +268,39 @@ def delta_base(directory: str) -> Optional[tuple]:
     return int(info["base_step"]), str(info.get("base_gen", ""))
 
 
+def chain_steps(primary_root: str, step: int,
+                max_hops: int = 10000) -> List[int]:
+    """The full restore chain of ``step`` under ``primary_root``,
+    oldest-first: ``[keyframe, ..., base, step]``. A full (non-delta)
+    checkpoint is its own one-element chain. Used by the peer tier to
+    ship every generation a replicated delta needs for replay
+    (DESIGN.md §11).
+
+    Raises:
+        CheckpointError: a chain link's base directory is missing
+            locally (the chain cannot be enumerated, let alone
+            replicated), or the chain exceeds ``max_hops`` links
+            (cyclic/corrupt metadata).
+    """
+    chain = [step]
+    cur = step
+    while True:
+        base = delta_base(os.path.join(primary_root, step_dir_name(cur)))
+        if base is None:
+            if os.path.isdir(os.path.join(primary_root,
+                                          step_dir_name(cur))):
+                return list(reversed(chain))
+            raise CheckpointError(
+                f"delta chain of step {step}: link step {cur} has no "
+                f"local directory under {primary_root}")
+        if len(chain) >= max_hops:
+            raise CheckpointError(
+                f"delta chain of step {step} exceeds {max_hops} links "
+                f"— cyclic or corrupt COMMIT metadata")
+        cur = base[0]
+        chain.append(cur)
+
+
 def generation_of(directory: str) -> Optional[str]:
     """The save-generation nonce of a committed step dir (marker first,
     manifest-meta fallback), or None when the dir predates generation

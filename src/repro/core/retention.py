@@ -11,12 +11,16 @@ Crash safety: a checkpoint directory is only eligible for deletion if a
 NEWER one is fully committed (manifest present), so an interruption
 mid-GC always leaves a loadable checkpoint.
 
-Tiered durability (upload-pinning rule): with an object tier behind the
-local NVMe, local retention may keep FEWER steps than the remote tier —
-but a step whose upload has not reached its remote COMMIT (queued, in
-flight, or failed) is PINNED: local GC must never delete what may be
-the only durable copy. ``remote_keep_last`` independently bounds the
-remote tier (0 = keep every uploaded step).
+Tiered durability (the pin rule, DESIGN.md §8/§11): with further tiers
+behind the local NVMe, local retention may keep FEWER steps than they
+do — but a step that is *not yet durable at the configured tier* is
+PINNED against local GC: for the object tier that means its upload has
+not reached the remote COMMIT (queued, in flight, or failed); for the
+peer tier that its replication has not reached the FULL replication
+target (queued, in flight, failed, or under-replicated). Local GC must
+never delete what may be the only — or the only fully-replicated —
+copy. ``remote_keep_last`` / ``peer_keep_last`` independently bound
+those tiers (0 = keep everything there).
 
 Delta chains (DESIGN.md §9): an incremental delta generation is only
 restorable while its base — transitively, its keyframe — exists. The
@@ -43,6 +47,11 @@ class RetentionPolicy:
     #: generation. Typically >= keep_last — short local NVMe window,
     #: long remote history.
     remote_keep_last: int = 0
+    #: peer-tier retention (DESIGN.md §11): keep this many most-recent
+    #: STEPS on every peer, 0 = keep every replicated generation. Peer
+    #: RAM/NVMe is the scarcest tier, so typically keep_last <=
+    #: peer_keep_last <= remote_keep_last.
+    peer_keep_last: int = 0
 
 
 def _committed_steps(directory: str) -> List[int]:
@@ -111,33 +120,49 @@ def collect(directory: str, policy: RetentionPolicy,
 class RetentionManager:
     """Runs GC off the critical path after each commit.
 
-    With ``upload`` (an :class:`repro.core.upload.UploadManager`), the
-    manager enforces the tiered rules: steps still queued/failed on the
-    upload tier are pinned against local deletion, and
-    ``policy.remote_keep_last`` prunes old remote generations after
-    each local sweep."""
+    With ``upload`` (an :class:`repro.core.upload.UploadManager`) and/or
+    ``peers`` (a :class:`repro.core.peer.PeerReplicator`), the manager
+    enforces the tiered pin rule — local GC skips every step not yet
+    durable at the configured tier: queued/failed uploads AND
+    queued/failed/under-replicated replications. ``policy.
+    remote_keep_last`` / ``policy.peer_keep_last`` prune old remote /
+    peer generations after each local sweep."""
 
     def __init__(self, directory: str, policy: RetentionPolicy,
                  volume_roots: Optional[Sequence[str]] = None,
-                 upload=None):
+                 upload=None, peers=None):
         self.directory = directory
         self.policy = policy
         self.volume_roots = volume_roots
         self.upload = upload
+        self.peers = peers
         self._lock = threading.Lock()
         self.deleted: List[int] = []
         self.remote_deleted: List[int] = []
+        self.peer_deleted: List[int] = []
+
+    def _pinned(self) -> set:
+        pinned = set()
+        if self.upload is not None:
+            pinned.update(self.upload.unuploaded_steps())
+        if self.peers is not None:
+            pinned.update(self.peers.unreplicated_steps())
+        return pinned
 
     def after_commit(self):
         """Call after a checkpoint commits (e.g. from the pipeline helper
-        or the trainer loop). Thread-safe, idempotent. Remote pruning is
-        only ENQUEUED here — it runs on the upload worker thread, so the
-        caller (the training loop) never blocks on WAN lists/deletes."""
+        or the trainer loop). Thread-safe, idempotent. Remote and peer
+        pruning are only ENQUEUED here — each runs on its own tier's
+        worker thread, so the caller (the training loop) never blocks on
+        WAN/peer lists-and-deletes; a dead peer is the replicator's
+        problem, never the trainer's."""
         with self._lock:
-            pinned = (self.upload.unuploaded_steps()
-                      if self.upload is not None else ())
             self.deleted += collect(self.directory, self.policy,
-                                    self.volume_roots, pinned=pinned)
+                                    self.volume_roots,
+                                    pinned=self._pinned())
             if self.upload is not None and self.policy.remote_keep_last:
                 self.upload.enqueue_prune(self.policy.remote_keep_last,
                                           on_done=self.remote_deleted.extend)
+            if self.peers is not None and self.policy.peer_keep_last:
+                self.peers.enqueue_prune(self.policy.peer_keep_last,
+                                         on_done=self.peer_deleted.extend)

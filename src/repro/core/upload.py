@@ -54,9 +54,10 @@ import threading
 import time
 import zlib
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple, Union)
 
-from repro.core import layout
+from repro.core import layout, retry
 
 #: remote marker object name; a generation without it is unobservable
 REMOTE_COMMIT = "COMMIT"
@@ -289,6 +290,8 @@ class UploadStats:
     n_skipped: int = 0          # already present (idempotent retry)
     bytes_uploaded: int = 0
     retries: int = 0            # per-object retry attempts consumed
+    attempts: int = 0           # total put attempts (incl. first tries)
+    backoff_seconds: float = 0.0    # time slept between retry attempts
     seconds: float = 0.0
     committed: bool = False     # remote COMMIT written (observable)
 
@@ -350,11 +353,18 @@ class UploadManager:
 
     def __init__(self, store: Union[str, ObjectStore],
                  volume_roots: Optional[Sequence[str]] = None,
-                 max_retries: int = 2, retry_backoff: float = 0.05):
+                 max_retries: int = 2, retry_backoff: float = 0.05,
+                 retry_policy: Optional[retry.RetryPolicy] = None):
         self.store = make_store(store)
         self.volume_roots = (list(volume_roots) if volume_roots else None)
         self.max_retries = max_retries
         self.retry_backoff = retry_backoff
+        # shared retry discipline (repro.core.retry): exponential
+        # backoff + full jitter, replacing the old bounded
+        # immediate-retry loop; an explicit policy wins over the
+        # legacy (max_retries, retry_backoff) knobs
+        self.retry_policy = retry_policy or retry.RetryPolicy(
+            max_retries=max_retries, base_backoff=retry_backoff)
         self._q: "queue.Queue" = queue.Queue()
         self._lock = threading.Lock()
         self._pending: Dict[int, int] = {}   # step → enqueued-not-committed
@@ -451,17 +461,17 @@ class UploadManager:
     # ------------------------------------------------------------ upload
     def _put_with_retry(self, key: str, path: str,
                         stats: UploadStats) -> None:
-        attempt = 0
-        while True:
-            try:
-                self.store.put_file(key, path)
-                return
-            except Exception:
-                attempt += 1
-                stats.retries += 1
-                if attempt > self.max_retries:
-                    raise
-                time.sleep(self.retry_backoff * attempt)
+        rst = retry.RetryStats()
+        try:
+            retry.call_with_retry(lambda: self.store.put_file(key, path),
+                                  self.retry_policy, stats=rst)
+        finally:
+            # surface the attempt/backoff accounting even when the
+            # budget is exhausted — a failed upload's cost is the most
+            # interesting one
+            stats.retries += rst.retries
+            stats.attempts += rst.attempts
+            stats.backoff_seconds += rst.backoff_seconds
 
     def _upload_one(self, step: int, directory: str,
                     marker: dict) -> UploadStats:
@@ -521,6 +531,8 @@ class UploadManager:
             t.n_skipped += s.n_skipped
             t.bytes_uploaded += s.bytes_uploaded
             t.retries += s.retries
+            t.attempts += s.attempts
+            t.backoff_seconds += s.backoff_seconds
             t.seconds += s.seconds
             t.step = max(t.step, s.step)
 
@@ -586,34 +598,53 @@ class UploadManager:
         step whose remote COMMIT records a delta keeps its base step
         (and so on down to the keyframe), else the surviving delta
         generation could never be hydrated."""
-        if keep_last <= 0:
-            return []
-        steps = remote_steps(self.store)
-        pinned = set(self.unuploaded_steps())
-        keep = set(steps[-keep_last:]) | pinned
-        frontier, seen = list(keep), set()
-        while frontier:
-            s = frontier.pop()
-            if s in seen:
-                continue
-            seen.add(s)
-            for st, gen in remote_generations(self.store, s):
-                d = read_remote_commit(self.store, st, gen).get("delta")
-                if isinstance(d, dict) and "base_step" in d:
-                    b = int(d["base_step"])
-                    if b not in keep:
-                        keep.add(b)
-                        frontier.append(b)
-        victims = [s for s in steps if s not in keep]
-        # newest-first, so a crash mid-prune never strands a delta
-        # whose (older) base is already gone
-        for s in sorted(victims, reverse=True):
-            for st, gen in remote_generations(self.store, s):
-                prefix = remote_prefix(st, gen)
-                self.store.delete(f"{prefix}/{REMOTE_COMMIT}")
-                for key in self.store.list(prefix + "/"):
-                    self.store.delete(key)
-        return sorted(victims)
+        return prune_store(self.store, keep_last,
+                           pinned=self.unuploaded_steps())
+
+
+def prune_store(store: ObjectStore, keep_last: int,
+                pinned: Iterable[int] = ()) -> List[int]:
+    """COMMIT-first retention sweep of ONE object store holding
+    ``ckpt_<step>.gen-<nonce>/`` generations — shared by the remote
+    tier (:meth:`UploadManager.prune_remote`) and the peer tier
+    (:meth:`repro.core.peer.PeerReplicator.prune_peers`).
+
+    Keeps the ``keep_last`` most recent steps plus every ``pinned``
+    step, then expands the keep set with every delta-chain ancestor a
+    kept generation references (a surviving delta must always stay
+    hydratable). Victims are deleted newest-first, and each
+    generation's COMMIT object is deleted FIRST — that atomically
+    un-commits it, so a crash mid-prune leaves only unreferenced
+    payload objects (the store analogue of
+    :func:`repro.core.layout.delete_step`). ``keep_last <= 0`` keeps
+    everything. Returns the pruned steps, sorted."""
+    if keep_last <= 0:
+        return []
+    steps = remote_steps(store)
+    keep = set(steps[-keep_last:]) | set(pinned)
+    frontier, seen = list(keep), set()
+    while frontier:
+        s = frontier.pop()
+        if s in seen:
+            continue
+        seen.add(s)
+        for st, gen in remote_generations(store, s):
+            d = read_remote_commit(store, st, gen).get("delta")
+            if isinstance(d, dict) and "base_step" in d:
+                b = int(d["base_step"])
+                if b not in keep:
+                    keep.add(b)
+                    frontier.append(b)
+    victims = [s for s in steps if s not in keep]
+    # newest-first, so a crash mid-prune never strands a delta
+    # whose (older) base is already gone
+    for s in sorted(victims, reverse=True):
+        for st, gen in remote_generations(store, s):
+            prefix = remote_prefix(st, gen)
+            store.delete(f"{prefix}/{REMOTE_COMMIT}")
+            for key in store.list(prefix + "/"):
+                store.delete(key)
+    return sorted(victims)
 
 
 # ============================================================ hydration

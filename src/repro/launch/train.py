@@ -89,11 +89,28 @@ def main():
                          "stream to the store AFTER each local commit, "
                          "and --restore falls back to the store when the "
                          "local checkpoint directory is empty/lost")
+    ap.add_argument("--peers", default=None,
+                    help="comma-separated peer-replication targets "
+                         "([name=]store[@failure_domain], e.g. "
+                         "/mnt/peers/n1@rack0,/mnt/peers/n2@rack1): "
+                         "after each local commit the sealed generation "
+                         "streams to K peers in the background "
+                         "(DESIGN.md §11); --restore falls back to the "
+                         "peer tier when the local dir is lost")
+    ap.add_argument("--replication-factor", type=int, default=2,
+                    help="replicas each checkpoint should reach on the "
+                         "peer tier (spread across distinct failure "
+                         "domains when available)")
+    ap.add_argument("--failure-domain", default=None,
+                    help="this node's failure domain; peer placement "
+                         "avoids it whenever another usable domain "
+                         "exists")
     ap.add_argument("--restore", action="store_true")
     ap.add_argument("--restore-tier", default="local",
-                    choices=["local", "remote"],
-                    help="force --restore to hydrate from the object "
-                         "store (remote) instead of local NVMe")
+                    choices=["local", "peer", "remote"],
+                    help="force --restore to hydrate from the peer tier "
+                         "or the object store (remote) instead of local "
+                         "NVMe")
     ap.add_argument("--restore-readers", default="auto",
                     help="parallel-restore reader workers: 'auto' sizes "
                          "to the saved shard count, an integer forces "
@@ -118,6 +135,10 @@ def main():
             volumes=(args.volumes.split(",") if args.volumes else None),
             restore_readers=restore_readers,
             upload=args.upload_store,
+            replicate_peers=(args.peers.split(",") if args.peers
+                             else None),
+            replication_factor=args.replication_factor,
+            failure_domain=args.failure_domain,
             keyframe_every=args.keyframe_every,
             fp=FastPersistConfig(
                 strategy=args.writers,

@@ -57,6 +57,19 @@ class CheckpointPolicy:
     #: and ``Trainer.restore`` can hydrate from it (``tier="remote"``,
     #: or automatically when the local directory is empty/lost).
     upload: Optional[object] = None
+    #: peer-replication tier (DESIGN.md §11): replication targets —
+    #: ``[name=]store[@failure_domain]`` specs / PeerConfig / store
+    #: objects. After each local commit the sealed generation streams
+    #: to K peers in the background; ``Trainer.restore(tier="peer")``
+    #: (or the automatic lost-node fallback) hydrates from the
+    #: healthiest peer, falling back to the remote tier.
+    replicate_peers: Optional[list] = None
+    #: replicas each checkpoint should reach (spread across distinct
+    #: failure domains when available)
+    replication_factor: int = 2
+    #: this node's failure domain — peer placement avoids it whenever
+    #: any other usable domain exists
+    failure_domain: Optional[str] = None
     #: incremental delta checkpoints (DESIGN.md §9): every Nth save is
     #: a full keyframe, the rest write only the dirty byte spans since
     #: the previous save. 1 (default) = every save is full. Requires
@@ -118,14 +131,19 @@ class Trainer:
     def _setup_checkpointer(self, pol: CheckpointPolicy):
         self.engine = CheckpointEngine(CheckpointSpec(
             directory=pol.directory, backend=pol.backend_name(), fp=pol.fp,
-            volumes=pol.volumes, upload_store=pol.upload))
+            volumes=pol.volumes, upload_store=pol.upload,
+            peers=pol.replicate_peers,
+            replication_factor=pol.replication_factor,
+            failure_domain=pol.failure_domain))
         # GC must follow the same volume mapping the engine writes with,
         # or deleting a step would strand its striped shards; with an
-        # upload tier it must also see the upload queue, so it never
+        # upload or peer tier it must also see those queues, so it never
         # deletes a step whose remote COMMIT has not landed (DESIGN §8)
+        # or whose replication is still short of the target (DESIGN §11)
         self._retain = (RetentionManager(pol.directory, pol.retention,
                                          self.engine.volume_roots(),
-                                         upload=self.engine.upload_manager)
+                                         upload=self.engine.upload_manager,
+                                         peers=self.engine.peer_replicator)
                         if pol.retention else None)
 
     # ------------------------------------------------------------ state
@@ -147,19 +165,27 @@ class Trainer:
         owned spans, async read backends — ``restore_readers`` in the
         policy). Returns the step.
 
-        ``tier="remote"`` forces hydration from the object tier; with
-        the default ``"local"``, a trainer whose local directory holds
-        no committed step but whose policy has an upload store falls
-        back to the remote tier automatically (the lost-node recovery
-        path — DESIGN.md §8)."""
+        ``tier="peer"`` forces hydration from the peer-replication tier
+        (DESIGN.md §11; itself falling back to remote when no peer
+        holds a complete chain); ``tier="remote"`` from the object
+        tier. With the default ``"local"``, a trainer whose local
+        directory holds no committed step walks the tiers
+        automatically — peer first when the policy replicates to
+        peers, then the upload store (the lost-node recovery path —
+        DESIGN.md §8/§11)."""
         assert self.engine is not None, "no checkpoint engine configured"
-        forced_remote = tier == "remote"
-        use_remote = forced_remote
-        if not use_remote and step is None \
-                and self.engine.latest_step() is None \
-                and self.engine.remote_store is not None:
-            use_remote = True           # local tier empty/lost → remote
-        if not use_remote:
+        if tier not in ("local", "peer", "remote"):
+            raise ValueError(f"tier must be 'local', 'peer' or "
+                             f"'remote', got {tier!r}")
+        forced = tier != "local"
+        use_tier = tier
+        if not forced and step is None \
+                and self.engine.latest_step() is None:
+            if self.engine.peer_replicator is not None:
+                use_tier = "peer"       # local tier empty/lost → peer
+            elif self.engine.remote_store is not None:
+                use_tier = "remote"     # ... → remote
+        if use_tier == "local":
             step = step if step is not None else self.engine.latest_step()
             if step is None:
                 return 0
@@ -169,16 +195,15 @@ class Trainer:
                    if self.cfg.checkpoint else None)
         try:
             restored, manifest = self.engine.load(
-                step, like=self.state, parallel=readers,
-                tier="remote" if use_remote else "local")
+                step, like=self.state, parallel=readers, tier=use_tier)
         except FileNotFoundError:
             # only the AUTOMATIC fallback may degrade to a fresh start;
-            # an operator who explicitly asked for the remote tier must
-            # hear that the bucket is empty (a mistyped store path would
+            # an operator who explicitly asked for the peer/remote tier
+            # must hear that it is empty (a mistyped store path would
             # otherwise silently retrain from scratch and shadow the
             # real history)
-            if use_remote and step is None and not forced_remote:
-                return 0                # neither tier has a checkpoint
+            if use_tier != "local" and step is None and not forced:
+                return 0                # no tier has a checkpoint
             raise
         # jnp.array COPIES: a parallel load returns views into the
         # engine's read arena, which the next load would refill —
@@ -231,11 +256,13 @@ class Trainer:
         if self.engine is not None:
             t_w = time.perf_counter()
             self.engine.drain()     # commit stragglers, park the worker
-            # a CLEAN exit also flushes the upload tier (the worker is
-            # a daemon thread — returning now would abandon the tail
-            # generations' remote COMMITs; a crash still degrades to
-            # the last fully-uploaded generation, DESIGN §8)
+            # a CLEAN exit also flushes the upload AND peer tiers (the
+            # workers are daemon threads — returning now would abandon
+            # the tail generations' remote/peer COMMITs; a crash still
+            # degrades to the last fully-uploaded / fully-replicated
+            # generation, DESIGN §8/§11)
             self.engine.wait_uploaded()
+            self.engine.wait_replicated()
             self.ckpt_stall += time.perf_counter() - t_w
         jax.block_until_ready(self.state.params)
         return self.state, metrics

@@ -1,0 +1,192 @@
+"""Reusable fault-injection toolkit for the durability tiers.
+
+The crash/corruption monkeypatching that used to be re-invented inside
+test_upload.py / test_delta.py / test_peer.py lives here once:
+
+  * :class:`FlakyStore` — a :class:`~repro.core.upload.LocalObjectStore`
+    with scripted failure schedules (fail a key's next N ops, fail
+    every COMMIT put, die outright after N ops), a dead/alive switch
+    (the dying peer), a slow-WAN gate (every put blocks until opened),
+    per-op latency, and success accounting (``put_ok``).
+  * torn-object helpers — :func:`truncate_object` /
+    :func:`corrupt_object` tamper with an already-stored object (the
+    torn-write-at-byte-N and bit-rot scenarios).
+  * :func:`crash_before_commit` — monkeypatch the LOCAL commit-marker
+    write to raise, i.e. a writer dying between payload and COMMIT.
+
+Everything here is deterministic: schedules are explicit counters, not
+random draws, so a failing test replays exactly.
+"""
+import threading
+import time
+from collections import Counter
+
+from repro.core.upload import LocalObjectStore, REMOTE_COMMIT
+
+
+class FlakyStore(LocalObjectStore):
+    """Filesystem mock bucket with scripted fault injection.
+
+    Knobs (all independent, all off by default):
+        fail_once: set of keys whose NEXT put/put_file raises (then
+            heals) — the transient blip.
+        fail_schedule: {key: n} — the key's next ``n`` puts raise; a
+            count of -1 never heals (a permanently poisoned key).
+        fail_commits: every put of a ``COMMIT`` object raises — the
+            uploader/replicator crashing between the local and remote
+            commit points (``_CommitlessStore`` of old).
+        die_after_ops: kill the store after this many successful
+            operations (the peer that drops mid-stream).
+        gate: when armed via :meth:`hold_puts`, every put blocks until
+            :meth:`release_puts` — the slow/clogged WAN link.
+        latency: seconds slept per operation (slow-WAN bandwidth sim).
+
+    A DEAD store (explicit :meth:`kill`, or tripped ``die_after_ops``)
+    raises ``IOError`` on EVERY operation — reads too — until
+    :meth:`revive`. Successful puts are counted per key in ``put_ok``
+    (idempotency assertions: ``all(v == 1 for v in put_ok.values())``).
+    """
+
+    def __init__(self, root, latency=0.0, die_after_ops=None,
+                 fail_commits=False):
+        super().__init__(root)
+        self.put_ok = Counter()
+        self.fail_once = set()
+        self.fail_schedule = {}
+        self.fail_commits = fail_commits
+        self.latency = latency
+        self.die_after_ops = die_after_ops
+        self.ops = 0
+        self.dead = False
+        self.gate = threading.Event()
+        self.gate.set()                      # open unless hold_puts()
+
+    # ------------------------------------------------------- fault dials
+    def kill(self):
+        """The peer drops off the network: every op fails until
+        :meth:`revive`."""
+        self.dead = True
+
+    def revive(self):
+        self.dead = False
+        self.die_after_ops = None
+
+    def hold_puts(self):
+        """Arm the slow-WAN gate: puts block until :meth:`release_puts`
+        (reads stay live, so COMMIT probes still answer)."""
+        self.gate.clear()
+
+    def release_puts(self):
+        self.gate.set()
+
+    # ---------------------------------------------------------- plumbing
+    def _op(self):
+        if self.dead:
+            raise IOError(f"injected dead store: {self.root}")
+        self.ops += 1
+        if self.die_after_ops is not None and self.ops > self.die_after_ops:
+            self.dead = True
+            raise IOError(f"injected dead store (after "
+                          f"{self.die_after_ops} ops): {self.root}")
+        if self.latency:
+            time.sleep(self.latency)
+
+    def _maybe_fail_put(self, key):
+        self._op()
+        self.gate.wait()
+        if self.fail_commits and key.endswith("/" + REMOTE_COMMIT):
+            raise IOError(f"injected crash before remote COMMIT: {key}")
+        if key in self.fail_once:
+            self.fail_once.discard(key)
+            raise IOError(f"injected transient failure for {key}")
+        n = self.fail_schedule.get(key, 0)
+        if n:
+            if n > 0:
+                self.fail_schedule[key] = n - 1
+            raise IOError(f"injected scheduled failure for {key}")
+
+    def put(self, key, data):
+        self._maybe_fail_put(key)
+        super().put(key, data)
+        self.put_ok[key] += 1
+
+    def put_file(self, key, path):
+        self._maybe_fail_put(key)
+        super().put_file(key, path)
+        self.put_ok[key] += 1
+
+    def get(self, key):
+        self._op()
+        return super().get(key)
+
+    def get_to(self, key, path):
+        self._op()
+        super().get_to(key, path)
+
+    def exists(self, key):
+        self._op()
+        return super().exists(key)
+
+    def size(self, key):
+        self._op()
+        return super().size(key)
+
+    def list(self, prefix=""):
+        self._op()
+        return super().list(prefix)
+
+    def delete(self, key):
+        self._op()
+        super().delete(key)
+
+
+class OrderAssertingStore(LocalObjectStore):
+    """Asserts the COMMIT object is written strictly LAST: at its put()
+    time every payload object its manifest names must already exist.
+    Works for both the upload and the peer replication protocol (they
+    share the remote generation layout)."""
+
+    def put(self, key, data):
+        assert key.endswith("/" + REMOTE_COMMIT), \
+            f"unexpected non-COMMIT put() of {key}"
+        import json
+        marker = json.loads(data.decode())
+        prefix = key.rsplit("/", 1)[0]
+        for name in marker["objects"]:
+            assert self.exists(f"{prefix}/{name}"), \
+                f"COMMIT written before payload object {name}"
+        super().put(key, data)
+
+
+# ================================================= torn-object tampering
+def truncate_object(store, key, at):
+    """Torn write: the stored object keeps only its first ``at`` bytes
+    (what a crash mid-transfer would leave on a store WITHOUT atomic
+    puts — or a buggy multipart assembly)."""
+    store.put(key, store.get(key)[:at])
+
+
+def corrupt_object(store, key, at, xor=0xFF):
+    """Bit-rot: XOR the byte at offset ``at`` of the stored object."""
+    data = bytearray(store.get(key))
+    data[at] ^= xor
+    store.put(key, bytes(data))
+
+
+# ================================================== local-commit crashes
+def crash_before_commit(monkeypatch,
+                        message="injected crash before COMMIT"):
+    """Make the engine's NEXT local COMMIT-marker write raise — the
+    writer dying after the payload but before the commit point. Returns
+    the real function so a test can restore it mid-way
+    (``monkeypatch.setattr(engine_mod.layout, "write_commit_marker",
+    real)``); the fixture auto-restores at teardown regardless."""
+    import repro.core.engine as engine_mod
+    from repro.core import layout
+    real = layout.write_commit_marker
+
+    def boom(*a, **kw):
+        raise RuntimeError(message)
+
+    monkeypatch.setattr(engine_mod.layout, "write_commit_marker", boom)
+    return real

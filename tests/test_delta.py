@@ -395,11 +395,8 @@ def test_crash_between_delta_write_and_commit(tmp_path, monkeypatch):
     eng.save(state, 0).wait()
 
     import repro.core.engine as engine_mod
-    real = layout.write_commit_marker
-
-    def boom(*a, **kw):
-        raise RuntimeError("injected crash before COMMIT")
-    monkeypatch.setattr(engine_mod.layout, "write_commit_marker", boom)
+    import faults
+    real = faults.crash_before_commit(monkeypatch)
     _touch(state, 1)
     with pytest.raises(RuntimeError, match="injected"):
         eng.save(state, 1).wait()

@@ -1,0 +1,558 @@
+"""Peer-replication durability tier (DESIGN.md §11).
+
+The fault-injection suite behind the PR's robustness claims: with 1 of
+3 peers dead, saves complete un-blocked and report under-replication; a
+crash before the peer COMMIT leaves the generation unobservable at the
+peer tier; ``engine.load(tier="peer")`` after a full local wipe
+restores bit-exactly (including a keyframe+delta chain) and falls back
+to the remote tier when no peer holds a complete chain. Plus placement
+(failure domains), health (ejection/probation), the one-budget
+``wait_replicated(timeout)`` semantics, and the three-tier retention
+interplay (pinning, orphan-free peer prune, dead-peer-tolerant prune).
+"""
+import glob
+import os
+import shutil
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+import faults
+
+from repro.core import layout, peer
+from repro.core.checkpointer import FastPersistConfig
+from repro.core.engine import CheckpointEngine, CheckpointSpec
+from repro.core.peer import (PeerConfig, PeerHealth, PeerReplicator,
+                             ReplicationError, chain_complete,
+                             fully_replicated_steps, make_peer)
+from repro.core.retention import RetentionManager, RetentionPolicy
+from repro.core.upload import (LocalObjectStore, remote_generations,
+                               remote_steps)
+
+
+def _state(n=512, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal(n).astype(np.float32),
+            "b": np.arange(7, dtype=np.float32)}
+
+
+def _mkpeers(tmp_path, n=3, cls=faults.FlakyStore, **kw):
+    """n fault-injectable peer stores, one failure domain each."""
+    stores = [cls(str(tmp_path / f"peer{i}"), **kw) for i in range(n)]
+    cfgs = [PeerConfig(name=f"n{i}", store=s, failure_domain=f"rack{i}")
+            for i, s in enumerate(stores)]
+    return stores, cfgs
+
+
+def _spec(tmp_path, cfgs, factor=2, **kw):
+    kw.setdefault("backend", "fastpersist")
+    return CheckpointSpec(directory=str(tmp_path / "prim"),
+                          peers=cfgs, replication_factor=factor,
+                          failure_domain="rack-writer", **kw)
+
+
+def _wipe_local(spec):
+    for root in [spec.directory, *(spec.volumes or [])]:
+        for p in glob.glob(os.path.join(root, "ckpt_*")):
+            shutil.rmtree(p, ignore_errors=True)
+
+
+# ============================================================ spec parse
+def test_make_peer_parsing(tmp_path):
+    p = make_peer(f"{tmp_path}/n1@rack0")
+    assert p.store == f"{tmp_path}/n1" and p.failure_domain == "rack0"
+    assert p.name == f"{tmp_path}/n1"
+    p = make_peer(f"alpha={tmp_path}/n2@rack1")
+    assert (p.name, p.failure_domain) == ("alpha", "rack1")
+    p = make_peer(f"{tmp_path}/plain")            # no domain suffix
+    assert p.failure_domain == ""
+    p = make_peer(f"{tmp_path}/odd@name/deeper")  # @ inside a path
+    assert p.failure_domain == "" and "odd@name" in p.store
+    cfg = PeerConfig("x", str(tmp_path), "r")
+    assert make_peer(cfg) is cfg
+    with pytest.raises(TypeError):
+        make_peer(123)
+    with pytest.raises(ValueError, match="duplicate"):
+        PeerReplicator([f"{tmp_path}/a", f"{tmp_path}/a"])
+    with pytest.raises(ValueError, match="at least one"):
+        PeerReplicator([])
+
+
+# ============================================================= happy path
+def test_replicate_wipe_restore_bit_exact(tmp_path):
+    """Save → wait_replicated → rm -rf local → load(tier='peer')."""
+    state = _state(seed=1)
+    stores, cfgs = _mkpeers(tmp_path)
+    spec = _spec(tmp_path, cfgs, factor=2)
+    with CheckpointEngine(spec) as eng:
+        h = eng.save(state, 3)
+        rs = h.wait_replicated()
+        assert rs.committed and not rs.under_replicated
+        assert rs.replicas == 2 and rs.target == 2
+        assert h.replicated()
+        assert eng.stats.replications_enqueued == 1
+        assert eng.unreplicated_steps() == []
+    # exactly 2 of the 3 peers hold the committed generation
+    holders = [s for s in stores if remote_steps(s) == [3]]
+    assert len(holders) == 2
+    # the peer COMMIT carries the same manifest the remote tier writes
+    assert all(fully_replicated_steps(s) == [3] for s in holders)
+
+    _wipe_local(spec)
+    with CheckpointEngine(spec) as eng:
+        assert eng.latest_step() is None
+        restored, _ = eng.load(tier="peer")
+        for k in state:
+            assert np.array_equal(np.asarray(restored[k]), state[k]), k
+        assert eng.latest_step() == 3      # hydration re-committed locally
+
+
+def test_peer_commit_written_strictly_last(tmp_path):
+    stores = [faults.OrderAssertingStore(str(tmp_path / f"peer{i}"))
+              for i in range(2)]
+    cfgs = [PeerConfig(f"n{i}", s, f"rack{i}")
+            for i, s in enumerate(stores)]
+    with CheckpointEngine(_spec(tmp_path, cfgs, factor=2)) as eng:
+        eng.save(_state(), 1).wait_replicated()
+    assert all(remote_steps(s) == [1] for s in stores)
+
+
+def test_wait_replicated_none_without_peer_tier(tmp_path):
+    spec = CheckpointSpec(directory=str(tmp_path / "p"),
+                          backend="fastpersist")
+    with CheckpointEngine(spec) as eng:
+        h = eng.save(_state(), 1)
+        assert h.wait_replicated() is None
+        assert h.replicated()
+        assert eng.wait_replicated() == []
+        with pytest.raises(ValueError, match="tier='peer'"):
+            eng.load(tier="peer")
+
+
+# ========================================================== degradation
+def test_one_dead_peer_save_unblocked_and_under_replicated(tmp_path):
+    """The headline robustness claim: 1 of 3 peers dead, the save
+    completes WITHOUT blocking training, reports K'=2 < K=3 loudly, and
+    the step stays pinned against local GC."""
+    state = _state(seed=2)
+    stores, cfgs = _mkpeers(tmp_path)
+    stores[1].kill()
+    spec = _spec(tmp_path, cfgs, factor=3)
+    with CheckpointEngine(spec) as eng:
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            h = eng.save(state, 5)
+            rs = h.wait_replicated(timeout=60)
+        assert rs.committed                       # durable, not blocked
+        assert rs.under_replicated
+        assert (rs.replicas, rs.target) == (2, 3)
+        assert h.replicated()                     # >=1 replica IS durable
+        assert any("UNDER-REPLICATED" in str(w.message) for w in rec)
+        rep = eng.peer_replicator
+        assert rep.totals.under_replicated_saves == 1
+        assert rep.unreplicated_steps() == [5]    # pinned: not at target
+        # ... but a restore works fine off the survivors
+        _wipe_local(spec)
+        got, _ = eng.load(tier="peer")
+        assert np.array_equal(np.asarray(got["w"]), state["w"])
+
+
+def test_all_peers_dead_replication_fails_never_durable(tmp_path):
+    stores, cfgs = _mkpeers(tmp_path)
+    for s in stores:
+        s.kill()
+    spec = _spec(tmp_path, cfgs, factor=2)
+    eng = CheckpointEngine(spec)
+    h = eng.save(_state(), 7)
+    with pytest.raises(ReplicationError):
+        h.wait_replicated(timeout=60)
+    assert not h.replicated()                     # FAILED != durable
+    rep = eng.peer_replicator
+    assert rep.unreplicated_steps() == [7]        # stays pinned
+    assert rep.totals.failed == 1
+    # drain re-raises too (a silently dropped generation would be worse)
+    with pytest.raises(ReplicationError):
+        eng.wait_replicated()                     # drain re-raises too
+    eng.close()                                   # failure consumed: clean
+    for s in stores:
+        s.revive()                                # inspectable again
+    assert all(remote_steps(s) == [] for s in stores)
+
+
+def test_crash_before_peer_commit_is_unobservable(tmp_path):
+    """Payload objects land, the peer COMMIT put dies: the generation
+    must not exist as far as any peer-tier reader is concerned."""
+    stores, cfgs = _mkpeers(tmp_path, fail_commits=True)
+    spec = _spec(tmp_path, cfgs, factor=2)
+    eng = CheckpointEngine(spec)
+    h = eng.save(_state(seed=3), 4)
+    with pytest.raises(ReplicationError):
+        h.wait_replicated(timeout=60)
+    assert not h.replicated()
+    # payload bytes are there, but no COMMIT → unobservable
+    assert any(s.list() for s in stores)
+    assert all(remote_steps(s) == [] for s in stores)
+    assert all(fully_replicated_steps(s) == [] for s in stores)
+    with pytest.raises(FileNotFoundError):
+        peer.hydrate_from_peers([(c.name, s) for c, s
+                                 in zip(cfgs, stores)], spec.directory)
+    with pytest.raises(ReplicationError):
+        eng.wait_replicated()
+    eng.close()
+
+
+def test_transient_peer_blip_heals_via_retry(tmp_path):
+    stores, cfgs = _mkpeers(tmp_path, n=2)
+    spec = _spec(tmp_path, cfgs, factor=2)
+    with CheckpointEngine(spec) as eng:
+        # poison ONE key's next put on each peer: in-attempt retry heals
+        h = eng.save(_state(seed=4), 1)
+        h.wait()
+        d = os.path.join(spec.directory, layout.step_dir_name(1))
+        marker = layout.verify_commit(d, deep=False)
+        from repro.core.upload import remote_generation, remote_prefix
+        prefix = remote_prefix(1, remote_generation(marker))
+        rs = h.wait_replicated()
+        assert rs.committed
+        for s in stores:
+            s.fail_once.add(f"{prefix}/{layout.commit_files(d, marker, None)[0]['name']}")
+        rs2 = eng.peer_replicator.enqueue(1, d, marker).wait()
+        assert rs2.committed and rs2.n_objects > 0
+        # idempotent: everything already committed → skipped, no dupes
+        assert all(v == 1 for s in stores for v in s.put_ok.values())
+
+
+# ======================================================= one-budget wait
+def test_wait_replicated_is_one_budget_across_peers(tmp_path):
+    """timeout=T is ONE budget over local wait + ALL K transfers — not
+    K stacked budgets."""
+    stores, cfgs = _mkpeers(tmp_path)
+    for s in stores:
+        s.hold_puts()                     # all transfers wedge
+    spec = _spec(tmp_path, cfgs, factor=3)
+    with CheckpointEngine(spec) as eng:
+        h = eng.save(_state(), 1)
+        t0 = time.perf_counter()
+        with pytest.raises(TimeoutError):
+            h.wait_replicated(timeout=0.3)
+        assert time.perf_counter() - t0 < 3.0     # nowhere near 3×, let
+        #                                           alone a deadline hit
+        for s in stores:
+            s.release_puts()
+        rs = h.wait_replicated(timeout=60)        # now it lands
+        assert rs.committed and rs.replicas == 3
+
+
+# ============================================================= placement
+def _replicator(tmp_path, cfgs, **kw):
+    kw.setdefault("op_timeout", 10.0)
+    return PeerReplicator(cfgs, **kw)
+
+
+def test_placement_avoids_writer_domain(tmp_path):
+    stores = [LocalObjectStore(str(tmp_path / f"p{i}")) for i in range(3)]
+    cfgs = [PeerConfig("same", stores[0], "rackW"),
+            PeerConfig("far1", stores[1], "rackA"),
+            PeerConfig("far2", stores[2], "rackB")]
+    rep = _replicator(tmp_path, cfgs, replication_factor=2,
+                      failure_domain="rackW")
+    chosen = {p.name for p in rep.place()}
+    assert chosen == {"far1", "far2"}             # writer's rack excluded
+    # ... unless NO other domain is usable at all
+    rep2 = _replicator(tmp_path, [cfgs[0]], replication_factor=1,
+                       failure_domain="rackW")
+    assert [p.name for p in rep2.place()] == ["same"]
+
+
+def test_placement_spreads_across_distinct_domains(tmp_path):
+    stores = [LocalObjectStore(str(tmp_path / f"p{i}")) for i in range(4)]
+    cfgs = [PeerConfig("a1", stores[0], "rackA"),
+            PeerConfig("a2", stores[1], "rackA"),
+            PeerConfig("b1", stores[2], "rackB"),
+            PeerConfig("c1", stores[3], "rackC")]
+    rep = _replicator(tmp_path, cfgs, replication_factor=3,
+                      failure_domain="rackW")
+    chosen = rep.place()
+    assert len(chosen) == 3
+    assert len({p.domain for p in chosen}) == 3   # 3 DISTINCT domains
+    # K beyond the domain count: fill from already-used domains
+    rep4 = _replicator(tmp_path, cfgs, replication_factor=4)
+    assert len(rep4.place()) == 4
+
+
+def test_placement_skips_ejected_peers(tmp_path):
+    stores = [LocalObjectStore(str(tmp_path / f"p{i}")) for i in range(2)]
+    cfgs = [PeerConfig("up", stores[0], "rackA"),
+            PeerConfig("down", stores[1], "rackB")]
+    rep = _replicator(tmp_path, cfgs, replication_factor=2,
+                      eject_after=1, probation_seconds=3600.0)
+    rep.peers[1].health.record_failure("dead")
+    assert [p.name for p in rep.place()] == ["up"]
+
+
+# ================================================================ health
+def test_health_ejection_and_probation_state_machine():
+    h = PeerHealth(eject_after=3, probation_seconds=10.0)
+    assert h.state(now=0.0) == "healthy" and h.usable(0.0)
+    h.record_failure("x", now=0.0)
+    h.record_failure("x", now=0.0)
+    assert h.state(0.0) == "healthy"              # under the budget
+    h.record_failure("x", now=0.0)                # 3rd consecutive
+    assert h.state(1.0) == "ejected" and not h.usable(1.0)
+    assert h.state(10.0) == "probation" and h.usable(10.0)
+    # failing the probation trial re-ejects IMMEDIATELY (no fresh
+    # failure budget) and restarts the clock
+    h.record_failure("x", now=10.0)
+    assert h.state(11.0) == "ejected"
+    assert h.state(19.0) == "ejected"             # clock restarted at 10
+    assert h.state(20.0) == "probation"
+    h.record_success()                            # trial passes
+    assert h.state(20.0) == "healthy"
+    assert h.consecutive_failures == 0
+
+
+def test_dying_peer_gets_ejected_then_survivors_carry(tmp_path):
+    stores, cfgs = _mkpeers(tmp_path)
+    spec = _spec(tmp_path, cfgs, factor=3)
+    with CheckpointEngine(spec) as eng:
+        rep = eng.peer_replicator
+        eng.save(_state(seed=1), 1).wait_replicated()
+        stores[2].kill()                          # peer drops mid-run
+        for step in (2, 3, 4):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                eng.save(_state(seed=step), step).wait_replicated()
+        status = {s["name"]: s for s in rep.peer_status()}
+        assert status["n2"]["state"] == "ejected"
+        assert rep.totals.ejections == 1
+        assert status["n0"]["state"] == status["n1"]["state"] == "healthy"
+        # survivors kept every generation flowing
+        for s in stores[:2]:
+            assert remote_steps(s) == [1, 2, 3, 4]
+
+
+# =========================================================== delta chains
+def _delta_engine(tmp_path, cfgs, factor=2):
+    spec = _spec(tmp_path, cfgs, factor=factor,
+                 fp=FastPersistConfig(keyframe_every=3))
+    return spec, CheckpointEngine(spec)
+
+
+def test_delta_chain_replicates_whole_and_restores(tmp_path):
+    """Keyframe+delta chains ship WHOLE to each peer and restore
+    bit-exactly after a full local wipe (the acceptance criterion)."""
+    stores, cfgs = _mkpeers(tmp_path)
+    spec, eng = _delta_engine(tmp_path, cfgs)
+    state = _state(seed=9)
+    want = {}
+    with eng:
+        for step in (1, 2, 3):
+            state = {k: v + np.float32(step) for k, v in state.items()}
+            want = {k: v.copy() for k, v in state.items()}
+            rs = eng.save(state, step).wait_replicated()
+            assert rs.committed
+        assert rs.chain_len == 3                  # kf(1) + d(2) + d(3)
+    holders = [s for s in stores if remote_steps(s)]
+    assert holders and all(
+        fully_replicated_steps(s) == [1, 2, 3] for s in holders)
+
+    _wipe_local(spec)
+    with CheckpointEngine(spec) as eng2:
+        got, _ = eng2.load(tier="peer")
+        for k in want:
+            assert np.array_equal(np.asarray(got[k]), want[k]), k
+
+
+def test_restore_requires_complete_chain_falls_back_to_remote(tmp_path):
+    """A peer holding a delta whose base generation is gone cannot serve
+    a restore; when NO peer holds a complete chain, load(tier='peer')
+    falls back to the remote tier (peer → remote → raise)."""
+    stores, cfgs = _mkpeers(tmp_path, n=2)
+    spec = _spec(tmp_path, cfgs, factor=2,
+                 upload_store=str(tmp_path / "bucket"),
+                 backend="fastpersist-tiered",
+                 fp=FastPersistConfig(keyframe_every=3))
+    state = _state(seed=11)
+    with CheckpointEngine(spec) as eng:
+        for step in (1, 2):
+            state = {k: v + np.float32(step) for k, v in state.items()}
+            want = {k: v.copy() for k, v in state.items()}
+            eng.save(state, step).wait_replicated()
+        eng.wait_uploaded()
+    # amputate the keyframe generation on EVERY peer: the delta (step 2)
+    # is committed there but its chain is broken
+    for s in stores:
+        for st, gen in remote_generations(s, 1):
+            for key in s.list(f"ckpt_{st:08d}.gen-{gen}"):
+                s.delete(key)
+        assert remote_steps(s) == [2]
+        assert not chain_complete(
+            s, 2, remote_generations(s, 2)[0][1])
+        assert fully_replicated_steps(s) == []
+    _wipe_local(spec)
+    with CheckpointEngine(spec) as eng2:
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            got, _ = eng2.load(tier="peer")       # falls back to remote
+        assert any("falling back to the remote tier" in str(w.message)
+                   for w in rec)
+        for k in want:
+            assert np.array_equal(np.asarray(got[k]), want[k]), k
+    # and with NO remote tier either: raise
+    _wipe_local(spec)
+    spec_no_remote = _spec(tmp_path, cfgs, factor=2)
+    with CheckpointEngine(spec_no_remote) as eng3:
+        with pytest.raises(FileNotFoundError):
+            eng3.load(tier="peer")
+
+
+def test_restore_picks_newest_step_across_peers(tmp_path):
+    stores, cfgs = _mkpeers(tmp_path, n=2)
+    spec = _spec(tmp_path, cfgs, factor=2)
+    with CheckpointEngine(spec) as eng:
+        s1, s2 = _state(seed=1), _state(seed=2)
+        eng.save(s1, 1).wait_replicated()
+        eng.save(s2, 2).wait_replicated()
+    # peer 0 loses step 2: only peer 1 can serve the newest
+    for st, gen in remote_generations(stores[0], 2):
+        for key in stores[0].list(f"ckpt_{st:08d}.gen-{gen}"):
+            stores[0].delete(key)
+    step, name = peer.hydrate_from_peers(
+        [("n0", stores[0]), ("n1", stores[1])], spec.directory)
+    assert (step, name) == (2, "n1")              # newest wins over order
+
+
+# ============================================== three-tier retention
+def test_under_replicated_steps_stay_pinned_until_target(tmp_path):
+    stores, cfgs = _mkpeers(tmp_path)
+    stores[2].kill()
+    spec = _spec(tmp_path, cfgs, factor=3)
+    with CheckpointEngine(spec) as eng:
+        retain = RetentionManager(spec.directory,
+                                  RetentionPolicy(keep_last=1),
+                                  eng.volume_roots(),
+                                  peers=eng.peer_replicator)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            for step in (1, 2):
+                eng.save(_state(seed=step), step).wait_replicated()
+                retain.after_commit()
+        # every step landed on only 2/3 peers → ALL pinned locally
+        assert retain.deleted == []
+        assert eng.steps() == [1, 2]
+        assert eng.unreplicated_steps() == [1, 2]
+
+        stores[2].revive()                        # the peer comes back
+        rep = eng.peer_replicator
+        for step in (1, 2):
+            d = os.path.join(spec.directory, layout.step_dir_name(step))
+            rs = rep.enqueue(step, d).wait()      # idempotent re-run
+            assert rs.replicas == 3 and not rs.under_replicated
+        assert eng.unreplicated_steps() == []
+        retain.after_commit()                     # policy applies again
+        assert retain.deleted == [1]
+        assert eng.steps() == [2]
+
+
+def test_peer_prune_leaves_no_orphan_objects(tmp_path):
+    stores, cfgs = _mkpeers(tmp_path, n=2)
+    spec = _spec(tmp_path, cfgs, factor=2)
+    with CheckpointEngine(spec) as eng:
+        retain = RetentionManager(
+            spec.directory,
+            RetentionPolicy(keep_last=2, peer_keep_last=2),
+            eng.volume_roots(), peers=eng.peer_replicator)
+        for step in (1, 2, 3, 4):
+            eng.save(_state(seed=step), step).wait_replicated()
+            retain.after_commit()
+        eng.wait_replicated()                     # flush queued prunes
+        rep = eng.peer_replicator
+        rep.enqueue_prune(2).wait()               # deterministic final sweep
+    for s in stores:
+        assert remote_steps(s) == [3, 4]
+        # COMMIT-first deletion left no unreferenced generation objects
+        from repro.core.upload import parse_remote_prefix
+        for key in s.list():
+            assert parse_remote_prefix(key.split("/", 1)[0])[0] in (3, 4)
+    assert sorted(set(retain.peer_deleted)) == [1, 2]
+
+
+def test_peer_prune_never_strands_chain_ancestors(tmp_path):
+    """keep_last=1 on the peer tier, but the kept step is a delta: its
+    keyframe/base generations must survive the prune (chain pinning),
+    and the pruned peer still serves a bit-exact restore."""
+    stores, cfgs = _mkpeers(tmp_path, n=2)
+    spec, eng = _delta_engine(tmp_path, cfgs)
+    state = _state(seed=21)
+    with eng:
+        for step in (1, 2, 3):
+            state = {k: v + np.float32(step) for k, v in state.items()}
+            want = {k: v.copy() for k, v in state.items()}
+            eng.save(state, step).wait_replicated()
+        eng.peer_replicator.prune_peers(keep_last=1)
+    for s in stores:
+        if not remote_steps(s):
+            continue
+        # steps 1..3 all survive: 3 is kept, 2 and 1 are its chain
+        assert fully_replicated_steps(s) == [1, 2, 3]
+    _wipe_local(spec)
+    with CheckpointEngine(spec) as eng2:
+        got, _ = eng2.load(tier="peer")
+        for k in want:
+            assert np.array_equal(np.asarray(got[k]), want[k]), k
+
+
+def test_peer_dying_mid_prune_does_not_wedge_retention(tmp_path):
+    stores, cfgs = _mkpeers(tmp_path)
+    spec = _spec(tmp_path, cfgs, factor=3)
+    with CheckpointEngine(spec) as eng:
+        for step in (1, 2, 3):
+            eng.save(_state(seed=step), step).wait_replicated()
+        rep = eng.peer_replicator
+        stores[1].kill()                          # dies before the sweep
+        victims = rep.enqueue_prune(1).wait()     # must NOT raise/wedge
+        assert victims == [1, 2]
+        for i in (0, 2):
+            assert remote_steps(stores[i]) == [3]
+        # the worker is still alive and serving: the next save replicates
+        stores[1].revive()
+        rs = eng.save(_state(seed=4), 4).wait_replicated()
+        assert rs.committed and rs.replicas == 3
+
+
+# ========================================================= trainer wiring
+def test_trainer_peer_policy_and_lost_node_restore(tmp_path):
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.core.partition import Topology
+    from repro.train.trainer import (CheckpointPolicy, Trainer,
+                                     TrainerConfig)
+
+    stores, cfgs = _mkpeers(tmp_path, n=2)
+    pol = CheckpointPolicy(
+        directory=str(tmp_path / "prim"), mode="fastpersist",
+        pipeline=False, every=2, replicate_peers=cfgs,
+        replication_factor=2, failure_domain="rack-writer",
+        fp=FastPersistConfig(strategy="replica",
+                             topology=Topology(dp_degree=1)))
+    cfg = TrainerConfig(model=reduced(get_config("stablelm_1_6b")),
+                        steps=4, global_batch=2, seq_len=16,
+                        log_every=1000, checkpoint=pol)
+    tr = Trainer(cfg)
+    state, _ = tr.run()
+    ref = [np.asarray(x) for x in jax.tree_util.tree_leaves(state.params)]
+    assert tr.engine.stats.replications_enqueued == 2
+    for s in stores:
+        assert remote_steps(s) == [2, 4]
+
+    # the node dies: local checkpoint dir is gone, a fresh trainer comes
+    # up and restores from the peer tier automatically
+    shutil.rmtree(tmp_path / "prim")
+    tr2 = Trainer(cfg)
+    start = tr2.restore()                         # automatic tier walk
+    assert start == 4
+    got = [np.asarray(x)
+           for x in jax.tree_util.tree_leaves(tr2.state.params)]
+    assert all(np.array_equal(a, b) for a, b in zip(ref, got))

@@ -1,0 +1,153 @@
+"""Shared retry discipline: exponential backoff + full jitter +
+per-attempt deadlines (repro/core/retry.py) — the helper both wide-area
+tiers (upload + peer replication) drive their store I/O through."""
+import random
+import time
+
+import pytest
+
+from repro.core import retry
+from repro.core.retry import (DeadlineExceeded, RetryPolicy, RetryStats,
+                              call_with_retry, deadline_call)
+
+
+# =============================================================== backoff
+def test_backoff_is_exponential_full_jitter():
+    pol = RetryPolicy(base_backoff=0.1, max_backoff=1.0)
+    rng = random.Random(7)
+    for attempt, cap in [(1, 0.1), (2, 0.2), (3, 0.4), (4, 0.8),
+                         (5, 1.0), (9, 1.0)]:           # capped
+        draws = [pol.backoff(attempt, rng) for _ in range(200)]
+        assert all(0.0 <= d <= cap for d in draws)
+        # FULL jitter: the draws actually spread over [0, cap], they
+        # are not pinned at the cap (no thundering herd)
+        assert min(draws) < cap * 0.2 and max(draws) > cap * 0.8
+
+
+def test_backoff_deterministic_with_seeded_rng():
+    pol = RetryPolicy(base_backoff=0.05)
+    a = [pol.backoff(i, random.Random(3)) for i in range(1, 5)]
+    b = [pol.backoff(i, random.Random(3)) for i in range(1, 5)]
+    assert a == b
+
+
+# ========================================================== retry driver
+def test_first_try_success_no_retry_accounting():
+    st = RetryStats()
+    out = call_with_retry(lambda: 42, RetryPolicy(), stats=st)
+    assert out == 42
+    assert (st.attempts, st.retries, st.backoff_seconds) == (1, 0, 0.0)
+
+
+def test_transient_failure_recovers_and_counts():
+    calls = []
+    slept = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise IOError("transient")
+        return "ok"
+
+    st = RetryStats()
+    out = call_with_retry(flaky, RetryPolicy(max_retries=3,
+                                             base_backoff=0.01),
+                          stats=st, rng=random.Random(0),
+                          sleep=slept.append)
+    assert out == "ok"
+    assert st.attempts == 3 and st.retries == 2
+    assert len(slept) == 2 and all(s >= 0.0 for s in slept)
+
+
+def test_budget_exhaustion_reraises_last_error():
+    st = RetryStats()
+    with pytest.raises(IOError, match="always"):
+        call_with_retry(lambda: (_ for _ in ()).throw(IOError("always")),
+                        RetryPolicy(max_retries=2, base_backoff=0.0),
+                        stats=st, sleep=lambda s: None)
+    assert st.attempts == 3 and st.retries == 2    # budget + 1 attempts
+
+
+def test_non_retryable_error_propagates_immediately():
+    st = RetryStats()
+
+    def bug():
+        raise IOError("should not be retried")
+
+    with pytest.raises(IOError):
+        call_with_retry(bug, RetryPolicy(max_retries=5,
+                                         retry_on=(ValueError,)),
+                        stats=st)
+    assert st.attempts == 1 and st.retries == 0
+
+
+# ============================================================= deadlines
+def test_deadline_call_passes_fast_ops_through():
+    assert deadline_call(lambda: "fast", timeout=5.0) == "fast"
+
+
+def test_deadline_call_kills_hung_op():
+    t0 = time.perf_counter()
+    with pytest.raises(DeadlineExceeded):
+        deadline_call(lambda: time.sleep(30.0), timeout=0.05)
+    assert time.perf_counter() - t0 < 5.0          # did NOT wait 30s
+
+
+def test_deadline_call_propagates_op_exception():
+    def boom():
+        raise ValueError("inner")
+    with pytest.raises(ValueError, match="inner"):
+        deadline_call(boom, timeout=5.0)
+
+
+def test_attempt_timeout_is_retried_and_counted():
+    calls = []
+
+    def hangs_once():
+        calls.append(1)
+        if len(calls) == 1:
+            time.sleep(30.0)
+        return "recovered"
+
+    st = RetryStats()
+    out = call_with_retry(hangs_once,
+                          RetryPolicy(max_retries=1, base_backoff=0.0,
+                                      attempt_timeout=0.05),
+                          stats=st, sleep=lambda s: None)
+    assert out == "recovered"
+    assert st.deadline_hits == 1 and st.retries == 1
+
+
+# ====================================================== tier integration
+def test_upload_manager_surfaces_attempts_and_backoff(tmp_path):
+    """Satellite check: UploadManager drives puts through the shared
+    helper and folds attempts/backoff time into its stats."""
+    import faults
+    from repro.core import layout
+    from repro.core.engine import CheckpointEngine, CheckpointSpec
+    from repro.core.upload import (UploadManager, remote_generation,
+                                   remote_prefix)
+    import numpy as np
+
+    spec = CheckpointSpec(directory=str(tmp_path / "p"),
+                          backend="fastpersist")
+    with CheckpointEngine(spec) as eng:
+        eng.save({"w": np.arange(256, dtype=np.float32)}, 1).wait()
+    d = tmp_path / "p" / layout.step_dir_name(1)
+    marker = layout.verify_commit(str(d), deep=False)
+    files = layout.commit_files(str(d), marker, None)
+
+    store = faults.FlakyStore(str(tmp_path / "bucket"))
+    gen = remote_generation(marker)
+    store.fail_once.add(f"{remote_prefix(1, gen)}/{files[0]['name']}")
+    mgr = UploadManager(store, retry_policy=retry.RetryPolicy(
+        max_retries=2, base_backoff=0.001))
+    try:
+        st = mgr.enqueue(1, str(d), marker).wait()
+        assert st.committed and st.retries == 1
+        assert st.attempts >= st.retries + 1       # first tries counted
+        assert st.backoff_seconds > 0.0            # it actually backed off
+        assert mgr.total.attempts == st.attempts
+        assert mgr.total.backoff_seconds == st.backoff_seconds
+    finally:
+        mgr.close()

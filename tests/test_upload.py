@@ -4,16 +4,17 @@ Covers the remote commit protocol end to end: mock-bucket round trips
 (save → wipe local → load(tier="remote")), remote-COMMIT-last crash
 atomicity, idempotent retries (no duplicate objects), the retention
 upload-pinning rule, CRC detection of corrupted remote shards on
-hydration, and remote pruning."""
+hydration, and remote pruning. Fault injection (crashing/flaky/gated
+stores) comes from the shared tests/faults.py toolkit."""
 import glob
 import os
 import shutil
-import threading
 import time
-from collections import Counter
 
 import numpy as np
 import pytest
+
+import faults
 
 from repro.core import layout, upload
 from repro.core.checkpointer import FastPersistConfig
@@ -186,18 +187,11 @@ def test_load_remote_requires_store(tmp_path):
 
 
 # ================================================ remote crash atomicity
-class _CommitlessStore(LocalObjectStore):
-    """Payload puts succeed; the remote COMMIT put (the only ``put`` of
-    bytes on the upload path) dies — the uploader crashing between the
-    local and remote commit points."""
-
-    def put(self, key, data):
-        raise IOError("injected crash before remote COMMIT")
-
-
 def test_crash_before_remote_commit_is_unobservable(tmp_path):
     state = _state(seed=3)
-    store = _CommitlessStore(str(tmp_path / "bucket"))
+    # payload puts succeed; the COMMIT put dies — the uploader crashing
+    # between the local and remote commit points
+    store = faults.FlakyStore(str(tmp_path / "bucket"), fail_commits=True)
     spec = _spec(tmp_path, store=store)
     with CheckpointEngine(spec) as eng:
         h = eng.save(state, 5)
@@ -220,23 +214,8 @@ def test_crash_before_remote_commit_is_unobservable(tmp_path):
         hydrate(store, spec.directory)
 
 
-class _OrderAssertingStore(LocalObjectStore):
-    """Asserts the remote COMMIT is written strictly LAST: at put()
-    time every payload object of the generation must already exist."""
-
-    def put(self, key, data):
-        assert key.endswith("/" + upload.REMOTE_COMMIT)
-        import json
-        marker = json.loads(data.decode())
-        prefix = key.rsplit("/", 1)[0]
-        for name in marker["objects"]:
-            assert self.exists(f"{prefix}/{name}"), \
-                f"COMMIT written before payload object {name}"
-        super().put(key, data)
-
-
 def test_remote_commit_written_last(tmp_path):
-    store = _OrderAssertingStore(str(tmp_path / "bucket"))
+    store = faults.OrderAssertingStore(str(tmp_path / "bucket"))
     spec = _spec(tmp_path, store=store)
     with CheckpointEngine(spec) as eng:
         eng.save(_state(seed=4), 2).wait_uploaded()
@@ -244,28 +223,6 @@ def test_remote_commit_written_last(tmp_path):
 
 
 # ===================================================== idempotent retry
-class _CountingStore(LocalObjectStore):
-    def __init__(self, root):
-        super().__init__(root)
-        self.put_ok = Counter()         # successful uploads per key
-        self.fail_once = set()          # keys that fail their next put
-
-    def _maybe_fail(self, key):
-        if key in self.fail_once:
-            self.fail_once.discard(key)
-            raise IOError(f"transient failure for {key}")
-
-    def put(self, key, data):
-        self._maybe_fail(key)
-        super().put(key, data)
-        self.put_ok[key] += 1
-
-    def put_file(self, key, path):
-        self._maybe_fail(key)
-        super().put_file(key, path)
-        self.put_ok[key] += 1
-
-
 def _committed_dir(tmp_path, step=1, seed=5):
     """One committed local checkpoint; returns (spec, dir, marker)."""
     spec = _spec(tmp_path, backend="fastpersist")
@@ -277,7 +234,7 @@ def _committed_dir(tmp_path, step=1, seed=5):
 
 def test_in_attempt_retry_recovers_transient_failure(tmp_path):
     spec, d, marker = _committed_dir(tmp_path)
-    store = _CountingStore(str(tmp_path / "bucket"))
+    store = faults.FlakyStore(str(tmp_path / "bucket"))
     files = layout.commit_files(d, marker, spec.volumes)
     store.fail_once.add(
         f"{remote_prefix(1, remote_generation(marker))}/{files[1]['name']}")
@@ -296,7 +253,7 @@ def test_partial_upload_retry_is_idempotent(tmp_path):
     re-enqueueing the same commit reuses its keys: already-landed
     objects are skipped, nothing is duplicated, COMMIT lands once."""
     spec, d, marker = _committed_dir(tmp_path)
-    store = _CountingStore(str(tmp_path / "bucket"))
+    store = faults.FlakyStore(str(tmp_path / "bucket"))
     files = layout.commit_files(d, marker, spec.volumes)
     gen = remote_generation(marker)
     # third object dies and the attempt has no retry budget
@@ -332,24 +289,10 @@ def test_partial_upload_retry_is_idempotent(tmp_path):
 
 
 # ================================================== retention interplay
-class _GatedStore(LocalObjectStore):
-    """Uploads block until the gate opens (a slow/clogged WAN link)."""
-
-    def __init__(self, root):
-        super().__init__(root)
-        self.gate = threading.Event()
-
-    def put(self, key, data):
-        self.gate.wait()
-        super().put(key, data)
-
-    def put_file(self, key, path):
-        self.gate.wait()
-        super().put_file(key, path)
-
-
 def test_retention_never_deletes_unuploaded_steps(tmp_path):
-    store = _GatedStore(str(tmp_path / "bucket"))
+    # uploads block until the gate opens (slow/clogged WAN link)
+    store = faults.FlakyStore(str(tmp_path / "bucket"))
+    store.hold_puts()
     spec = _spec(tmp_path, store=store)
     with CheckpointEngine(spec) as eng:
         retain = RetentionManager(spec.directory,
@@ -366,7 +309,7 @@ def test_retention_never_deletes_unuploaded_steps(tmp_path):
         assert sorted(eng.steps()) == [1, 2, 3, 4]
         assert sorted(eng.upload_manager.unuploaded_steps()) == [1, 2, 3, 4]
 
-        store.gate.set()                      # WAN comes back
+        store.release_puts()                  # WAN comes back
         eng.wait_uploaded()
         assert eng.upload_manager.unuploaded_steps() == []
         retain.after_commit()
@@ -377,7 +320,7 @@ def test_retention_never_deletes_unuploaded_steps(tmp_path):
 
 def test_failed_upload_stays_pinned(tmp_path):
     spec, d, marker = _committed_dir(tmp_path, step=9)
-    store = _CommitlessStore(str(tmp_path / "bucket2"))
+    store = faults.FlakyStore(str(tmp_path / "bucket2"), fail_commits=True)
     mgr = UploadManager(store, volume_roots=spec.volumes, max_retries=0)
     try:
         t = mgr.enqueue(9, d, marker)
