@@ -19,6 +19,7 @@ FIG13_JSON = "experiments/fig13.json"
 FIG_DELTA_JSON = "experiments/fig_delta.json"
 FIG_SNAPSHOT_JSON = "experiments/fig_snapshot.json"
 FIG_PEER_JSON = "experiments/fig_peer.json"
+FIG_SERVE_JSON = "experiments/fig_serve.json"
 
 
 def fmt(x, digits=3):
@@ -271,6 +272,35 @@ def ckpt_peer_table():
             print(f"| {k} | {fp[k]} |")
 
 
+def ckpt_serve_table():
+    """§Serving read path: fig_serve parallel-hydration, dedup,
+    read-cache, and per-tensor-read cells (DESIGN.md §12)."""
+    if not os.path.exists(FIG_SERVE_JSON):
+        return
+    with open(FIG_SERVE_JSON) as f:
+        fs = json.load(f)
+    print("\n### Checkpoint serving read path "
+          "(measured on this host)\n")
+    print(f"{fs['mb']} MiB state over an emulated "
+          f"{fs.get('wan_gbps', '?')} GB/s + "
+          f"{fs.get('wan_base_ms', '?')} ms/GET WAN link; 4-reader "
+          f"ranged hydration {fs.get('speedup_4x', '?')}x over serial, "
+          f"unchanged re-save deduped to metadata: "
+          f"{fs.get('dedup_metadata_only', '?')}, warm-cache rehydration "
+          f"fetched {fs.get('warm_fetched_bytes', '?')} B, single-tensor "
+          f"read pulled {fs.get('tensor_fetch_frac', '?')} of the "
+          f"checkpoint — verdict: {fs.get('verdict', '?')}\n")
+    print("| fig_serve metric | value |")
+    print("|---|---|")
+    for k in ("hydrate_r1_s", "hydrate_r2_s", "hydrate_r4_s",
+              "speedup_2x", "speedup_4x", "dedup_uploaded_objects",
+              "dedup_bytes_saved", "hydrate_warm_s",
+              "warm_fetched_bytes", "warm_hit_bytes", "tensor_bytes",
+              "tensor_fetched_bytes", "tensor_fetch_frac", "verdict"):
+        if k in fs:
+            print(f"| {k} | {fs[k]} |")
+
+
 if __name__ == "__main__":
     main()
     ckpt_write_tables()
@@ -279,3 +309,4 @@ if __name__ == "__main__":
     ckpt_delta_table()
     ckpt_snapshot_table()
     ckpt_peer_table()
+    ckpt_serve_table()

@@ -9,10 +9,11 @@ import traceback
 def main() -> None:
     quick = os.environ.get("FASTPERSIST_BENCH_FULL", "0") != "1"
     from benchmarks import (beyond_quant, fig2_baseline_util, fig_delta,
-                            fig_peer, fig_snapshot, fig7_buffer_sweep,
-                            fig8_parallel_writes, fig9_dense_models,
-                            fig10_moe, fig11_pipelining, fig12_projection,
-                            perf_writer, roofline, table1_bandwidth)
+                            fig_peer, fig_serve, fig_snapshot,
+                            fig7_buffer_sweep, fig8_parallel_writes,
+                            fig9_dense_models, fig10_moe, fig11_pipelining,
+                            fig12_projection, perf_writer, roofline,
+                            table1_bandwidth)
     from benchmarks.common import cleanup
 
     modules = [
@@ -29,6 +30,7 @@ def main() -> None:
         ("fig_delta", fig_delta),
         ("fig_snapshot", fig_snapshot),
         ("fig_peer", fig_peer),
+        ("fig_serve", fig_serve),
         ("roofline", roofline),
     ]
     print("name,us_per_call,derived")

@@ -90,6 +90,15 @@ class CheckpointSpec:
     #: per-attempt wall-clock deadline on every peer operation (seconds;
     #: None = unbounded) — a hung peer must never wedge the replicator
     peer_op_timeout: Optional[float] = 30.0
+    #: concurrent range-fetch workers for remote/peer hydration
+    #: (DESIGN.md §12) — the read-side mirror of the parallel restore
+    #: width; 1 = serial object-by-object download
+    hydrate_readers: int = 4
+    #: hot-shard read cache budget in MiB (DESIGN.md §12): 0 disables;
+    #: > 0 backs hydration and ``load_tensor(tier="remote"|"peer")``
+    #: with a digest-keyed LRU block cache at
+    #: ``<directory>/.serve-cache``
+    serve_cache_mb: int = 0
 
 
 # ================================================================== handle
@@ -600,6 +609,13 @@ class CheckpointEngine:
         self._read_backends: Dict[str, CheckpointBackend] = {
             spec.backend: self._backend}
         self._remote_store = None       # lazy, for non-tiered backends
+        self._serve_cache = None        # lazy, DESIGN.md §12 read cache
+        #: :class:`repro.core.upload.HydrateStats` of the most recent
+        #: hydrate_remote/hydrate_peer call (None before the first)
+        self.last_hydrate_stats = None
+        #: :class:`repro.core.serve.TensorReadStats` of remote/peer
+        #: ``load_tensor`` calls, append-only
+        self.last_serve: List[object] = []
         # peer-replication tier (DESIGN.md §11): backend-agnostic — the
         # ENGINE owns the replicator and enqueues at the same
         # after-local-commit point the tiered backends upload from
@@ -1061,10 +1077,57 @@ class CheckpointEngine:
             if b is not self._backend:
                 b.invalidate_arena()
 
-    def load_tensor(self, name: str, step: Optional[int] = None):
+    def load_tensor(self, name: str, step: Optional[int] = None,
+                    tier: str = "local"):
         """Partial restore of one tensor by manifest name, reading only
         the byte spans the global index maps it to — across however many
-        shards/volumes the writer striped it onto."""
+        shards/volumes the writer striped it onto.
+
+        ``tier="remote"`` / ``tier="peer"`` (DESIGN.md §12) serve the
+        tensor STRAIGHT from the object/peer tier — no local
+        checkpoint, no hydration: the spans are range-fetched (through
+        the serving read cache when ``spec.serve_cache_mb > 0``) and
+        decoded, so an inference worker pulls one embedding slice or
+        expert for a fraction of the checkpoint's bytes. Wire
+        accounting lands in ``engine.last_serve``. The peer tier scans
+        peers healthiest-first and falls back to the remote store."""
+        if tier not in ("local", "peer", "remote"):
+            raise ValueError(f"tier must be 'local', 'peer' or "
+                             f"'remote', got {tier!r}")
+        if tier == "remote":
+            store = self.remote_store
+            if store is None:
+                raise ValueError(
+                    "load_tensor(tier='remote') needs an object store: "
+                    "set CheckpointSpec.upload_store or use a "
+                    "fastpersist-tiered backend")
+            from repro.core.serve import load_tensor_remote
+            return load_tensor_remote(store, name, step=step,
+                                      cache=self.serve_cache,
+                                      stats_out=self.last_serve)
+        if tier == "peer":
+            rep = self._replicator
+            if rep is None:
+                raise ValueError(
+                    "load_tensor(tier='peer') needs a peer tier: set "
+                    "CheckpointSpec.peers")
+            from repro.core.serve import load_tensor_remote
+            miss = None
+            for _pname, pstore in rep.ordered_restore_peers():
+                try:
+                    return load_tensor_remote(pstore, name, step=step,
+                                              cache=self.serve_cache,
+                                              stats_out=self.last_serve)
+                except FileNotFoundError as e:
+                    miss = e                 # peer has no such step
+                except OSError as e:
+                    miss = e                 # unreachable peer: next
+            if self.remote_store is not None:
+                return self.load_tensor(name, step=step, tier="remote")
+            raise FileNotFoundError(
+                f"no peer can serve tensor {name!r}"
+                f"{f' of step {step}' if step is not None else ''}"
+                f" ({miss})")
         if step is None:
             step = self.latest_step()
             if step is None:
@@ -1103,6 +1166,22 @@ class CheckpointEngine:
             self._remote_store = make_store(self.spec.upload_store)
         return self._remote_store
 
+    @property
+    def serve_cache(self):
+        """The engine's :class:`repro.core.serve.ReadCache` (DESIGN.md
+        §12) at ``<directory>/.serve-cache``, built lazily from
+        ``spec.serve_cache_mb``; None when the cache is disabled (the
+        default). Digest-keyed, so its blocks are valid across steps,
+        generations, peers, and engine restarts."""
+        if self.spec.serve_cache_mb <= 0:
+            return None
+        if self._serve_cache is None:
+            from repro.core.serve import ReadCache
+            self._serve_cache = ReadCache(
+                os.path.join(self.spec.directory, ".serve-cache"),
+                max_bytes=int(self.spec.serve_cache_mb) << 20)
+        return self._serve_cache
+
     def wait_uploaded(self):
         """Block until every enqueued upload reached its remote COMMIT
         (the remote-tier analogue of :meth:`wait`); re-raises the first
@@ -1124,21 +1203,31 @@ class CheckpointEngine:
         steps = self.remote_steps()
         return steps[-1] if steps else None
 
-    def hydrate_remote(self, step: Optional[int] = None) -> int:
+    def hydrate_remote(self, step: Optional[int] = None,
+                       readers: Optional[int] = None) -> int:
         """Materialise a remote generation locally (download + CRC
         verification + crash-atomic local re-commit; intact local shard
-        files are reused). Returns the hydrated step. ``load(tier=
-        "remote")`` calls this before the normal local load."""
+        files are reused). The missing bytes are range-fetched
+        ``spec.hydrate_readers`` wide (override with ``readers``)
+        through the serving read cache when enabled; byte accounting
+        lands in ``engine.last_hydrate_stats``. Returns the hydrated
+        step. ``load(tier="remote")`` calls this before the normal
+        local load."""
         store = self.remote_store
         if store is None:
             raise ValueError(
                 "load(tier='remote') needs an object store: set "
                 "CheckpointSpec.upload_store or use a fastpersist-tiered "
                 "backend")
-        from repro.core.upload import hydrate
+        from repro.core.upload import HydrateStats, hydrate
+        self.last_hydrate_stats = HydrateStats()
         return hydrate(store, self.spec.directory, step=step,
                        io_config=self.spec.fp.writer,
-                       verify=self.spec.verify_on_load)
+                       verify=self.spec.verify_on_load,
+                       readers=(self.spec.hydrate_readers
+                                if readers is None else readers),
+                       cache=self.serve_cache,
+                       stats=self.last_hydrate_stats)
 
     # ------------------------------------------------------------ peer tier
     @property
@@ -1167,7 +1256,8 @@ class CheckpointEngine:
         rep = self._replicator
         return rep.peer_status() if rep is not None else []
 
-    def hydrate_peer(self, step: Optional[int] = None) -> int:
+    def hydrate_peer(self, step: Optional[int] = None,
+                     readers: Optional[int] = None) -> int:
         """Restore-from-peer failover (DESIGN.md §11): rebuild the
         local checkpoint from the newest FULLY-replicated chain on the
         healthiest peer (CRC-verified, crash-atomic local re-commit),
@@ -1179,10 +1269,16 @@ class CheckpointEngine:
             raise ValueError(
                 "load(tier='peer') needs a peer tier: set "
                 "CheckpointSpec.peers")
+        from repro.core.upload import HydrateStats
+        self.last_hydrate_stats = HydrateStats()
         try:
             return rep.hydrate(self.spec.directory, step=step,
                                io_config=self.spec.fp.writer,
-                               verify=self.spec.verify_on_load)
+                               verify=self.spec.verify_on_load,
+                               readers=(self.spec.hydrate_readers
+                                        if readers is None else readers),
+                               cache=self.serve_cache,
+                               stats=self.last_hydrate_stats)
         except FileNotFoundError as peer_miss:
             if self.remote_store is None:
                 raise
@@ -1190,7 +1286,7 @@ class CheckpointEngine:
             warnings.warn(
                 f"peer tier cannot serve the restore ({peer_miss}); "
                 f"falling back to the remote tier", stacklevel=2)
-            return self.hydrate_remote(step)
+            return self.hydrate_remote(step, readers=readers)
 
     #: read-path aliases: these backends share the fastpersist on-disk
     #: format, so loading THEIR checkpoints never needs their write-side

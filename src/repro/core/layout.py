@@ -581,8 +581,8 @@ def clean_stale_multi(primary_root: str,
 
 
 def commit_files(directory: str, marker: Optional[dict] = None,
-                 volume_roots: Optional[Sequence[str]] = None
-                 ) -> List[dict]:
+                 volume_roots: Optional[Sequence[str]] = None,
+                 digests: bool = False) -> List[dict]:
     """Enumerate every payload file a committed checkpoint references,
     across ALL volumes — the manifest-driven input to the upload tier
     (DESIGN.md §8) and to anything else that must walk a whole step.
@@ -593,6 +593,11 @@ def commit_files(directory: str, marker: Optional[dict] = None,
             omitted (raises :class:`TornCheckpointError` if absent).
         volume_roots: fallback roots for relocated volumes, as in
             :func:`resolve_shard_dir`.
+        digests: guarantee a ``crc32`` on EVERY entry — files the
+            marker recorded no CRC for (``manifest.json``, baseline
+            payloads) get one computed from their bytes here. The
+            content-addressed upload/replication keyspace (DESIGN.md
+            §12) derives each object's digest from this CRC + size.
 
     Returns:
         ``[{"path", "name", "size", "volume", "crc32"?}, ...]`` —
@@ -625,7 +630,23 @@ def commit_files(directory: str, marker: Optional[dict] = None,
         if sh.get("crc32") is not None:
             entry["crc32"] = sh["crc32"]
         out.append(entry)
+    if digests:
+        for entry in out:
+            if "crc32" not in entry:
+                entry["crc32"] = _path_crc32(entry["path"])
     return out
+
+
+def _path_crc32(path: str, chunk: int = 1 << 20) -> int:
+    """Streamed CRC32 of one file (digest source for payload files the
+    writer recorded no CRC for)."""
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(chunk)
+            if not block:
+                return crc & 0xFFFFFFFF
+            crc = zlib.crc32(block, crc)
 
 
 def delete_step(primary_root: str, step: int,

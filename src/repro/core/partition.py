@@ -402,6 +402,22 @@ class ReadPlan:
             assert max(loads) - min(loads) <= 1, "reader imbalance > 1B"
 
 
+def stripe_ranges(total: int, n: int) -> List[Tuple[int, int]]:
+    """Balanced byte-striping of ``[0, total)`` into ``n`` contiguous
+    ``(lo, hi)`` ranges with at most 1 byte of imbalance — the single
+    carving rule shared by the write plan, :func:`make_read_plan`, and
+    the remote tier's parallel ranged hydration
+    (:mod:`repro.core.serve`), so every layer agrees on byte geometry."""
+    assert n >= 1, "need at least one range"
+    base, rem = divmod(max(total, 0), n)
+    out, lo = [], 0
+    for r in range(n):
+        ln = base + (1 if r < rem else 0)
+        out.append((lo, lo + ln))
+        lo += ln
+    return out
+
+
 def _plan_extents(saved_plan) -> List[dict]:
     """Normalize a saved plan (WritePlan or the manifest's plan dict)
     to extent dicts sorted by stream offset. Layout-v1 extents carry no
@@ -497,12 +513,8 @@ def make_read_plan(saved_plan, index: Optional[dict], n_readers: int,
     spans: List[ReadSpan] = []
 
     if ownership is None:
-        base, rem = divmod(total, n_readers)
-        lo = 0
-        for r in range(n_readers):
-            ln = base + (1 if r < rem else 0)
-            spans.extend(_stream_range_spans(exts, ends, r, lo, lo + ln))
-            lo += ln
+        for r, (lo, hi) in enumerate(stripe_ranges(total, n_readers)):
+            spans.extend(_stream_range_spans(exts, ends, r, lo, hi))
         plan = ReadPlan(total, n_readers, tuple(
             sorted(spans, key=lambda s: (s.reader, s.stream_offset))),
             source="stripe", covered_bytes=total)
@@ -527,13 +539,9 @@ def make_read_plan(saved_plan, index: Optional[dict], n_readers: int,
         if own is None:
             # tensors nobody claimed: balanced striping so coverage
             # stays full and the allgather needs no special cases
-            base, rem = divmod(nbytes, n_readers)
-            lo = 0
-            for r in range(n_readers):
-                ln = base + (1 if r < rem else 0)
+            for r, (lo, hi) in enumerate(stripe_ranges(nbytes, n_readers)):
                 spans.extend(_tensor_range_spans(by_shard, index_spans,
-                                                 r, lo, lo + ln))
-                lo += ln
+                                                 r, lo, hi))
             continue
         ranges = ([(int(own), 0, nbytes)] if isinstance(own, int)
                   else [(int(r), int(a), int(b)) for r, a, b in own])

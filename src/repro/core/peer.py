@@ -65,11 +65,11 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core import layout, retry
-from repro.core.upload import (ObjectStore, REMOTE_COMMIT, hydrate,
-                               make_store, prune_store,
-                               read_remote_commit, remote_generations,
-                               remote_prefix, remote_generation,
-                               remote_steps)
+from repro.core.upload import (ObjectStore, REMOTE_COMMIT, cas_key,
+                               entry_digest, hydrate, make_store,
+                               prune_store, read_remote_commit,
+                               remote_generations, remote_prefix,
+                               remote_generation, remote_steps)
 
 
 class ReplicationError(IOError):
@@ -486,7 +486,8 @@ class PeerReplicator:
             entries.append({
                 "step": s, "marker": m,
                 "gen": remote_generation(m),
-                "files": layout.commit_files(d, m, self.volume_roots),
+                "files": layout.commit_files(d, m, self.volume_roots,
+                                             digests=True),
             })
         return entries
 
@@ -524,8 +525,12 @@ class PeerReplicator:
                 if self._op(peer, lambda: peer.store.exists(commit_key)):
                     res.n_skipped += len(e["files"])
                     continue
+                # content-addressed keys (DESIGN.md §12): a delta
+                # chain's keyframe ships ONCE per peer no matter how
+                # many later links re-enqueue it, and unchanged shards
+                # across steps dedupe exactly as on the remote tier
                 for f in e["files"]:
-                    key = f"{prefix}/{f['name']}"
+                    key = cas_key(entry_digest(f))
                     if self._object_ok(peer.store, key, f["size"],
                                        f.get("crc32")):
                         res.n_skipped += 1
@@ -543,6 +548,8 @@ class PeerReplicator:
                 peer_marker["object_crc32"] = {
                     f["name"]: f["crc32"]
                     for f in e["files"] if "crc32" in f}
+                peer_marker["object_digest"] = {
+                    f["name"]: entry_digest(f) for f in e["files"]}
                 peer_marker["uploaded_at"] = time.time()
                 peer_marker["replicated_by"] = self.failure_domain or ""
                 blob = json.dumps(peer_marker, sort_keys=True).encode()
@@ -771,13 +778,15 @@ class PeerReplicator:
                 for p in sorted(self.peers, key=rank)]
 
     def hydrate(self, primary_root: str, step: Optional[int] = None,
-                io_config=None, verify: bool = True) -> int:
+                io_config=None, verify: bool = True, readers: int = 1,
+                cache=None, stats=None) -> int:
         """Restore-from-peer (``engine.load(tier="peer")`` lands
         here): hydrate the newest fully-replicated chain from the
         healthiest peer holding it. See :func:`hydrate_from_peers`."""
         hydrated, peer_name = hydrate_from_peers(
             self.ordered_restore_peers(), primary_root, step=step,
-            io_config=io_config, verify=verify)
+            io_config=io_config, verify=verify, readers=readers,
+            cache=cache, stats=stats)
         return hydrated
 
 
@@ -832,7 +841,8 @@ def fully_replicated_steps(store: ObjectStore) -> List[int]:
 
 def hydrate_from_peers(peers: Sequence[Tuple[str, ObjectStore]],
                        primary_root: str, step: Optional[int] = None,
-                       io_config=None, verify: bool = True
+                       io_config=None, verify: bool = True,
+                       readers: int = 1, cache=None, stats=None
                        ) -> Tuple[int, str]:
     """Rebuild a local checkpoint from the peer tier.
 
@@ -849,7 +859,10 @@ def hydrate_from_peers(peers: Sequence[Tuple[str, ObjectStore]],
         peers: ordered (name, store) pairs.
         primary_root: the engine's primary checkpoint directory.
         step: specific step; newest fully-replicated when None.
-        io_config / verify: as in :func:`repro.core.upload.hydrate`.
+        io_config / verify / readers / cache / stats: as in
+            :func:`repro.core.upload.hydrate` (parallel ranged
+            hydration and the serving read cache work against a peer's
+            store exactly as against the remote tier).
 
     Returns:
         ``(hydrated step, serving peer's name)``.
@@ -880,5 +893,6 @@ def hydrate_from_peers(peers: Sequence[Tuple[str, ObjectStore]],
         (c for c in candidates if c[0] == best_step),
         key=lambda c: c[1])
     hydrated = hydrate(store, primary_root, step=best_step,
-                       io_config=io_config, verify=verify)
+                       io_config=io_config, verify=verify,
+                       readers=readers, cache=cache, stats=stats)
     return hydrated, name

@@ -120,6 +120,23 @@ def read_stream(path: str, spans: Sequence[Tuple[int, int, int]],
     return stats
 
 
+def file_crc32(path: str, size: int, config=None) -> int:
+    """Whole-file CRC32 through the async span reader (one span, CRC
+    folded hot) — the same read path restores use, so a backend whose
+    reads are broken fails here too instead of 'verifying' garbage.
+    Shared by the hydration/upload tiers and the serving read cache."""
+    if size == 0:
+        return 0
+    from repro.core.writer import WriterConfig
+    cfg = config or WriterConfig()
+    if not getattr(cfg, "checksum", False):
+        from dataclasses import replace
+        cfg = replace(cfg, checksum=True)
+    dest = memoryview(bytearray(size))
+    st = read_stream(path, [(0, 0, size)], dest, cfg)
+    return st.span_crcs[0]
+
+
 # ------------------------------------------------------- CRC32 algebra
 def _gf2_matrix_times(mat: List[int], vec: int) -> int:
     s = 0

@@ -27,6 +27,15 @@ restorable while its base — transitively, its keyframe — exists. The
 keep set is therefore expanded with every chain ancestor of a kept
 step before victims are chosen, so retention never deletes a keyframe
 (or intermediate delta) that a live delta still references.
+
+Content-addressed payloads (DESIGN.md §12): on the remote/peer tiers a
+pruned generation deletes only its COMMIT and metadata eagerly — the
+``cas/<digest>`` payload objects it references are REFCOUNTED by the
+surviving COMMITs, and :func:`repro.core.upload.collect_cas_orphans`
+sweeps exactly the unreferenced ones afterwards (on the tier's worker
+thread, where uploads serialize). A shard digest shared with a kept
+generation therefore outlives any one prune, so dedup never makes
+retention lossy.
 """
 from __future__ import annotations
 

@@ -105,6 +105,16 @@ def main():
                     help="this node's failure domain; peer placement "
                          "avoids it whenever another usable domain "
                          "exists")
+    ap.add_argument("--hydrate-readers", type=int, default=4,
+                    help="concurrent ranged-GET readers for remote/peer "
+                         "hydration — missing bytes are byte-striped "
+                         "this wide when the store supports ranged "
+                         "reads (DESIGN.md §12)")
+    ap.add_argument("--serve-cache-mb", type=int, default=0,
+                    help="serving read-cache budget in MiB (0 = off): "
+                         "hydration and per-tensor remote reads go "
+                         "through a digest-keyed LRU block cache under "
+                         "<ckpt-dir>/.serve-cache (DESIGN.md §12)")
     ap.add_argument("--restore", action="store_true")
     ap.add_argument("--restore-tier", default="local",
                     choices=["local", "peer", "remote"],
@@ -140,6 +150,8 @@ def main():
             replication_factor=args.replication_factor,
             failure_domain=args.failure_domain,
             keyframe_every=args.keyframe_every,
+            hydrate_readers=args.hydrate_readers,
+            serve_cache_mb=args.serve_cache_mb,
             fp=FastPersistConfig(
                 strategy=args.writers,
                 topology=Topology(dp_degree=args.dp, ranks_per_node=4),

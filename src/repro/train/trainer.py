@@ -76,6 +76,14 @@ class CheckpointPolicy:
     #: the serialize arena; copied into ``fp.keyframe_every`` unless
     #: the FastPersistConfig already sets it.
     keyframe_every: int = 1
+    #: range-fetch readers for remote/peer hydration (DESIGN.md §12):
+    #: missing bytes are byte-striped across this many concurrent
+    #: ranged GETs when the store supports them.
+    hydrate_readers: int = 4
+    #: serving read cache budget in MiB (DESIGN.md §12): 0 disables;
+    #: > 0 routes hydration and per-tensor remote reads through a
+    #: digest-keyed LRU block cache under ``<directory>/.serve-cache``.
+    serve_cache_mb: int = 0
 
     def __post_init__(self):
         if self.keyframe_every > 1 and self.fp.keyframe_every == 1:
@@ -134,7 +142,9 @@ class Trainer:
             volumes=pol.volumes, upload_store=pol.upload,
             peers=pol.replicate_peers,
             replication_factor=pol.replication_factor,
-            failure_domain=pol.failure_domain))
+            failure_domain=pol.failure_domain,
+            hydrate_readers=pol.hydrate_readers,
+            serve_cache_mb=pol.serve_cache_mb))
         # GC must follow the same volume mapping the engine writes with,
         # or deleting a step would strand its striped shards; with an
         # upload or peer tier it must also see those queues, so it never

@@ -119,9 +119,9 @@ class FlakyStore(LocalObjectStore):
         self._op()
         return super().get(key)
 
-    def get_to(self, key, path):
+    def get_to(self, key, path, offset=0, length=None):
         self._op()
-        super().get_to(key, path)
+        super().get_to(key, path, offset=offset, length=length)
 
     def exists(self, key):
         self._op()
@@ -152,9 +152,15 @@ class OrderAssertingStore(LocalObjectStore):
         import json
         marker = json.loads(data.decode())
         prefix = key.rsplit("/", 1)[0]
+        digests = marker.get("object_digest") or {}
         for name in marker["objects"]:
-            assert self.exists(f"{prefix}/{name}"), \
-                f"COMMIT written before payload object {name}"
+            if name in digests:           # content-addressed keyspace
+                from repro.core.upload import cas_key
+                obj_key = cas_key(digests[name])
+            else:                         # legacy per-prefix layout
+                obj_key = f"{prefix}/{name}"
+            assert self.exists(obj_key), \
+                f"COMMIT written before payload object {name} ({obj_key})"
         super().put(key, data)
 
 

@@ -212,12 +212,12 @@ def test_transient_peer_blip_heals_via_retry(tmp_path):
         h.wait()
         d = os.path.join(spec.directory, layout.step_dir_name(1))
         marker = layout.verify_commit(d, deep=False)
-        from repro.core.upload import remote_generation, remote_prefix
-        prefix = remote_prefix(1, remote_generation(marker))
+        from repro.core.upload import cas_key, entry_digest
         rs = h.wait_replicated()
         assert rs.committed
+        first = layout.commit_files(d, marker, None, digests=True)[0]
         for s in stores:
-            s.fail_once.add(f"{prefix}/{layout.commit_files(d, marker, None)[0]['name']}")
+            s.fail_once.add(cas_key(entry_digest(first)))
         rs2 = eng.peer_replicator.enqueue(1, d, marker).wait()
         assert rs2.committed and rs2.n_objects > 0
         # idempotent: everything already committed → skipped, no dupes
@@ -472,10 +472,18 @@ def test_peer_prune_leaves_no_orphan_objects(tmp_path):
         rep.enqueue_prune(2).wait()               # deterministic final sweep
     for s in stores:
         assert remote_steps(s) == [3, 4]
-        # COMMIT-first deletion left no unreferenced generation objects
-        from repro.core.upload import parse_remote_prefix
+        # COMMIT-first deletion left no unreferenced objects: surviving
+        # COMMITs belong to kept steps, and every surviving cas/ payload
+        # is referenced by a surviving COMMIT (refcounted digest GC)
+        from repro.core.upload import (CAS_PREFIX, parse_remote_prefix,
+                                       referenced_digests)
+        refs = referenced_digests(s)
         for key in s.list():
-            assert parse_remote_prefix(key.split("/", 1)[0])[0] in (3, 4)
+            if key.startswith(CAS_PREFIX + "/"):
+                assert key[len(CAS_PREFIX) + 1:] in refs, key
+            else:
+                assert parse_remote_prefix(key.split("/", 1)[0])[0] \
+                    in (3, 4)
     assert sorted(set(retain.peer_deleted)) == [1, 2]
 
 

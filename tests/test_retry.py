@@ -125,8 +125,7 @@ def test_upload_manager_surfaces_attempts_and_backoff(tmp_path):
     import faults
     from repro.core import layout
     from repro.core.engine import CheckpointEngine, CheckpointSpec
-    from repro.core.upload import (UploadManager, remote_generation,
-                                   remote_prefix)
+    from repro.core.upload import UploadManager, cas_key, entry_digest
     import numpy as np
 
     spec = CheckpointSpec(directory=str(tmp_path / "p"),
@@ -135,11 +134,10 @@ def test_upload_manager_surfaces_attempts_and_backoff(tmp_path):
         eng.save({"w": np.arange(256, dtype=np.float32)}, 1).wait()
     d = tmp_path / "p" / layout.step_dir_name(1)
     marker = layout.verify_commit(str(d), deep=False)
-    files = layout.commit_files(str(d), marker, None)
+    files = layout.commit_files(str(d), marker, None, digests=True)
 
     store = faults.FlakyStore(str(tmp_path / "bucket"))
-    gen = remote_generation(marker)
-    store.fail_once.add(f"{remote_prefix(1, gen)}/{files[0]['name']}")
+    store.fail_once.add(cas_key(entry_digest(files[0])))
     mgr = UploadManager(store, retry_policy=retry.RetryPolicy(
         max_retries=2, base_backoff=0.001))
     try:

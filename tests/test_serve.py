@@ -1,0 +1,452 @@
+"""Checkpoint serving read path (DESIGN.md §12).
+
+Covers the content-addressed dedup layer (metadata-only re-uploads,
+refcounted prune that is orphan-free AND dangling-free), ranged
+``get_to`` + the legacy-store compatibility shim, parallel ranged
+hydration (bit-exact at 4 readers, byte-level stats, size-first local
+reuse), the hot-shard read cache (LRU byte bound, CRC quarantine +
+refetch, single-flight concurrent fills, dedup hits across a delta
+chain), and the per-tensor remote/peer read (< 20% of checkpoint
+bytes for one small tensor)."""
+import glob
+import os
+import shutil
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import layout, upload
+from repro.core.checkpointer import FastPersistConfig
+from repro.core.engine import CheckpointEngine, CheckpointSpec
+from repro.core.partition import Topology, stripe_ranges
+from repro.core.serve import ReadCache, load_tensor_remote
+from repro.core.upload import (HydrateStats, LocalObjectStore, ObjectStore,
+                               cas_key, collect_cas_orphans, entry_digest,
+                               hydrate, prune_store, ranged_get_to,
+                               referenced_digests, remote_steps,
+                               supports_ranged_get)
+
+
+def _state(n=5000, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal(n).astype(np.float32),
+            "b": np.arange(17, dtype=np.float32)}
+
+
+def _spec(tmp_path, backend="fastpersist-tiered", store=None, writers=4,
+          volumes=True, **kw):
+    d = str(tmp_path)
+    vols = ([os.path.join(d, "v0"), os.path.join(d, "v1")]
+            if volumes else None)
+    fp = kw.pop("fp", FastPersistConfig(strategy="replica",
+                                        topology=Topology(dp_degree=writers)))
+    return CheckpointSpec(
+        directory=os.path.join(d, "prim"), backend=backend, volumes=vols,
+        upload_store=(store if store is not None
+                      else os.path.join(d, "bucket")),
+        fp=fp, **kw)
+
+
+def _wipe_local(spec):
+    for root in [spec.directory, *(spec.volumes or [])]:
+        for p in glob.glob(os.path.join(root, "ckpt_*")):
+            shutil.rmtree(p, ignore_errors=True)
+
+
+class _CountingStore(LocalObjectStore):
+    """Counts get_to calls (and their ranges) — wire-traffic assertions."""
+
+    def __init__(self, root, latency=0.0):
+        super().__init__(root)
+        self.fetches = []            # (key, offset, length)
+        self.latency = latency
+        self._lk = threading.Lock()
+
+    def get_to(self, key, path, offset=0, length=None):
+        with self._lk:
+            self.fetches.append((key, offset, length))
+        if self.latency:
+            import time
+            time.sleep(self.latency)
+        super().get_to(key, path, offset=offset, length=length)
+
+
+class _Legacy2ArgStore(LocalObjectStore):
+    """An out-of-tree store written against the pre-serving protocol:
+    get_to takes (key, path) only — must keep working via the shim."""
+
+    def __init__(self, root):
+        super().__init__(root)
+        self.full_fetches = 0
+
+    def get_to(self, key, path):                  # noqa: legacy signature
+        self.full_fetches += 1
+        LocalObjectStore.get_to(self, key, path)
+
+
+# ===================================================== ranged get_to
+def test_local_store_ranged_get_to(tmp_path):
+    s = LocalObjectStore(str(tmp_path / "b"))
+    blob = bytes(range(256)) * 4
+    s.put("k", blob)
+    dst = str(tmp_path / "dst")
+    s.get_to("k", dst, offset=100, length=50)
+    with open(dst, "rb") as f:
+        assert f.read() == blob[100:150]          # exactly the range
+    s.get_to("k", dst, offset=1000)               # open-ended tail
+    with open(dst, "rb") as f:
+        assert f.read() == blob[1000:]
+    s.get_to("k", dst)                            # whole object
+    with open(dst, "rb") as f:
+        assert f.read() == blob
+
+
+def test_ranged_shim_for_legacy_stores(tmp_path):
+    s = _Legacy2ArgStore(str(tmp_path / "b"))
+    blob = b"0123456789" * 100
+    s.put("k", blob)
+    assert not supports_ranged_get(s)
+    assert supports_ranged_get(LocalObjectStore(str(tmp_path / "b2")))
+    dst = str(tmp_path / "dst")
+    ranged_get_to(s, "k", dst, offset=10, length=20)
+    with open(dst, "rb") as f:
+        assert f.read() == blob[10:30]            # correct range anyway
+    assert s.full_fetches == 1                    # via ONE full download
+    assert not os.path.exists(dst + ".full-%d-%d" % (
+        os.getpid(), threading.get_ident()))      # scratch cleaned up
+
+
+def test_stripe_ranges_balanced():
+    rs = stripe_ranges(10, 4)
+    assert rs == [(0, 3), (3, 6), (6, 8), (8, 10)]
+    assert stripe_ranges(0, 3) == [(0, 0), (0, 0), (0, 0)]
+    lens = [hi - lo for lo, hi in stripe_ranges(1 << 20, 7)]
+    assert max(lens) - min(lens) <= 1 and sum(lens) == 1 << 20
+
+
+# ============================================ content-addressed dedup
+def test_second_save_dedupes_unchanged_shards(tmp_path):
+    """Re-saving identical state uploads METADATA ONLY: every payload
+    shard dedupes against the first generation's cas/ objects."""
+    state = _state(seed=1)
+    spec = _spec(tmp_path)
+    with CheckpointEngine(spec) as eng:
+        st1 = eng.save(state, 1).wait_uploaded()
+        n_objects_after_1 = len(eng.remote_store.list())
+        st2 = eng.save(state, 2).wait_uploaded()
+    assert st1.n_deduped == 0
+    shard_bytes = sum(v for k, v in _newest_commit(
+        eng.remote_store)["objects"].items() if k != layout.MANIFEST_FILE)
+    # only the manifest (per-save nonce) can cross the wire again
+    assert st2.n_uploaded <= 1
+    assert st2.bytes_deduped >= shard_bytes > 0
+    assert st2.n_deduped >= st2.n_objects - 1
+    # the bucket grew by at most manifest + COMMIT — not a second copy
+    assert len(eng.remote_store.list()) <= n_objects_after_1 + 2
+
+
+def _newest_commit(store):
+    s, g = upload.remote_generations(store)[-1]
+    return upload.read_remote_commit(store, s, g)
+
+
+def test_refcounted_prune_is_orphan_and_dangling_free(tmp_path):
+    """The dedup acceptance criterion: pruning a step whose shard
+    digests are SHARED with a kept step must keep those cas/ objects
+    (no dangling reference), delete everything else of the victim (no
+    orphans), and the kept step must still hydrate bit-exactly."""
+    state = _state(seed=2)
+    spec = _spec(tmp_path)
+    with CheckpointEngine(spec) as eng:
+        eng.save(state, 1).wait_uploaded()        # same bytes as step 2
+        eng.save(state, 2).wait_uploaded()        # → shared digests
+        eng.save(_state(seed=3), 3).wait_uploaded()
+    store = eng.remote_store
+    assert prune_store(store, keep_last=2) == [1]
+    assert remote_steps(store) == [2, 3]
+    refs = referenced_digests(store)
+    cas_keys = {k for k in store.list(upload.CAS_PREFIX + "/")}
+    # no orphans: every surviving cas/ object is referenced …
+    assert {k[len(upload.CAS_PREFIX) + 1:] for k in cas_keys} == refs
+    # … and no dangling references: every referenced digest exists
+    for d in refs:
+        assert store.exists(cas_key(d)), f"dangling digest {d}"
+    # the kept step (whose payloads the victim shared) still restores
+    _wipe_local(spec)
+    with CheckpointEngine(spec) as eng2:
+        got, _ = eng2.load(step=2, tier="remote")
+        for k in state:
+            assert np.array_equal(np.asarray(got[k]), state[k]), k
+
+
+def test_cas_orphan_sweep_ignores_referenced_digests(tmp_path):
+    store = LocalObjectStore(str(tmp_path / "b"))
+    spec = _spec(tmp_path, store=store)
+    with CheckpointEngine(spec) as eng:
+        eng.save(_state(seed=4), 1).wait_uploaded()
+    live = referenced_digests(store)
+    assert live
+    store.put(cas_key("deadbeef-1000"), b"\0" * 4096)   # a true orphan
+    removed = collect_cas_orphans(store)
+    assert removed == [cas_key("deadbeef-1000")]
+    for d in live:
+        assert store.exists(cas_key(d))
+
+
+# ================================================== parallel hydration
+def test_parallel_hydration_bit_exact(tmp_path):
+    """4-reader striped range fetch rebuilds the checkpoint bit-exactly
+    after a total local wipe (the default engine path)."""
+    state = _state(n=200_000, seed=5)
+    store = _CountingStore(str(tmp_path / "bucket"))
+    spec = _spec(tmp_path, store=store)
+    with CheckpointEngine(spec) as eng:
+        eng.save(state, 1).wait_uploaded()
+    _wipe_local(spec)
+    with CheckpointEngine(spec) as eng2:
+        assert eng2.spec.hydrate_readers == 4     # the default width
+        got, _ = eng2.load(tier="remote")
+        for k in state:
+            assert np.array_equal(np.asarray(got[k]), state[k]), k
+        st = eng2.last_hydrate_stats
+    assert st is not None and st.steps == [1]
+    assert st.fetched_bytes > 0 and st.n_fetched == st.n_objects
+    assert st.reused_bytes == 0                   # nothing local survived
+    # the big payloads were fetched as RANGES, several per object
+    ranged = [f for f in store.fetches if f[2] is not None]
+    assert len(ranged) >= 4
+
+
+def test_hydration_readers_one_matches_serial_protocol(tmp_path):
+    state = _state(seed=6)
+    store = _CountingStore(str(tmp_path / "bucket"))
+    spec = _spec(tmp_path, store=store)
+    with CheckpointEngine(spec) as eng:
+        eng.save(state, 1).wait_uploaded()
+    _wipe_local(spec)
+    store.fetches.clear()
+    stats = HydrateStats()
+    assert hydrate(store, spec.directory, readers=1, stats=stats) == 1
+    # serial path: one WHOLE-object fetch per object, no ranges
+    assert all(off == 0 and ln is None for _, off, ln in store.fetches)
+    assert len(store.fetches) == stats.n_fetched == stats.n_objects
+
+
+def test_hydrate_reuse_is_size_first_and_stats_split(tmp_path):
+    """The reuse sweep must reject a wrong-sized local candidate on the
+    (free) size check alone — never CRC-read it — and hydrate stats
+    split reused vs fetched bytes."""
+    state = _state(seed=7)
+    store = LocalObjectStore(str(tmp_path / "bucket"))
+    spec = _spec(tmp_path, store=store)
+    with CheckpointEngine(spec) as eng:
+        eng.save(state, 1).wait_uploaded()
+    d = os.path.join(spec.directory, layout.step_dir_name(1))
+    marker = layout.verify_commit(d, deep=False)
+    files = layout.commit_files(d, marker, spec.volumes, digests=True)
+    shards = [f for f in files if f["name"] != layout.MANIFEST_FILE]
+    bad = shards[0]
+    with open(bad["path"], "r+b") as f:           # size-disqualified
+        f.truncate(bad["size"] // 2)
+
+    crc_paths = []
+    real = upload._file_crc32
+
+    def spy(path, size, io_config=None):
+        crc_paths.append(path)
+        return real(path, size, io_config)
+
+    upload._file_crc32 = spy
+    try:
+        stats = HydrateStats()
+        assert hydrate(store, spec.directory, stats=stats) == 1
+    finally:
+        upload._file_crc32 = real
+    # the truncated candidate was never CRC-swept (size said no first)
+    assert bad["path"] not in crc_paths
+    assert stats.n_fetched >= 1 and stats.fetched_bytes >= bad["size"]
+    assert stats.n_reused >= 1 and stats.reused_bytes > 0
+    assert stats.n_reused + stats.n_fetched == stats.n_objects
+    # and the healed checkpoint is bit-exact
+    with CheckpointEngine(_spec(tmp_path, store=store)) as eng2:
+        got, _ = eng2.load(1)
+        for k in state:
+            assert np.array_equal(np.asarray(got[k]), state[k]), k
+
+
+# ======================================================== read cache
+def _cas_object(store, data):
+    """Store one content-addressed blob; returns (key, digest, size, crc)."""
+    import zlib
+    crc = zlib.crc32(data) & 0xFFFFFFFF
+    digest = f"{crc:08x}-{len(data):x}"
+    store.put(cas_key(digest), data)
+    return cas_key(digest), digest, len(data), crc
+
+
+def test_cache_lru_evicts_at_byte_bound(tmp_path):
+    store = _CountingStore(str(tmp_path / "b"))
+    cache = ReadCache(str(tmp_path / "cache"), max_bytes=4096,
+                      block_bytes=1024)
+    key, digest, size, _ = _cas_object(store, os.urandom(8192))
+    assert cache.read(store, key, digest, size) == store.get(key)
+    assert cache.cached_bytes <= 4096              # bound held
+    assert cache.stats.evictions >= 4              # 8 blocks into 4 slots
+    # evicted block files are actually gone from disk
+    on_disk = sum(len(fs) for _, _, fs in os.walk(cache.root))
+    assert on_disk <= 4
+    # re-reading an evicted range refetches; a resident one does not
+    n0 = len(store.fetches)
+    cache.read(store, key, digest, size, offset=size - 1024, length=1024)
+    assert len(store.fetches) == n0                # tail is resident (MRU)
+    cache.read(store, key, digest, size, offset=0, length=1024)
+    assert len(store.fetches) == n0 + 1            # head was evicted
+
+
+def test_cache_crc_mismatch_quarantines_and_refetches(tmp_path):
+    store = LocalObjectStore(str(tmp_path / "b"))
+    data = os.urandom(5000)
+    key, digest, size, crc = _cas_object(store, data)
+    cache = ReadCache(str(tmp_path / "cache"), max_bytes=1 << 20,
+                      block_bytes=1024)
+    dst = str(tmp_path / "dst")
+    cache.fetch_file(store, key, digest, size, dst, crc=crc)
+    # rot one CACHED block behind the cache's back
+    blk = os.path.join(cache.root, digest, f"{2:06d}")
+    raw = bytearray(open(blk, "rb").read())
+    raw[10] ^= 0xFF
+    open(blk, "wb").write(bytes(raw))
+    cache.fetch_file(store, key, digest, size, dst, crc=crc)
+    assert cache.stats.quarantined == 1            # dropped + refetched
+    assert open(dst, "rb").read() == data          # healed, never served
+    # store-side rot is NOT healable: a COLD cache fetches the corrupt
+    # bytes, quarantines, refetches ONCE, then refuses to serve garbage
+    store.put(key, data[:-1] + bytes([data[-1] ^ 0xFF]))
+    cold = ReadCache(str(tmp_path / "cache2"), max_bytes=1 << 20,
+                     block_bytes=1024)
+    with pytest.raises(IOError, match="corruption"):
+        cold.fetch_file(store, key, digest, size, dst, crc=crc)
+    assert cold.stats.quarantined == 2             # both attempts dropped
+    assert open(dst, "rb").read() == data          # dst left intact
+
+
+def test_cache_concurrent_readers_share_one_fetch(tmp_path):
+    store = _CountingStore(str(tmp_path / "b"), latency=0.02)
+    key, digest, size, _ = _cas_object(store, os.urandom(3000))
+    cache = ReadCache(str(tmp_path / "cache"), max_bytes=1 << 20,
+                      block_bytes=4096)             # one block total
+    results, barrier = [], threading.Barrier(8)
+
+    def reader():
+        barrier.wait()
+        results.append(cache.read(store, key, digest, size))
+
+    threads = [threading.Thread(target=reader) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    want = store.get(key)
+    assert all(r == want for r in results)
+    # 8 concurrent readers, ONE wire fetch of the block (single-flight)
+    assert len([f for f in store.fetches]) == 1
+    assert cache.stats.shared_waits > 0
+    assert cache.stats.n_misses == 1
+
+
+def test_cache_dedup_hits_across_delta_chain(tmp_path):
+    """Digest-keyed blocks make the cache STEP-agnostic: hydrating a
+    delta chain twice (fresh local dir each time) pulls zero bytes the
+    second time — and the shared keyframe bytes hit once per chain."""
+    spec = _spec(tmp_path, fp=FastPersistConfig(keyframe_every=3),
+                 serve_cache_mb=64)
+    state = _state(seed=8)
+    with CheckpointEngine(spec) as eng:
+        for step in (1, 2, 3):
+            state = {k: v + np.float32(step) for k, v in state.items()}
+            want = {k: v.copy() for k, v in state.items()}
+            eng.save(state, step).wait_uploaded()
+    _wipe_local(spec)
+    with CheckpointEngine(spec) as eng2:
+        got, _ = eng2.load(tier="remote")          # cold: fills the cache
+        for k in want:
+            assert np.array_equal(np.asarray(got[k]), want[k]), k
+        cold = eng2.last_hydrate_stats
+        assert len(cold.steps) == 3                # the whole chain
+        assert cold.fetched_bytes > 0
+        _wipe_local(spec)
+        got2, _ = eng2.load(tier="remote")         # warm: pure cache
+        for k in want:
+            assert np.array_equal(np.asarray(got2[k]), want[k]), k
+        warm = eng2.last_hydrate_stats
+    assert warm.fetched_bytes == 0
+    assert warm.cache_hit_bytes >= cold.fetched_bytes
+
+
+# ==================================================== per-tensor reads
+def test_load_tensor_remote_bit_exact_and_frugal(tmp_path):
+    """One small tensor off the remote tier: exact bytes, and the wire
+    traffic is a small fraction of the checkpoint (< 20% criterion)."""
+    state = _state(n=2_000_000, seed=9)            # ~8 MB checkpoint
+    spec = _spec(tmp_path, serve_cache_mb=32)
+    with CheckpointEngine(spec) as eng:
+        eng.save(state, 1).wait_uploaded()
+    _wipe_local(spec)
+    with CheckpointEngine(spec) as eng2:
+        got = eng2.load_tensor("b", tier="remote")
+        assert np.array_equal(np.asarray(got), state["b"])
+        st = eng2.last_serve[-1]
+    assert st.tensor_bytes == state["b"].nbytes
+    assert st.total_bytes > 0
+    assert st.fetched_bytes < 0.2 * st.total_bytes
+    # local checkpoint was NOT hydrated by a per-tensor read
+    assert glob.glob(os.path.join(spec.directory, "ckpt_*")) == []
+
+
+def test_load_tensor_remote_no_cache_fetches_span_bytes(tmp_path):
+    state = _state(seed=10)
+    store = _CountingStore(str(tmp_path / "bucket"))
+    spec = _spec(tmp_path, store=store)            # serve_cache_mb=0
+    with CheckpointEngine(spec) as eng:
+        eng.save(state, 1).wait_uploaded()
+    _wipe_local(spec)
+    store.fetches.clear()
+    out = []
+    got = load_tensor_remote(store, "w", cache=None, stats_out=out)
+    assert np.array_equal(np.asarray(got), state["w"])
+    # without a cache the spans are fetched EXACTLY (plus the manifest)
+    span_bytes = sum(ln for _, off, ln in store.fetches
+                     if ln is not None)
+    assert out[0].fetched_bytes == span_bytes      # accounted 1:1
+    assert out[0].n_spans >= 1
+
+
+def test_load_tensor_peer_tier(tmp_path):
+    peers = [str(tmp_path / "peers" / "n0"), str(tmp_path / "peers" / "n1")]
+    spec = _spec(tmp_path, peers=peers, replication_factor=2,
+                 serve_cache_mb=16)
+    state = _state(seed=11)
+    with CheckpointEngine(spec) as eng:
+        eng.save(state, 1).wait_replicated()
+    _wipe_local(spec)
+    with CheckpointEngine(spec) as eng2:
+        got = eng2.load_tensor("w", tier="peer")
+        assert np.array_equal(np.asarray(got), state["w"])
+    # serving straight off the peer tier hydrated nothing locally
+    assert glob.glob(os.path.join(spec.directory, "ckpt_*")) == []
+
+
+def test_load_tensor_remote_rejects_delta_generations(tmp_path):
+    spec = _spec(tmp_path, fp=FastPersistConfig(keyframe_every=4))
+    state = _state(seed=12)
+    with CheckpointEngine(spec) as eng:
+        eng.save(state, 1).wait_uploaded()
+        state = {k: v + 1 for k, v in state.items()}
+        eng.save(state, 2).wait_uploaded()         # a delta generation
+        store = eng.remote_store
+    with pytest.raises(NotImplementedError, match="delta"):
+        load_tensor_remote(store, "w", step=2)
+    # the keyframe still serves
+    got = load_tensor_remote(store, "b", step=1)
+    assert got.shape == state["b"].shape

@@ -235,9 +235,8 @@ def _committed_dir(tmp_path, step=1, seed=5):
 def test_in_attempt_retry_recovers_transient_failure(tmp_path):
     spec, d, marker = _committed_dir(tmp_path)
     store = faults.FlakyStore(str(tmp_path / "bucket"))
-    files = layout.commit_files(d, marker, spec.volumes)
-    store.fail_once.add(
-        f"{remote_prefix(1, remote_generation(marker))}/{files[1]['name']}")
+    files = layout.commit_files(d, marker, spec.volumes, digests=True)
+    store.fail_once.add(upload.cas_key(upload.entry_digest(files[1])))
     mgr = UploadManager(store, volume_roots=spec.volumes, max_retries=2,
                         retry_backoff=0.0)
     try:
@@ -254,10 +253,10 @@ def test_partial_upload_retry_is_idempotent(tmp_path):
     objects are skipped, nothing is duplicated, COMMIT lands once."""
     spec, d, marker = _committed_dir(tmp_path)
     store = faults.FlakyStore(str(tmp_path / "bucket"))
-    files = layout.commit_files(d, marker, spec.volumes)
+    files = layout.commit_files(d, marker, spec.volumes, digests=True)
     gen = remote_generation(marker)
     # third object dies and the attempt has no retry budget
-    store.fail_once.add(f"{remote_prefix(1, gen)}/{files[2]['name']}")
+    store.fail_once.add(upload.cas_key(upload.entry_digest(files[2])))
     mgr = UploadManager(store, volume_roots=spec.volumes, max_retries=0)
     try:
         t1 = mgr.enqueue(1, d, marker)
@@ -277,7 +276,7 @@ def test_partial_upload_retry_is_idempotent(tmp_path):
         # every object uploaded exactly once across both attempts, and
         # the bucket holds exactly the generation's keys — no leaks
         assert all(v == 1 for v in store.put_ok.values())
-        expect = {f"{remote_prefix(1, gen)}/{f['name']}" for f in files}
+        expect = {upload.cas_key(upload.entry_digest(f)) for f in files}
         expect.add(f"{remote_prefix(1, gen)}/{upload.REMOTE_COMMIT}")
         assert set(store.list()) == expect
 
@@ -351,10 +350,16 @@ def test_remote_prune_keeps_recent_steps(tmp_path):
         assert eng.steps() == [4]
         assert remote_steps(store) == [3, 4]
         assert 1 in retain.remote_deleted and 2 in retain.remote_deleted
-        # the remotely-pruned generations left no unreferenced objects
+        # the remotely-pruned generations left no unreferenced objects:
+        # every surviving COMMIT belongs to a kept step, and every
+        # surviving cas/ payload is referenced by a surviving COMMIT
+        refs = upload.referenced_digests(store)
         for key in store.list():
-            assert upload.parse_remote_prefix(
-                key.split("/", 1)[0])[0] in (3, 4)
+            if key.startswith(upload.CAS_PREFIX + "/"):
+                assert key[len(upload.CAS_PREFIX) + 1:] in refs, key
+            else:
+                assert upload.parse_remote_prefix(
+                    key.split("/", 1)[0])[0] in (3, 4)
 
 
 # ======================================================= hydration + CRC
@@ -365,9 +370,13 @@ def test_hydration_detects_corrupted_remote_shard(tmp_path):
     with CheckpointEngine(spec) as eng:
         eng.save(state, 1).wait_uploaded()
     _wipe_local(spec)
-    # flip bytes inside a remote shard object, behind the store's back
-    shard_keys = [k for k in store.list() if "shard_" in k]
-    victim = shard_keys[0]
+    # flip bytes inside a remote shard object, behind the store's back —
+    # resolved through the COMMIT's digest map (payloads live in cas/)
+    s, g = upload.remote_generations(store)[-1]
+    commit = upload.read_remote_commit(store, s, g)
+    name = next(n for n in commit["object_digest"] if "shard_" in n
+                or n == "checkpoint.bin")
+    victim = upload.object_key(commit, upload.remote_prefix(s, g), name)
     raw = bytearray(store.get(victim))
     raw[len(raw) // 2] ^= 0xFF
     with open(store._path(victim), "wb") as f:      # same size, bad bytes
@@ -403,9 +412,12 @@ def test_hydration_heals_corrupted_local_shard(tmp_path):
         restored, _ = eng.load(tier="remote")
         for k in state:
             assert np.array_equal(np.asarray(restored[k]), state[k]), k
-    # only the corrupted shard crossed the wire; intact files were reused
+    # only the corrupted shard crossed the wire; intact files were
+    # reused — the key is the ORIGINAL (remote) bytes' digest, and the
+    # legacy 2-arg get_to monkeypatch proves the ranged-store shim keeps
+    # out-of-tree stores working
     assert len(downloads) == 1
-    assert shards[0]["name"] in downloads[0]
+    assert downloads[0] == upload.cas_key(upload.entry_digest(shards[0]))
 
 
 def test_hydrated_checkpoint_reuploads_idempotently(tmp_path):
