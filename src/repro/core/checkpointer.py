@@ -44,9 +44,11 @@ import numpy as np
 
 from repro.core import layout
 from repro.core.arena import SerializeArena
-from repro.core.delta import DeltaPlan, apply_delta, build_delta
+from repro.core.delta import (DeltaPlan, apply_delta, assign_span_shards,
+                              build_delta)
 from repro.core.partition import (ReadPlan, ReadSpan, Topology, WritePlan,
-                                  make_plan, make_read_plan, probe_volumes,
+                                  delta_stripe_plan, make_plan,
+                                  make_read_plan, probe_volumes,
                                   select_writers)
 from repro.core.reader import combine_span_crcs, read_stream
 from repro.core.serializer import (ByteStreamView, Manifest, TensorRecord,
@@ -139,6 +141,14 @@ class FastPersistConfig:
     #: dirty-compare granularity in bytes (delta spans coalesce to
     #: multiples of this)
     dirty_block: int = 4096
+    #: striped delta generations (DESIGN.md §13): a delta whose PACKED
+    #: payload is at least this many MiB is carved across the full
+    #: writer/volume fan-out exactly like a keyframe (per-shard span
+    #: table, per-volume publish, one global COMMIT); smaller deltas
+    #: single-stream into one primary-resident shard so tiny writes
+    #: don't pay a submission + fsync + shard file per writer and
+    #: volume. 0 stripes every delta.
+    delta_stripe_min_mb: int = 8
     #: chunked device→arena snapshots (DESIGN.md §10): the copy runs on
     #: a snapshot worker in chunks of this many MiB, and writers consume
     #: each chunk as it lands — the first NVMe submission no longer
@@ -188,6 +198,12 @@ class SaveStats:
     #: what chain resolution replays from. ``total_bytes`` of a delta
     #: save is the PACKED payload actually written, not the stream size.
     delta: Optional[dict] = None
+    #: stripe-vs-single-stream choice of a delta save (DESIGN.md §13):
+    #: True = the packed payload cleared ``delta_stripe_min_mb`` and
+    #: was carved across the full writer/volume fan-out; False = it
+    #: single-streamed into one primary-resident shard; None = not a
+    #: delta save
+    delta_striped: Optional[bool] = None
     #: bytes that crossed device→host for this save (masks + gathered
     #: dirty blocks under ``device_dirty``; the full stream otherwise)
     d2h_bytes: int = 0
@@ -249,11 +265,6 @@ class FastPersistCheckpointer:
                                  if healthy_volumes is not None else None),
                 min_extent_bytes=min_extent_bytes)
         return self._plan_cache[key]
-
-    #: delta writes below this per-extent size don't split further —
-    #: a few-MB packed stream across every DP writer would pay a
-    #: submission + shard file per writer for KB extents
-    MIN_DELTA_EXTENT = 1 << 20
 
     def path(self, step: int) -> str:
         return os.path.join(self.directory, f"ckpt_{step:08d}")
@@ -371,34 +382,40 @@ class FastPersistCheckpointer:
                      if volume_dirs and not self.config.single_file else 1)
         dirs = (list(volume_dirs) if volume_dirs
                 and not self.config.single_file else [d])
+        # striped delta generations (DESIGN.md §13): the binary cutoff —
+        # a packed payload clearing delta_stripe_min_mb is carved across
+        # the full writer/volume fan-out exactly like a keyframe; below
+        # it the delta single-streams into one primary-resident shard
+        stripe_min = (int(self.config.delta_stripe_min_mb) << 20
+                      if dplan is not None else 0)
+        delta_single = dplan is not None and stripe_min > 0 \
+            and view.total < stripe_min
+        if delta_single:
+            n_volumes, dirs = 1, [d]
         # plan-time volume health (ROADMAP): probe every destination —
         # writable + enough free space for its share — and stripe only
         # across the survivors; a totally-dead volume set degrades to
         # the primary directory instead of failing the save
         probe_degraded: Tuple[int, ...] = ()
-        # delta payloads vary in size every save: a direct (uncached)
-        # plan with a minimum extent size, instead of flooding the plan
-        # cache with one entry per distinct packed size
-        min_extent = self.MIN_DELTA_EXTENT if dplan is not None else 0
 
         def _plan(n_vol, healthy=None):
             if dplan is None:
                 return self.plan_for(view.total, n_vol,
                                      healthy_volumes=healthy)
-            return make_plan(
+            # delta payloads vary in size every save: a direct
+            # (uncached) plan instead of flooding the plan cache with
+            # one entry per distinct packed size
+            return delta_stripe_plan(
                 view.total, self.config.topology, self.config.strategy,
                 self.config.writers_per_node, n_volumes=n_vol,
                 healthy_volumes=(list(healthy) if healthy is not None
                                  else None),
-                min_extent_bytes=min_extent)
+                stripe_min_bytes=stripe_min)
 
         if n_volumes > 1:
             n_writers = len(select_writers(
                 self.config.topology, self.config.strategy,
                 self.config.writers_per_node, view.total))
-            if min_extent:
-                n_writers = max(1, min(n_writers,
-                                       view.total // min_extent or 1))
             healthy, deg = probe_volumes(dirs, view.total, create=True,
                                          n_shards=n_writers)
             probe_degraded = tuple(deg)
@@ -413,6 +430,12 @@ class FastPersistCheckpointer:
                 plan = _plan(n_volumes, healthy=tuple(healthy))
         else:
             plan = _plan(n_volumes)
+        if dplan is not None:
+            # per-shard span table (DESIGN.md §13): stamp every span's
+            # destination [shard, shard_offset] from the plan's carve of
+            # the packed stream — restore and the durability tiers walk
+            # the table without re-deriving the write-side geometry
+            dplan.spans = assign_span_shards(plan.extents, dplan.spans)
         used_dirs = {d, *(dirs[e.volume] for e in plan.extents)}
         for vd in used_dirs:
             os.makedirs(vd, exist_ok=True)
@@ -481,6 +504,7 @@ class FastPersistCheckpointer:
         meta["generation"] = gen
         if dplan is not None:
             meta["delta"] = dplan.to_meta()
+            meta["delta"]["striped"] = not delta_single
         extents_meta = [vars(e).copy() for e in plan.extents]
         if self.config.checksum:
             # fill-phase CRCs from the writers — NOT a second sweep
@@ -531,12 +555,16 @@ class FastPersistCheckpointer:
                                             if progress is not None
                                             else ser_s),
                           snapshot_chunks=(progress.n_chunks
-                                           if progress is not None else 0))
+                                           if progress is not None else 0),
+                          delta_striped=(None if dplan is None
+                                         else not delta_single))
         if stats.delta is not None:
             # the engine stamps this dict into the COMMIT marker, so it
             # must stay the COMPLETE table (chain resolution + replay
-            # read it from the marker); n_spans rides along for display
+            # read it from the marker); n_spans and the stripe choice
+            # ride along for display and the tier audit trail
             stats.delta["n_spans"] = len(dplan.spans)
+            stats.delta["striped"] = not delta_single
         # chain bookkeeping: the arena now holds THIS save's image;
         # the save becomes the next base only once its commit lands
         # (note_committed — engine hook, or inline for standalone saves
@@ -712,15 +740,47 @@ class FastPersistCheckpointer:
             cur_step, cur_d, cur_marker, cur_manifest, cur_meta = \
                 dp.base_step, bd, bmarker, bmanifest, bmeta
 
+    @staticmethod
+    def _verify_span_shards(dd: str, plan: dict, dp: DeltaPlan):
+        """Cross-check a striped delta's per-shard span table
+        (DESIGN.md §13) against its saved write plan: every stamped
+        span's ``[shard, shard_offset]`` must agree with the extent
+        that carve placed its first packed byte in. A disagreement
+        means the manifest and COMMIT describe different layouts —
+        refuse rather than replay bytes from the wrong shard. Pre-§13
+        tables (``shard_offset == -1``) carry no destinations and are
+        skipped."""
+        by_shard = {int(e["shard_index"]): e for e in plan["extents"]}
+        for s in dp.spans:
+            if s.shard_offset < 0:
+                continue
+            e = by_shard.get(s.shard)
+            if (e is None
+                    or s.packed_offset - int(e["offset"]) != s.shard_offset
+                    or not 0 <= s.shard_offset < int(e["length"])):
+                raise layout.TornCheckpointError(
+                    f"{dd}: delta span @{s.offset} records shard "
+                    f"[{s.shard}, {s.shard_offset}] but the saved plan "
+                    f"puts packed byte {s.packed_offset} elsewhere — "
+                    f"span table and write plan disagree")
+
     def _read_delta_payload(self, dstep: int, dd: str, dmarker,
                             dmeta: dict, dp: DeltaPlan, verify: bool,
-                            volume_roots) -> memoryview:
+                            volume_roots, read_plan=None) -> memoryview:
         """One delta generation's PACKED span payload, reassembled from
         its shards through the saved plan (same read machinery as full
-        checkpoints — the per-span CRCs are checked later, at decode)."""
+        checkpoints — the per-span CRCs are checked later, at decode).
+        Striped generations (multi-extent plans) fill through the
+        parallel ReadPlan pipeline when the caller requested one; the
+        per-shard span table is verified against the plan either way."""
+        self._verify_span_shards(dd, dmeta["plan"], dp)
         packed = memoryview(bytearray(dp.packed_bytes))
-        self._fill_sequential(packed, dstep, dd, dmeta["plan"], verify,
-                              dmarker, volume_roots)
+        if read_plan is not None and len(dmeta["plan"]["extents"]) > 1:
+            self._fill_parallel(dmeta["plan"], None, read_plan, verify,
+                                dd, dmarker, volume_roots, packed)
+        else:
+            self._fill_sequential(packed, dstep, dd, dmeta["plan"],
+                                  verify, dmarker, volume_roots)
         return packed
 
     def _load_delta(self, step: int, d: str, marker, manifest, meta,
@@ -747,9 +807,13 @@ class FastPersistCheckpointer:
         else:
             self._fill_sequential(dest, kstep, kd, kplan, verify, kmarker,
                                   volume_roots)
+        # an explicit ReadPlan was carved for the KEYFRAME's geometry —
+        # each delta payload re-derives its own stripe from the count
+        drp = read_plan if not isinstance(read_plan, ReadPlan) else None
         for dstep, dd, dmarker, dmeta, dp in reversed(deltas):
             packed = self._read_delta_payload(dstep, dd, dmarker, dmeta,
-                                              dp, verify, volume_roots)
+                                              dp, verify, volume_roots,
+                                              read_plan=drp)
             apply_delta(dest, dp, packed, verify=verify)
         return self._materialize(manifest, dest, like)
 

@@ -25,7 +25,11 @@ This module is the core of that subsystem:
     marker): stream offsets into the FULL checkpoint stream, offsets
     into the PACKED delta payload, per-span encoding + CRC32 of the
     packed bytes, and the base-generation identity
-    ``(base_step, base_gen)`` the delta chains off.
+    ``(base_step, base_gen)`` the delta chains off. Striped delta
+    generations (multi-writer, DESIGN.md §13) extend every row with
+    its destination ``[shard, shard_offset]`` in the per-volume shard
+    layout — :func:`assign_span_shards` stamps them from the write
+    plan's §7 ``stripe_ranges`` carve of the packed stream.
   * :func:`build_delta` — packs the dirty spans of a serialized stream
     into the delta payload buffers the existing partition/writer
     machinery then stripes to disk, optionally int8-quantizing float
@@ -123,7 +127,16 @@ def mask_to_spans(mask, block: int, nbytes: int) -> List[Tuple[int, int]]:
 # ------------------------------------------------------------ span table
 @dataclass(frozen=True)
 class DeltaSpan:
-    """One dirty span of the full checkpoint stream, as persisted."""
+    """One dirty span of the full checkpoint stream, as persisted.
+
+    Striped delta generations (DESIGN.md §13) additionally record each
+    span's DESTINATION in the multi-writer layout: ``shard`` is the
+    shard file holding the span's first packed byte and
+    ``shard_offset`` that byte's offset inside the file. Shard extents
+    are contiguous in packed-stream order, so a span whose packed bytes
+    straddle a shard boundary continues in shard+1 at offset 0.
+    ``shard_offset == -1`` marks a pre-striping (single-stream) table
+    with no destination columns."""
     offset: int          # byte offset in the FULL stream
     length: int          # decoded (raw) byte length
     packed_offset: int   # byte offset in the packed delta payload
@@ -131,16 +144,21 @@ class DeltaSpan:
     enc: str             # "raw" | "q8" (int8 blocks + f32 scales)
     crc32: int           # CRC of the PACKED payload bytes
     dtype: str = ""      # owning record's dtype (decode key for "q8")
+    shard: int = 0       # shard file holding the span's first byte
+    shard_offset: int = -1   # offset inside that shard (-1 = unstamped)
 
     def to_list(self) -> list:
         return [self.offset, self.length, self.packed_offset,
-                self.packed_length, self.enc, self.crc32, self.dtype]
+                self.packed_length, self.enc, self.crc32, self.dtype,
+                self.shard, self.shard_offset]
 
     @classmethod
     def from_list(cls, row: Sequence) -> "DeltaSpan":
-        off, length, poff, plen, enc, crc, dtype = row
+        # 7-column rows are pre-§13 tables (no per-shard destinations)
+        off, length, poff, plen, enc, crc, dtype = row[:7]
+        shard, shard_off = (row[7], row[8]) if len(row) > 8 else (0, -1)
         return cls(int(off), int(length), int(poff), int(plen), str(enc),
-                   int(crc), str(dtype or ""))
+                   int(crc), str(dtype or ""), int(shard), int(shard_off))
 
 
 @dataclass
@@ -178,6 +196,51 @@ class DeltaPlan:
                    stream_bytes=int(meta["stream_bytes"]),
                    spans=[DeltaSpan.from_list(r)
                           for r in meta.get("spans", [])])
+
+
+def _extent_fields(e) -> Tuple[int, int, int]:
+    """(offset, length, shard_index) of a plan extent — accepts the
+    in-memory ``partition.Extent`` and the manifest's extent dict."""
+    if isinstance(e, dict):
+        return int(e["offset"]), int(e["length"]), int(e["shard_index"])
+    return int(e.offset), int(e.length), int(e.shard_index)
+
+
+def assign_span_shards(extents, spans: Sequence[DeltaSpan]
+                       ) -> List[DeltaSpan]:
+    """Stamp each span's destination ``[shard, shard_offset]`` from the
+    write plan carved over the packed stream (DESIGN.md §13).
+
+    ``extents`` is the striped write plan's extent list (the §7
+    ``stripe_ranges`` carve of ``[0, packed_bytes)``). Each span records
+    the shard holding its FIRST packed byte; extents are contiguous in
+    packed order, so a boundary-straddling span continues in the next
+    shard at offset 0 — q8 spans stay whole either way (splitting a
+    packed q8 payload would orphan its trailing scale block).
+
+    Raises ``ValueError`` when a span's start lies outside every
+    extent (the plan does not cover the packed stream)."""
+    if not spans:
+        return []
+    exts = sorted((_extent_fields(e) for e in extents),
+                  key=lambda t: t[0])
+    exts = [t for t in exts if t[1] > 0]       # zero-length carve tails
+    starts = [t[0] for t in exts]
+    out: List[DeltaSpan] = []
+    for s in spans:
+        i = bisect_right(starts, s.packed_offset) - 1
+        if i < 0 or not (exts[i][0] <= s.packed_offset
+                         < exts[i][0] + exts[i][1]):
+            raise ValueError(
+                f"packed span @{s.packed_offset} (+{s.packed_length}) "
+                f"outside every plan extent — the carve does not cover "
+                f"the packed stream")
+        off, _length, shard = exts[i]
+        out.append(DeltaSpan(s.offset, s.length, s.packed_offset,
+                             s.packed_length, s.enc, s.crc32, s.dtype,
+                             shard=shard,
+                             shard_offset=s.packed_offset - off))
+    return out
 
 
 # ------------------------------------------------------------- encoding

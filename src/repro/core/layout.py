@@ -17,7 +17,12 @@ A checkpoint is PUBLISHED, never written in place (DESIGN.md §3/§5):
 Secondary-volume shard directories are published (renamed to their
 final generation name) BEFORE the global COMMIT is written, but they
 are meaningless until a committed primary references them — readers
-only ever discover shards through the primary's COMMIT. A crash at ANY
+only ever discover shards through the primary's COMMIT. Striped delta
+generations (DESIGN.md §13) follow the SAME protocol: their packed
+dirty-span payload is carved across per-volume shards, the COMMIT
+carries the same per-shard ``(volume, dir, size, crc32)`` entries as a
+v2 keyframe, and ``clean_stale_multi`` sweeps their orphans
+identically — there is one publish rule, not one per generation kind. A crash at ANY
 instant therefore leaves either (a) stale ``.tmp``/unreferenced shard
 directories that readers ignore and startup sweeps, or (b) a fully
 committed checkpoint. There is no third state.

@@ -274,11 +274,12 @@ def make_plan(total_bytes: int, topo: Topology, strategy: str = "replica",
         healthy_volumes: pre-probed surviving volume indices.
         min_free_bytes: extra free-space headroom the probe demands.
         min_extent_bytes: trim the writer subset until every extent is
-            at least this long (delta generations: a few-MB packed
-            stream shattered across every DP writer would pay one
-            submission + fsync + shard file per writer for KB-sized
-            extents). 0 keeps the full subset; at least one writer
-            always survives.
+            at least this long (tiny streams shattered across every DP
+            writer would pay one submission + fsync + shard file per
+            writer for KB-sized extents). 0 keeps the full subset; at
+            least one writer always survives. Delta generations no
+            longer use this — their stripe-vs-single-stream choice is
+            the binary :func:`delta_stripe_plan` cutoff.
 
     Returns:
         a :class:`WritePlan` — one :class:`Extent` per writer with its
@@ -308,18 +309,46 @@ def make_plan(total_bytes: int, topo: Topology, strategy: str = "replica",
             f"checkpoint stripe degraded: volumes {list(degraded)} failed "
             f"the plan-time health probe; striping {total_bytes} bytes "
             f"across volumes {healthy} instead", stacklevel=2)
-    base, rem = divmod(total_bytes, n)
-    extents, off = [], 0
-    for i, rank in enumerate(writers):
-        ln = base + (1 if i < rem else 0)
-        extents.append(Extent(rank=rank, offset=off, length=ln,
-                              shard_index=i,
-                              volume=healthy[i % len(healthy)]))
-        off += ln
+    # the §7 stripe_ranges carve — the same ≤1-byte-imbalance rule the
+    # read plans and parallel ranged hydration use, so every layer
+    # (write, restore, delta stripe tables) agrees on byte geometry
+    extents = [Extent(rank=rank, offset=lo, length=hi - lo, shard_index=i,
+                      volume=healthy[i % len(healthy)])
+               for i, (rank, (lo, hi))
+               in enumerate(zip(writers, stripe_ranges(total_bytes, n)))]
     plan = WritePlan(total_bytes, extents, strategy, n_volumes=n_volumes,
                      degraded=degraded)
     plan.validate()
     return plan
+
+
+def delta_stripe_plan(packed_bytes: int, topo: Topology,
+                      strategy: str = "replica", writers_per_node: int = 2,
+                      n_volumes: int = 1,
+                      healthy_volumes: Optional[Sequence[int]] = None,
+                      stripe_min_bytes: int = 0) -> WritePlan:
+    """Write plan for a delta generation's PACKED span stream
+    (DESIGN.md §13).
+
+    At or above ``stripe_min_bytes`` the packed stream is carved
+    exactly like a full keyframe — the full writer subset, balanced
+    ``stripe_ranges`` extents, round-robin across the healthy volumes —
+    so frequent incremental saves keep the paper's §4.2 write fan-out.
+    Below the cutoff (``FastPersistConfig.delta_stripe_min_mb``) the
+    delta SINGLE-STREAMS: one writer, one primary-resident shard — a
+    KB-scale payload must not pay a submission + fsync + shard file
+    per writer and volume. ``stripe_min_bytes=0`` stripes every delta."""
+    if stripe_min_bytes > 0 and packed_bytes < stripe_min_bytes:
+        writers = select_writers(topo, strategy, writers_per_node,
+                                 packed_bytes)
+        plan = WritePlan(packed_bytes,
+                         [Extent(rank=writers[0], offset=0,
+                                 length=packed_bytes, shard_index=0)],
+                         strategy, n_volumes=1)
+        plan.validate()
+        return plan
+    return make_plan(packed_bytes, topo, strategy, writers_per_node,
+                     n_volumes=n_volumes, healthy_volumes=healthy_volumes)
 
 
 # =========================================================== read plans

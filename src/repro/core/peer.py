@@ -8,9 +8,10 @@ this module the first OFF-NODE durability point was the object store
 (``wait_uploaded()``), a WAN round-trip away. The peer tier sits
 between local NVMe and the object store: after the local COMMIT
 rename, a :class:`PeerReplicator` background worker streams the sealed
-generation — keyframes AND delta generations, walking ``delta_base``
-chains so every replicated delta stays replayable — to K peer nodes'
-RAM/NVMe over the training network:
+generation — keyframes AND delta generations (striped or
+single-stream, DESIGN.md §13: shards come from the COMMIT's shard
+list), walking ``delta_base`` chains so every replicated delta stays
+replayable — to K peer nodes' RAM/NVMe over the training network:
 
     tier ordering:   local NVMe  →  peer RAM/NVMe  →  object store
     sync points:     wait()         wait_replicated()  wait_uploaded()

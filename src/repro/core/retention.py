@@ -26,7 +26,11 @@ Delta chains (DESIGN.md §9): an incremental delta generation is only
 restorable while its base — transitively, its keyframe — exists. The
 keep set is therefore expanded with every chain ancestor of a kept
 step before victims are chosen, so retention never deletes a keyframe
-(or intermediate delta) that a live delta still references.
+(or intermediate delta) that a live delta still references. Chain
+walking goes through ``layout.delta_base`` and deletion through the
+COMMIT's shard list, so striped delta generations (DESIGN.md §13 —
+payload carved across volumes) pin and collect exactly like
+single-stream ones.
 
 Content-addressed payloads (DESIGN.md §12): on the remote/peer tiers a
 pruned generation deletes only its COMMIT and metadata eagerly — the

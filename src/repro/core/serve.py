@@ -25,7 +25,10 @@ top of the upload/peer tiers:
 
 Both paths ride :func:`repro.core.upload.ranged_get_to`, so stores
 without ranged ``get_to`` still work (full fetch + local slice) — they
-just can't save wire bytes.
+just can't save wire bytes. Striped delta generations (DESIGN.md §13)
+are served like any v2 generation: their per-volume payload shards
+are plain CAS objects, and chain replay happens client-side after
+hydration.
 """
 from __future__ import annotations
 

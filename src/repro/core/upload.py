@@ -31,6 +31,12 @@ maps to the same keys, so objects that already landed (same key, same
 size) are skipped, never duplicated, and a half-uploaded generation
 heals instead of leaking a second copy.
 
+Shard enumeration rides the local COMMIT's ``shards`` list
+(:func:`repro.core.layout.commit_files`), so striped delta generations
+(DESIGN.md §13) ship, dedupe (§12 CAS digests), and hydrate with no
+special casing — a delta's per-volume payload shards are just more
+entries in the same manifest.
+
 Restore hydration: :func:`hydrate` rebuilds a local checkpoint from a
 remote generation through the SAME local commit protocol (staging dir
 → local COMMIT → atomic publish), verifying every downloaded shard

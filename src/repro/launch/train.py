@@ -47,6 +47,13 @@ def main():
                     help="int8-quantize delta spans (lossy; blockwise "
                          "absmax scales, DESIGN.md §9) — keyframes stay "
                          "full-precision")
+    ap.add_argument("--delta-stripe-min-mb", type=int, default=8,
+                    help="stripe a delta generation across the full "
+                         "writer/volume fan-out once its packed payload "
+                         "reaches this many MiB (DESIGN.md §13); smaller "
+                         "deltas single-stream into the primary so tiny "
+                         "writes skip per-volume fsync overhead (0 = "
+                         "always stripe)")
     ap.add_argument("--pipeline", action="store_true", default=True)
     ap.add_argument("--no-pipeline", dest="pipeline", action="store_false")
     ap.add_argument("--writers", default="auto",
@@ -159,6 +166,7 @@ def main():
                 snapshot_chunk_mb=args.snapshot_chunk_mb,
                 device_dirty=args.device_dirty,
                 delta_quantize=args.delta_quantize,
+                delta_stripe_min_mb=args.delta_stripe_min_mb,
                 writer=WriterConfig(backend=args.io_backend,
                                     queue_depth=args.queue_depth)))
 

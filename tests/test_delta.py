@@ -296,7 +296,10 @@ def test_quantized_delta_spans(tmp_path):
     assert np.array_equal(np.asarray(got["ints"]), state["ints"])
 
 
-def test_multi_volume_delta_trims_writers(tmp_path):
+def test_multi_volume_small_delta_single_streams(tmp_path):
+    """Below the §13 cutoff (default 8 MiB) a delta stays a single
+    primary-resident stream — a KB-scale delta must not shatter into
+    per-volume KB extents — and SaveStats records the choice."""
     vols = [str(tmp_path / f"vol{i}") for i in range(3)]
     spec = CheckpointSpec(directory=str(tmp_path / "primary"),
                           backend="fastpersist", volumes=vols,
@@ -306,8 +309,9 @@ def test_multi_volume_delta_trims_writers(tmp_path):
         for step in range(2):
             _touch(state, step)
             st = eng.save(state, step).wait()
-        # a KB-scale delta must not shatter into per-volume KB extents
         assert st.delta is not None and st.n_writers == 1
+        assert st.delta_striped is False
+        assert st.delta["striped"] is False
         got, _ = eng.load(step=1, like=state)
         _assert_equal(got, _replay(0, 2))
 

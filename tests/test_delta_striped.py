@@ -1,0 +1,518 @@
+"""Striped per-rank delta chains (DESIGN.md §13).
+
+Multi-writer delta generations: a packed dirty-span payload clearing
+``delta_stripe_min_mb`` is carved across the full writer/volume fan-out
+with the §7 ``stripe_ranges`` rule, every span stamped with its
+``[shard, shard_offset]`` destination, and the generation published
+per-volume then committed through the one global rename — exactly a v2
+keyframe. Covered here:
+
+  * property-based span math (hypothesis when available, example-based
+    fallback otherwise): ``dirty_byte_spans`` coalescing/clipping
+    invariants, ``mask_to_spans`` equivalence on random dirty patterns,
+    and the striped-carve round-trip (per-shard spans cover the packed
+    stream exactly once, ≤1 byte writer imbalance);
+  * the crash-injection matrix for striped delta commits: death between
+    per-volume publish and global COMMIT, death mid-payload on one
+    volume, and the re-save-over-trash instant — ``latest_step`` stays
+    at the base, the next save is clean, no orphaned generation dirs;
+  * the restore matrix (writers, volumes) × readers replayed bit-exact,
+    plus ``load(tier="peer")`` and wipe-local remote hydration of a
+    striped chain;
+  * the binary cutoff boundary: packed == cutoff stripes, one dirty
+    block below single-streams, and ``SaveStats`` records the choice.
+"""
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+import faults
+from repro.core import layout
+from repro.core.checkpointer import FastPersistConfig
+from repro.core.delta import (DIRTY_BLOCK, DeltaSpan, assign_span_shards,
+                              dirty_byte_spans, mask_to_spans)
+from repro.core.engine import CheckpointEngine, CheckpointSpec
+from repro.core.partition import Topology, delta_stripe_plan, stripe_ranges
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((300, 64)).astype(np.float32),
+            "b": np.zeros(4 * DIRTY_BLOCK, np.float32),
+            "ints": np.arange(7, dtype=np.int32)}
+
+
+def _touch(state, step):
+    state["w"][step % 300, :] += 1.0
+    state["b"][(step * 3) % state["b"].size] = float(step + 1)
+
+
+def _replay(seed, n_steps):
+    s = _state(seed)
+    for i in range(n_steps):
+        _touch(s, i)
+    return s
+
+
+def _assert_equal(got, ref):
+    for k in ref:
+        assert np.array_equal(np.asarray(got[k]), ref[k]), k
+
+
+def _vols(tmp_path, n):
+    out = []
+    for i in range(n):
+        d = tmp_path / f"vol{i}"
+        d.mkdir(parents=True, exist_ok=True)
+        out.append(str(d))
+    return out
+
+
+def _spec(tmp_path, writers, volumes, stripe_min_mb=0, **kw):
+    """Engine spec that stripes EVERY delta (cutoff 0) so the small test
+    states exercise the §13 path without MB-scale payloads."""
+    vols = _vols(tmp_path, volumes) if volumes > 1 else None
+    return CheckpointSpec(
+        directory=str(tmp_path / "primary"),
+        backend=kw.pop("backend", "fastpersist"),
+        volumes=vols,
+        fp=kw.pop("fp", None) or FastPersistConfig(
+            strategy="replica", topology=Topology(dp_degree=writers),
+            keyframe_every=4, delta_stripe_min_mb=stripe_min_mb), **kw)
+
+
+def _gen_shard_files(spec, step):
+    """Every shard payload file of ``step``'s committed generation,
+    across the primary and all volumes."""
+    d = os.path.join(spec.directory, layout.step_dir_name(step))
+    out = [os.path.join(d, f) for f in os.listdir(d)
+           if f.startswith("shard_")]
+    for v in spec.volumes or []:
+        for sd in layout.shard_dirs_for_step(v, step):
+            out += [os.path.join(sd, f) for f in os.listdir(sd)
+                    if f.startswith("shard_")]
+    return out
+
+
+def _assert_no_orphans(primary, volume_roots):
+    referenced = layout.referenced_shard_dirs(
+        str(primary), [str(v) for v in volume_roots])
+    for root in {str(primary), *[str(v) for v in volume_roots]}:
+        for name in os.listdir(root):
+            assert not name.endswith(".tmp"), f"{root}/{name}"
+            assert not name.endswith(".trash"), f"{root}/{name}"
+            if layout.parse_shard_dir(name) is not None:
+                full = os.path.realpath(os.path.join(root, name))
+                assert full in referenced, f"orphaned shard dir {full}"
+
+
+# ==================================================== span-math properties
+def _check_dirty_span_invariants(n, dirty_idx, block):
+    """The dirty_byte_spans contract: block-aligned starts, last span
+    clipped to n, coalesced (≥1 clean block between spans), every dirty
+    byte covered, no span without a dirty byte."""
+    a = np.zeros(n, np.uint8)
+    b = a.copy()
+    for i in dirty_idx:
+        b[i] ^= 0xFF
+    spans = dirty_byte_spans(a, b, block=block)
+    diff = a != b
+    covered = np.zeros(n, bool)
+    prev_end = None
+    for off, ln in spans:
+        assert off % block == 0 and ln > 0
+        assert off + ln <= n
+        assert off + ln == n or (off + ln) % block == 0
+        if prev_end is not None:
+            assert off >= prev_end + block, "uncoalesced adjacent spans"
+        prev_end = off + ln
+        assert diff[off:off + ln].any(), "span with no dirty byte"
+        covered[off:off + ln] = True
+    assert covered[diff].all(), "dirty byte outside every span"
+    return a, b, spans
+
+
+def _check_mask_equivalence(n, dirty_idx, block):
+    """A device change-mask built from the SAME dirty pattern must
+    coalesce to the identical span list (§10 device-dirty parity)."""
+    a, b, spans = _check_dirty_span_invariants(n, dirty_idx, block)
+    nblocks = -(-n // block)
+    diff = a != b
+    mask = [bool(diff[i * block:(i + 1) * block].any())
+            for i in range(nblocks)]
+    assert mask_to_spans(mask, block, n) == spans
+
+
+def _check_striped_carve_roundtrip(packed, cuts, writers, volumes):
+    """Carve a packed stream at arbitrary span boundaries, stamp the
+    spans through a §13 plan: the plan's extents must BE stripe_ranges
+    (≤1B imbalance), every stamped destination must invert back to the
+    span's packed offset, and the spans must cover the stream exactly
+    once."""
+    offs = sorted({0, packed, *(c for c in cuts if 0 < c < packed)})
+    spans = [DeltaSpan(lo, hi - lo, lo, hi - lo, "raw", 0, "uint8")
+             for lo, hi in zip(offs, offs[1:])]
+    plan = delta_stripe_plan(packed, Topology(dp_degree=writers),
+                             "replica", n_volumes=volumes,
+                             stripe_min_bytes=0)
+    exts = sorted(plan.extents, key=lambda e: e.offset)
+    lens = [e.length for e in exts]
+    assert max(lens) - min(lens) <= 1, "writer imbalance > 1 byte"
+    assert [(e.offset, e.offset + e.length) for e in exts] == \
+        stripe_ranges(packed, len(exts)), "carve is not the §7 rule"
+    stamped = assign_span_shards(plan.extents, spans)
+    by_shard = {e.shard_index: e for e in plan.extents}
+    covered = 0
+    for s in stamped:
+        e = by_shard[s.shard]
+        assert e.offset + s.shard_offset == s.packed_offset
+        assert 0 <= s.shard_offset < e.length
+        covered += s.packed_length
+    assert covered == packed, "spans do not tile the packed stream"
+    assert [s.packed_offset for s in stamped] == offs[:-1]
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.data())
+    @settings(max_examples=60, deadline=None)
+    def test_dirty_byte_spans_invariants_property(data):
+        block = 16
+        n = data.draw(st.integers(0, 8 * block + block - 1))
+        idx = (data.draw(st.lists(st.integers(0, n - 1), max_size=10))
+               if n else [])
+        _check_dirty_span_invariants(n, idx, block)
+
+    @given(st.data())
+    @settings(max_examples=60, deadline=None)
+    def test_mask_to_spans_matches_byte_compare_property(data):
+        block = 16
+        n = data.draw(st.integers(1, 8 * block + block - 1))
+        idx = data.draw(st.lists(st.integers(0, n - 1), max_size=10))
+        _check_mask_equivalence(n, idx, block)
+
+    @given(st.data())
+    @settings(max_examples=60, deadline=None)
+    def test_striped_carve_roundtrip_property(data):
+        packed = data.draw(st.integers(1, 4096))
+        cuts = data.draw(st.lists(st.integers(1, max(1, packed - 1)),
+                                  max_size=12))
+        writers = data.draw(st.sampled_from([1, 2, 4, 8]))
+        volumes = data.draw(st.integers(1, 3))
+        _check_striped_carve_roundtrip(packed, cuts, writers, volumes)
+else:
+    @pytest.mark.parametrize("n,idx", [
+        (0, []), (16, [0]), (16 * 8 + 5, [0, 17, 16 * 3, 16 * 8 + 2]),
+        (16 * 4, [15, 16]), (16 * 6 + 1, [16 * 6]),
+    ])
+    def test_dirty_byte_spans_invariants_examples(n, idx):
+        _check_dirty_span_invariants(n, idx, 16)
+
+    @pytest.mark.parametrize("n,idx", [
+        (16, [0]), (16 * 8 + 5, [0, 17, 16 * 3, 16 * 8 + 2]),
+        (16 * 4, [15, 16]), (16 * 6 + 1, [16 * 6]),
+    ])
+    def test_mask_to_spans_matches_byte_compare_examples(n, idx):
+        _check_mask_equivalence(n, idx, 16)
+
+    @pytest.mark.parametrize("packed,cuts,writers,volumes", [
+        (1, [], 4, 2), (7, [3], 8, 3), (4096, [1, 2047, 4095], 4, 2),
+        (1000, [333, 666], 2, 1), (17, list(range(1, 17)), 4, 3),
+    ])
+    def test_striped_carve_roundtrip_examples(packed, cuts, writers,
+                                              volumes):
+        _check_striped_carve_roundtrip(packed, cuts, writers, volumes)
+
+
+# ======================================================== restore matrix
+@pytest.mark.parametrize("writers,volumes", [(4, 1), (4, 3), (8, 2)])
+@pytest.mark.parametrize("readers", [1, 4])
+def test_striped_chain_restore_matrix(tmp_path, writers, volumes, readers):
+    """A keyframe + striped-delta chain replays bit-exact through both
+    the sequential and parallel fill paths, for every save fan-out."""
+    spec = _spec(tmp_path, writers, volumes)
+    state = _state()
+    with CheckpointEngine(spec) as eng:
+        for step in range(4):                      # K D D D
+            _touch(state, step)
+            stats = eng.save(state, step).wait()
+        assert stats.delta is not None and stats.delta_striped is True
+        assert stats.delta["striped"] is True
+        assert stats.n_writers > 1
+        if volumes > 1:
+            # the acceptance bar: a striped generation holds ≥2 shard
+            # files, spread over ≥2 volumes
+            files = _gen_shard_files(spec, 3)
+            assert len(files) >= 2
+            m = layout.read_commit_marker(os.path.join(
+                spec.directory, layout.step_dir_name(3)))
+            assert len({s.get("volume", 0) for s in m["shards"]}) >= 2
+        kw = {} if readers == 1 else {"parallel": readers}
+        got, _ = eng.load(step=3, like=state, **kw)
+        _assert_equal(got, _replay(0, 4))
+    # elastic reader: fresh engine, different topology, no volume config
+    with CheckpointEngine(_spec(tmp_path, 3, 1)) as reader:
+        kw = {} if readers == 1 else {"parallel": readers}
+        got, _ = reader.load(step=3, like=state, **kw)
+        _assert_equal(got, _replay(0, 4))
+
+
+def test_striped_delta_declares_v3_with_v2_shard_entries(tmp_path):
+    """COMMIT of a striped delta: layout v3 (delta) with the SAME
+    per-volume shard (size, crc32) entries a v2 keyframe carries, and a
+    per-shard span table."""
+    spec = _spec(tmp_path, 4, 2)
+    state = _state()
+    with CheckpointEngine(spec) as eng:
+        for step in range(2):
+            _touch(state, step)
+            eng.save(state, step).wait()
+    m = layout.read_commit_marker(os.path.join(
+        spec.directory, layout.step_dir_name(1)))
+    assert m["layout_version"] == layout.DELTA_LAYOUT_VERSION
+    assert m["delta"]["striped"] is True
+    for s in m["shards"]:
+        assert {"size", "crc32"} <= set(s)
+    # every span row carries its [shard, shard_offset] destination
+    for row in m["delta"]["spans"]:
+        assert len(row) >= 9 and row[-1] >= 0
+
+
+# ======================================================= crash injection
+def test_crash_between_striped_publish_and_commit(tmp_path, monkeypatch):
+    """Writer dies between the per-volume publish and the global COMMIT
+    of a striped delta: latest_step stays at the base, the next save is
+    clean, and the startup sweep leaves no orphans."""
+    spec = _spec(tmp_path, 4, 2)
+    state = _state()
+    eng = CheckpointEngine(spec)
+    for step in range(2):
+        _touch(state, step)
+        eng.save(state, step).wait()
+
+    import repro.core.engine as engine_mod
+    real = faults.crash_before_commit(monkeypatch)
+    _touch(state, 2)
+    with pytest.raises(RuntimeError, match="injected"):
+        eng.save(state, 2).wait()
+    monkeypatch.setattr(engine_mod.layout, "write_commit_marker", real)
+    assert eng.latest_step() == 1
+    got, _ = eng.load(like=state)
+    _assert_equal(got, _replay(0, 2))      # the uncommitted touch is gone
+    # the next save of the same step is clean (chain state reset)
+    _touch(state, 2)
+    ref = {k: v.copy() for k, v in state.items()}
+    eng.save(state, 2).wait()
+    got, _ = eng.load(step=2, like=state)
+    _assert_equal(got, ref)
+    eng.close()
+    with CheckpointEngine(spec) as eng2:            # startup sweep
+        assert eng2.latest_step() == 2
+        _assert_no_orphans(spec.directory, spec.volumes)
+
+
+def test_crash_reconstructed_striped_delta_is_invisible(tmp_path):
+    """SIGKILL reconstruction at the worst instant: the striped delta's
+    volume generations are published and the primary staging is sealed,
+    but the rename never happened. The step is invisible, the chain
+    below it loads, and the sweep clears every volume."""
+    spec = _spec(tmp_path, 4, 2)
+    state = _state()
+    with CheckpointEngine(spec) as eng:
+        for step in range(3):                       # K D D
+            _touch(state, step)
+            eng.save(state, step).wait()
+    final = os.path.join(spec.directory, layout.step_dir_name(2))
+    staging = os.path.join(spec.directory, layout.staging_dir_name(2))
+    os.remove(os.path.join(final, layout.COMMIT_FILE))
+    os.replace(final, staging)
+    nosweep = _spec(tmp_path, 4, 2, clean_stale_staging=False)
+    with CheckpointEngine(nosweep) as eng:
+        assert eng.latest_step() == 1
+        got, _ = eng.load(like=state)
+        _assert_equal(got, _replay(0, 2))
+    with CheckpointEngine(spec) as eng:             # startup sweep
+        assert eng.latest_step() == 1
+        assert not os.path.exists(staging)
+        for v in spec.volumes:
+            assert layout.shard_dirs_for_step(v, 2) == []
+        _assert_no_orphans(spec.directory, spec.volumes)
+
+
+def test_crash_mid_striped_payload_on_one_volume(tmp_path):
+    """Writer dies mid-delta-payload on ONE volume: a truncated shard in
+    an unreferenced generation plus staging debris. Startup sweeps it
+    all; the committed chain is untouched and the step re-saves clean."""
+    spec = _spec(tmp_path, 4, 2)
+    state = _state()
+    with CheckpointEngine(spec) as eng:
+        for step in range(2):                       # K D
+            _touch(state, step)
+            eng.save(state, step).wait()
+    # death instant for step 2: primary staging sealed, vol0 fully
+    # published, vol1's payload torn mid-write (staging, half a shard)
+    debris = [
+        (os.path.join(spec.directory, layout.staging_dir_name(2)),
+         b"sealed but never renamed"),
+        (os.path.join(spec.volumes[0], layout.shard_dir_name(2, "dead")),
+         b"published full payload"),
+        (os.path.join(spec.volumes[1],
+                      layout.shard_staging_dir_name(2, "dead")),
+         b"torn"),
+    ]
+    for d, payload in debris:
+        os.makedirs(d)
+        with open(os.path.join(d, "shard_000.bin"), "wb") as f:
+            f.write(payload)
+    with CheckpointEngine(spec) as eng:
+        assert eng.latest_step() == 1
+        got, _ = eng.load(like=state)
+        _assert_equal(got, _replay(0, 2))
+        for d, _ in debris:
+            assert not os.path.exists(d), d
+        _assert_no_orphans(spec.directory, spec.volumes)
+        _touch(state, 2)
+        ref = {k: v.copy() for k, v in state.items()}
+        eng.save(state, 2).wait()
+        got, _ = eng.load(step=2, like=state)
+        _assert_equal(got, ref)
+        _assert_no_orphans(spec.directory, spec.volumes)
+
+
+def test_striped_delta_resave_over_trash(tmp_path):
+    """Re-save of a striped delta step killed at the trash-swap instant:
+    old primary parked at .trash, a second generation on every volume,
+    new staging sealed. Startup recovers the old step and sweeps the
+    rest of the chainless generation."""
+    spec = _spec(tmp_path, 4, 2)
+    state = _state()
+    with CheckpointEngine(spec) as eng:
+        for step in range(2):                       # K D
+            _touch(state, step)
+            eng.save(state, step).wait()
+    final = os.path.join(spec.directory, layout.step_dir_name(1))
+    for v in spec.volumes:
+        gen_a = layout.shard_dirs_for_step(v, 1)[0]
+        shutil.copytree(gen_a, os.path.join(v,
+                                            layout.shard_dir_name(1, "ffff")))
+    shutil.copytree(final, os.path.join(spec.directory,
+                                        layout.staging_dir_name(1)))
+    os.replace(final, final + ".trash")
+    with CheckpointEngine(spec) as eng:
+        assert eng.latest_step() == 1
+        got, _ = eng.load(step=1, like=state)
+        _assert_equal(got, _replay(0, 2))
+        _assert_no_orphans(spec.directory, spec.volumes)
+    for v in spec.volumes:
+        assert len(layout.shard_dirs_for_step(v, 1)) == 1
+
+
+# ======================================================= tiered restores
+def test_striped_chain_peer_restore_after_wipe(tmp_path):
+    """load(tier="peer") of a STRIPED delta chain after the writer node
+    loses its local tier entirely — per-volume payload shards included."""
+    from repro.core.peer import PeerConfig
+    stores = [faults.FlakyStore(str(tmp_path / f"peer{i}"))
+              for i in range(2)]
+    cfgs = [PeerConfig(name=f"n{i}", store=s, failure_domain=f"rack{i}")
+            for i, s in enumerate(stores)]
+    spec = _spec(tmp_path, 4, 2, peers=cfgs, replication_factor=2,
+                 failure_domain="rack-writer")
+    state = _state()
+    with CheckpointEngine(spec) as eng:
+        for step in range(3):                       # K D D
+            _touch(state, step)
+            st = eng.save(state, step).wait()
+        assert st.delta_striped is True
+        eng.wait_replicated()
+    for root in [spec.directory, *spec.volumes]:
+        for name in os.listdir(root):
+            shutil.rmtree(os.path.join(root, name), ignore_errors=True)
+    with CheckpointEngine(spec) as eng:
+        assert eng.latest_step() is None
+        got, _ = eng.load(tier="peer", like=state)
+        _assert_equal(got, _replay(0, 3))
+        assert eng.latest_step() == 2               # re-committed locally
+        got, _ = eng.load(step=2, like=state)       # now fully local
+        _assert_equal(got, _replay(0, 3))
+
+
+def test_striped_chain_remote_hydration_after_wipe(tmp_path):
+    """Wipe-local hydration of a striped chain from the object tier:
+    every generation recommits locally with its nonce intact, and the
+    chain replays bit-exact both hydrated and re-read locally."""
+    bucket = str(tmp_path / "bucket")
+    spec = _spec(tmp_path, 4, 2, backend="fastpersist-tiered",
+                 upload_store=bucket)
+    state = _state()
+    with CheckpointEngine(spec) as eng:
+        for step in range(3):                       # K D D
+            _touch(state, step)
+            st = eng.save(state, step).wait()
+        assert st.delta_striped is True
+        eng.wait_uploaded()
+    for root in [spec.directory, *spec.volumes]:
+        for name in os.listdir(root):
+            shutil.rmtree(os.path.join(root, name), ignore_errors=True)
+    with CheckpointEngine(spec) as eng:
+        got, _ = eng.load(step=2, like=state, tier="remote")
+        _assert_equal(got, _replay(0, 3))
+        for s in range(3):
+            d = os.path.join(spec.directory, layout.step_dir_name(s))
+            assert layout.read_commit_marker(d) is not None
+            assert layout.generation_of(d)
+        got, _ = eng.load(step=2, like=state)       # now fully local
+        _assert_equal(got, _replay(0, 3))
+
+
+# ======================================================== cutoff boundary
+def _mb_state():
+    # one 2 MiB record: dirty prefixes give exact packed payload sizes
+    return {"w": np.zeros((1 << 21) // 4, np.float32)}
+
+
+def test_stripe_cutoff_boundary(tmp_path):
+    """The binary §13 rule at its boundary: a packed payload of EXACTLY
+    delta_stripe_min_mb stripes across the full fan-out; one dirty block
+    less single-streams into the primary. SaveStats records the choice
+    either way."""
+    cutoff = 1 << 20
+    fp = FastPersistConfig(strategy="replica",
+                           topology=Topology(dp_degree=4),
+                           keyframe_every=4, delta_stripe_min_mb=1)
+
+    # at the cutoff: packed == 1 MiB → striped
+    spec = _spec(tmp_path / "at", 4, 2, fp=fp)
+    state = _mb_state()
+    with CheckpointEngine(spec) as eng:
+        eng.save(state, 0).wait()
+        state["w"][:cutoff // 4] += 1.0             # exactly 1 MiB dirty
+        st = eng.save(state, 1).wait()
+        assert st.delta is not None and st.delta_striped is True
+        assert st.n_writers == 4
+        assert len(_gen_shard_files(spec, 1)) >= 2
+        got, _ = eng.load(step=1, like=state)
+        assert np.array_equal(np.asarray(got["w"]), state["w"])
+
+    # one block below: packed == 1 MiB - DIRTY_BLOCK → single-stream
+    spec = _spec(tmp_path / "below", 4, 2, fp=fp)
+    state = _mb_state()
+    with CheckpointEngine(spec) as eng:
+        eng.save(state, 0).wait()
+        state["w"][:(cutoff - DIRTY_BLOCK) // 4] += 1.0
+        st = eng.save(state, 1).wait()
+        assert st.delta is not None and st.delta_striped is False
+        assert st.n_writers == 1
+        m = layout.read_commit_marker(os.path.join(
+            spec.directory, layout.step_dir_name(1)))
+        assert m["delta"]["striped"] is False
+        assert {s.get("volume", 0) for s in m["shards"]} == {0}
+        got, _ = eng.load(step=1, like=state)
+        assert np.array_equal(np.asarray(got["w"]), state["w"])
